@@ -1,0 +1,121 @@
+//! End-to-end driver: exercises ALL layers of the stack on a real small
+//! workload —
+//!
+//!   L1/L2 artifacts (Pallas DDT kernel + PPO update graph, AOT HLO)
+//!     → loaded by the rust PJRT runtime,
+//!   L3 trainer: PPO episodes over the streaming simulator, updating the
+//!     policy through the `ppo_update_thermos` artifact,
+//!   then an evaluation streaming run comparing the trained single
+//!   multi-preference policy against the Simba/Big-Little baselines and
+//!   reporting the paper's headline metrics (throughput, execution time,
+//!   energy, EDP).
+//!
+//! Requires `make artifacts` first. Run:
+//!   cargo run --release --example end_to_end [episodes] [rate]
+
+use thermos::experiments::{self, SchedKind};
+use thermos::noi::NoiTopology;
+use thermos::rl::trainer::{TrainConfig, Trainer};
+use thermos::runtime::Runtime;
+use thermos::sched::policy::ddt_theta_len;
+use thermos::sched::state::{NUM_CLUSTERS, STATE_DIM};
+use thermos::sim::SimConfig;
+use thermos::util::stats::ema;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let episodes: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2.0);
+
+    // ---- 1. open the AOT artifacts through PJRT --------------------------
+    let mut runtime = Runtime::open_default()?;
+    println!(
+        "runtime: platform={} artifacts={} (abi v. state_dim={} θ={} φ={})",
+        runtime.platform(),
+        runtime.abi.artifacts.len(),
+        runtime.abi.state_dim,
+        runtime.abi.theta_len,
+        runtime.abi.phi_len
+    );
+
+    // ---- 2. train the MORL policy (3 preference envs / episode) ---------
+    let cfg = TrainConfig {
+        noi: NoiTopology::Mesh,
+        episodes,
+        jobs_per_episode: 40,
+        max_images: 2_000,
+        episode_max_s: 240.0,
+        seed: 42,
+        ..TrainConfig::default()
+    };
+    println!("\ntraining: {episodes} episodes × 3 preference environments …");
+    let mut trainer = Trainer::new(cfg);
+    let t0 = std::time::Instant::now();
+    let params = trainer.train(&mut runtime)?;
+    println!(
+        "trained {} env steps in {:.1} s ({} policy updates)",
+        trainer.total_env_steps,
+        t0.elapsed().as_secs_f64(),
+        trainer.log.len()
+    );
+    let losses: Vec<f64> = trainer.log.iter().map(|e| e.value_loss as f64).collect();
+    if losses.len() >= 4 {
+        let sm = ema(&losses, 0.8);
+        println!(
+            "value loss: first {:.4} → last {:.4} (smoothed, Fig. 6 criterion: plateau)",
+            sm[0],
+            sm[sm.len() - 1]
+        );
+    }
+
+    // ---- 3. evaluation: trained THERMOS vs baselines ---------------------
+    let theta = params[..ddt_theta_len(STATE_DIM, NUM_CLUSTERS)].to_vec();
+    let eval_cfg = SimConfig {
+        admit_rate: rate,
+        warmup_s: 20.0,
+        duration_s: 120.0,
+        max_images: 2_000,
+        mix_jobs: 200,
+        seed: 99,
+        ..SimConfig::default()
+    };
+    let contenders = vec![
+        SchedKind::Simba,
+        SchedKind::BigLittle,
+        SchedKind::Thermos { theta: theta.clone(), pref: [1.0, 0.0], label: "exec_time" },
+        SchedKind::Thermos { theta: theta.clone(), pref: [0.5, 0.5], label: "balanced" },
+        SchedKind::Thermos { theta, pref: [0.0, 1.0], label: "energy" },
+    ];
+    println!("\nevaluation @ {rate} DNN/s admit rate (mesh NoI):");
+    let mut table = thermos::experiments::report::Table::new(&[
+        "scheduler", "throughput", "exec_s", "energy_j", "edp",
+    ]);
+    let mut base_exec = 0.0;
+    let mut best_exec = f64::MAX;
+    for kind in &contenders {
+        let r = experiments::run_averaged(NoiTopology::Mesh, kind, &eval_cfg, &[99, 123]);
+        if kind.label() == "simba" {
+            base_exec = r.mean_exec_s;
+        }
+        if kind.label().starts_with("thermos") {
+            best_exec = best_exec.min(r.mean_exec_s);
+        }
+        table.row(vec![
+            r.scheduler.clone(),
+            format!("{:.3}", r.throughput_jobs_s),
+            format!("{:.3}", r.mean_exec_s),
+            format!("{:.4}", r.mean_energy_j),
+            format!("{:.4}", r.mean_edp),
+        ]);
+    }
+    println!("{}", table.render());
+    if base_exec > 0.0 && best_exec < f64::MAX {
+        println!(
+            "headline: THERMOS best-pref execution time {:.1}% vs Simba ({})",
+            (base_exec - best_exec) / best_exec * 100.0,
+            if best_exec <= base_exec { "faster ✓" } else { "slower — train longer" },
+        );
+    }
+    println!("\nend_to_end OK");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Multi-NoI comparison (the §5.4 scenario): run the same streaming
+//! workload over Mesh, Kite, Floret, and HexaMesh interposer networks and
+//! compare topology quality and end-to-end metrics.
+//!
+//! Run: `cargo run --release --example multi_noi [rate]`
+
+use thermos::arch::Arch;
+use thermos::experiments::report::Table;
+use thermos::experiments::{self, SchedKind};
+use thermos::noi::NoiTopology;
+use thermos::sim::SimConfig;
+
+fn main() {
+    let rate: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2.0);
+
+    println!("NoI topology properties (78-chiplet system):\n");
+    let mut tprops = Table::new(&["noi", "links", "mean_hops", "diameter"]);
+    for noi in NoiTopology::all() {
+        let arch = Arch::paper_heterogeneous(noi);
+        tprops.row(vec![
+            noi.name().to_string(),
+            arch.topology.num_links.to_string(),
+            format!("{:.2}", arch.topology.mean_hops()),
+            arch.topology.diameter().to_string(),
+        ]);
+    }
+    println!("{}", tprops.render());
+
+    let cfg = SimConfig {
+        admit_rate: rate,
+        warmup_s: 20.0,
+        duration_s: 100.0,
+        max_images: 2_000,
+        mix_jobs: 150,
+        seed: 5,
+        ..SimConfig::default()
+    };
+    println!("streaming comparison @ {rate} DNN/s (Simba nearest-neighbour scheduler):\n");
+    let mut t = Table::new(&["noi", "throughput", "exec_s", "e2e_s", "energy_j", "max_temp_k"]);
+    for noi in NoiTopology::all() {
+        let r = experiments::run_one(noi, &SchedKind::Simba, cfg.clone());
+        t.row(vec![
+            noi.name().to_string(),
+            format!("{:.3}", r.throughput_jobs_s),
+            format!("{:.3}", r.mean_exec_s),
+            format!("{:.3}", r.mean_e2e_s),
+            format!("{:.4}", r.mean_energy_j),
+            format!("{:.1}", r.max_temp_k),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("multi_noi OK");
+}

@@ -1,0 +1,98 @@
+//! Quickstart: build the paper's 78-chiplet heterogeneous PIM system,
+//! schedule a ResNet-50 with the two-level THERMOS scheduler, and inspect
+//! the resulting mapping and execution profile.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use thermos::arch::Arch;
+use thermos::noi::NoiTopology;
+use thermos::pim::ComputeModel;
+use thermos::sched::policy::NativeDdt;
+use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::thermos::{ThermosSched, PREF_BALANCED, PREF_ENERGY, PREF_EXEC_TIME};
+use thermos::sched::{Scheduler, SysSnapshot};
+use thermos::sim::ExecProfile;
+use thermos::util::rng::Rng;
+use thermos::workload::{DnnModel, Job, ModelZoo};
+
+fn main() {
+    // 1. The Table 3 system on a mesh NoI.
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    println!(
+        "system: {} chiplets, {:.1} MB crossbar memory, {:.0} mm², {} NoI links",
+        arch.num_chiplets(),
+        arch.total_memory_bits() as f64 / 8e6,
+        arch.total_area_mm2(),
+        arch.topology.num_links
+    );
+
+    // 2. A workload: ResNet-50 over 5 000 images.
+    let zoo = ModelZoo::new();
+    let job = Job { id: 0, dcg: zoo.dcg(DnnModel::ResNet50), images: 5_000, arrival_s: 0.0 };
+    println!(
+        "workload: {} — {} layers, {:.1}M params, {:.2}G MACs/image",
+        job.dcg.model.name(),
+        job.dcg.num_layers(),
+        job.dcg.total_weight_bits() as f64 / 8e6,
+        job.dcg.total_macs() as f64 / 1e9
+    );
+
+    // 3. THERMOS two-level scheduling with the balanced preference.
+    //    (Use `results/thermos_mesh.params` after `thermos train` for the
+    //    trained policy; the quickstart uses a fresh DDT.)
+    let theta = match thermos::runtime::params_io::load("results/thermos_mesh.params") {
+        Ok(p) => {
+            println!("policy: trained (results/thermos_mesh.params)");
+            p[..thermos::sched::policy::ddt_theta_len(STATE_DIM, NUM_CLUSTERS)].to_vec()
+        }
+        Err(_) => {
+            println!("policy: untrained DDT (run `thermos train` for the trained one)");
+            NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut Rng::new(1)).theta
+        }
+    };
+    let pref = match std::env::args().nth(1).as_deref() {
+        Some("exec") => PREF_EXEC_TIME,
+        Some("energy") => PREF_ENERGY,
+        _ => PREF_BALANCED,
+    };
+    println!("preference ω = [{}, {}]", pref[0], pref[1]);
+    let encoder = StateEncoder::new(&arch, &zoo, 20_000);
+    let policy = NativeDdt::new(STATE_DIM, NUM_CLUSTERS, theta);
+    let mut sched = ThermosSched::new(arch.clone(), encoder, policy, pref);
+
+    let snap = SysSnapshot::fresh(&arch);
+    let mapping = sched.schedule(&job, &snap).expect("fits in the empty system");
+
+    // 4. Inspect the mapping: which clusters got which layers.
+    let mut per_cluster = [0u64; 4];
+    for la in &mapping.layers {
+        for &(c, bits) in &la.parts {
+            per_cluster[arch.chiplets[c].pim as usize] += bits;
+        }
+    }
+    println!("\nweight placement by PIM cluster:");
+    for (cl, &bits) in per_cluster.iter().enumerate() {
+        println!(
+            "  {:<12} {:>8.2} MB ({:>4.1}% of model)",
+            arch.specs[cl].pim.name(),
+            bits as f64 / 8e6,
+            100.0 * bits as f64 / job.dcg.total_weight_bits() as f64
+        );
+    }
+
+    // 5. The deterministic execution profile (primary-reward basis).
+    let profile = ExecProfile::compute(&arch, &ComputeModel::default(), &job.dcg, &mapping);
+    println!("\nexecution profile:");
+    println!("  pipeline fill latency : {:>9.3} ms/frame", profile.frame_latency_s * 1e3);
+    println!("  bottleneck stage      : {:>9.3} ms/frame", profile.bottleneck_s * 1e3);
+    println!("  steady throughput     : {:>9.1} frames/s", 1.0 / profile.bottleneck_s);
+    println!("  dynamic energy        : {:>9.3} mJ/frame", profile.frame_energy_j * 1e3);
+    println!("  weight-load time      : {:>9.3} s", profile.load_time_s);
+    println!(
+        "  {} images → exec {:.2} s, energy {:.2} J",
+        job.images,
+        profile.ideal_exec_s(job.images),
+        profile.ideal_dynamic_j(job.images)
+    );
+    println!("\nquickstart OK");
+}

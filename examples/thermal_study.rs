@@ -1,0 +1,59 @@
+//! Thermal study: stream a hot workload mix, trace per-cluster peak
+//! temperatures, and show Eq. 2 throttling protecting the ReRAM clusters
+//! (330 K) while SRAM clusters ride to their higher 358 K limit.
+//!
+//! Run: `cargo run --release --example thermal_study [rate]`
+
+use thermos::arch::Arch;
+use thermos::noi::NoiTopology;
+use thermos::sched::SimbaSched;
+use thermos::sim::{SimConfig, Simulator};
+
+fn main() {
+    let rate: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+
+    for constrained in [true, false] {
+        let cfg = SimConfig {
+            admit_rate: rate,
+            warmup_s: 0.0,
+            duration_s: 120.0,
+            max_images: 3_000,
+            mix_jobs: 200,
+            seed: 3,
+            thermal_constraint: constrained,
+            record_trace: true,
+            ..SimConfig::default()
+        };
+        let sched = SimbaSched::new(arch.clone());
+        let (r, _) = Simulator::new(&arch, sched, cfg).run();
+        println!(
+            "\n=== thermal constraint {} ===",
+            if constrained { "ENABLED (Eq. 2 throttling)" } else { "DISABLED" }
+        );
+        println!(
+            "max temp {:.1} K | violation {:.1} chiplet·s | throttle events {} | throughput {:.2} DNN/s",
+            r.max_temp_k, r.violation_chiplet_s, r.throttle_events, r.throughput_jobs_s
+        );
+        // ASCII temperature trace: peak ReRAM-cluster temp over time.
+        println!("peak standard-ReRAM cluster temperature (· = 1 s, limit 330 K):");
+        let tmax = 330.0;
+        for chunk in r.trace.chunks(100) {
+            // 100 × 0.1 s = 10 s per row
+            let peak = chunk
+                .iter()
+                .map(|p| p.cluster_max_temp_k[0])
+                .fold(f64::MIN, f64::max);
+            let bar_len = ((peak - 300.0) / 1.0).clamp(0.0, 60.0) as usize;
+            let marker = if peak > tmax { " ⚠ OVER" } else { "" };
+            println!(
+                "  t={:>5.0}s {:>6.1} K |{}{}",
+                chunk[0].t_s,
+                peak,
+                "#".repeat(bar_len),
+                marker
+            );
+        }
+    }
+    println!("\nthermal_study OK");
+}

@@ -1,0 +1,194 @@
+"""AOT exporter: lower every jax graph to HLO TEXT artifacts + abi.json.
+
+Run once at build time (``make artifacts``); the rust runtime
+(rust/src/runtime) loads the text through
+``HloModuleProto::from_text_file`` and executes via the PJRT CPU client.
+
+HLO *text* is the interchange format, NOT serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """Every artifact: name -> (fn, example args, io description)."""
+    B = M.UPDATE_BATCH
+    P_T = M.THETA_LEN + M.PHI_LEN
+    P_R = M.RELMAS_THETA_LEN + M.RELMAS_PHI_LEN
+
+    def tup(fn):
+        # Multi-output graphs already return tuples; single outputs are
+        # wrapped so every artifact uniformly returns a tuple.
+        def wrapped(*a):
+            out = fn(*a)
+            return out if isinstance(out, tuple) else (out,)
+
+        return wrapped
+
+    arts = {
+        # Hot-path policy inference (B=1) — the Pallas DDT kernel.
+        "ddt_policy": (
+            tup(M.policy_logits_pallas),
+            [spec(M.THETA_LEN), spec(1, M.STATE_DIM)],
+            {"inputs": ["theta", "x[1,22]"], "outputs": ["logits[1,4]"]},
+        ),
+        # Batched policy forward (training-time evaluation + tests).
+        "ddt_policy_b256": (
+            tup(M.policy_logits_pallas),
+            [spec(M.THETA_LEN), spec(B, M.STATE_DIM)],
+            {"inputs": ["theta", f"x[{B},22]"], "outputs": [f"logits[{B},4]"]},
+        ),
+        # Vector critic (GAE values) — Pallas MLP kernel.
+        "critic_b256": (
+            tup(M.critic_values_pallas),
+            [spec(M.PHI_LEN), spec(B, M.STATE_DIM)],
+            {"inputs": ["phi", f"x[{B},22]"], "outputs": [f"v[{B},2]"]},
+        ),
+        # Fused PPO + Adam update for the THERMOS actor-critic.
+        "ppo_update_thermos": (
+            M.ppo_update_thermos,
+            [
+                spec(P_T),  # params [theta|phi]
+                spec(P_T),  # adam m
+                spec(P_T),  # adam v
+                spec(1),  # t
+                spec(B, M.STATE_DIM),
+                spec(B, M.NUM_CLUSTERS),  # a_onehot
+                spec(B, M.NUM_CLUSTERS),  # mask
+                spec(B),  # logp_old
+                spec(B),  # adv (omega-scalarized)
+                spec(B, 2),  # vector returns
+            ],
+            {
+                "inputs": [
+                    "params", "m", "v", "t", "x", "a_onehot", "mask",
+                    "logp_old", "adv", "ret",
+                ],
+                "outputs": ["params", "m", "v", "t", "policy_loss", "value_loss", "entropy"],
+            },
+        ),
+        # RELMAS baseline: flat actor inference + its update graph.
+        "relmas_policy": (
+            tup(M.relmas_logits_pallas),
+            [spec(M.RELMAS_THETA_LEN), spec(1, M.RELMAS_OBS)],
+            {"inputs": ["thetaR", "x[1,168]"], "outputs": ["logits[1,78]"]},
+        ),
+        "relmas_critic_b256": (
+            tup(M.relmas_values_pallas),
+            [spec(M.RELMAS_PHI_LEN), spec(B, M.RELMAS_OBS)],
+            {"inputs": ["phiR", f"x[{B},168]"], "outputs": [f"v[{B},1]"]},
+        ),
+        "ppo_update_relmas": (
+            M.ppo_update_relmas,
+            [
+                spec(P_R),
+                spec(P_R),
+                spec(P_R),
+                spec(1),
+                spec(B, M.RELMAS_OBS),
+                spec(B, M.NUM_CHIPLETS),
+                spec(B, M.NUM_CHIPLETS),
+                spec(B),
+                spec(B),
+                spec(B, 1),
+            ],
+            {
+                "inputs": [
+                    "params", "m", "v", "t", "x", "a_onehot", "mask",
+                    "logp_old", "adv", "ret",
+                ],
+                "outputs": ["params", "m", "v", "t", "policy_loss", "value_loss", "entropy"],
+            },
+        ),
+    }
+    return arts
+
+
+def abi() -> dict:
+    """Dimension/layout contract consumed by rust/src/runtime/abi.rs."""
+    return {
+        "version": 1,
+        "state_dim": M.STATE_DIM,
+        "num_clusters": M.NUM_CLUSTERS,
+        "ddt_depth": 5,
+        "ddt_internal": 31,
+        "ddt_leaves": 32,
+        "theta_len": M.THETA_LEN,
+        "phi_len": M.PHI_LEN,
+        "critic_dims": list(M.CRITIC_DIMS),
+        "update_batch": M.UPDATE_BATCH,
+        "num_chiplets": M.NUM_CHIPLETS,
+        "relmas_obs": M.RELMAS_OBS,
+        "relmas_actor_dims": list(M.RELMAS_ACTOR_DIMS),
+        "relmas_critic_dims": list(M.RELMAS_CRITIC_DIMS),
+        "relmas_theta_len": M.RELMAS_THETA_LEN,
+        "relmas_phi_len": M.RELMAS_PHI_LEN,
+        "lr": M.LR,
+        "clip_eps": M.CLIP_EPS,
+        "value_coef": M.VALUE_COEF,
+        "entropy_coef": M.ENTROPY_COEF,
+        "mask_neg": M.MASK_NEG,
+        "theta_layout": "w[31*22] | b[31] | beta[31] | leaves[32*4] (row-major f32)",
+        "mlp_layout": "per layer: W[out*in] row-major | b[out]",
+        "params_layout": "[theta | phi]",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = artifact_specs()
+    selected = set(args.only.split(",")) if args.only else set(arts)
+    manifest = {"abi": abi(), "artifacts": {}}
+    for name, (fn, specs, io) in arts.items():
+        if name not in selected:
+            continue
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "bytes": len(text),
+            **io,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "abi.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'abi.json')}")
+
+
+if __name__ == "__main__":
+    main()

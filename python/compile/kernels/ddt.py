@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: soft differentiable-decision-tree forward pass.
+
+This is the compute hot-spot of the THERMOS request path: every Level-1
+scheduling decision evaluates the DDT policy (paper 4.3.1, Fig. 3a).
+The whole forward — node linear projections, sigmoid routing, static
+path-product over the 32 leaves, and the leaf-logit mixture — runs as one
+fused Pallas kernel so parameters and activations make a single trip
+through VMEM (DESIGN.md 8: ~3.5 KB of parameters + B x 22 activations per
+tile; no HBM round-trips between stages).
+
+Hardware adaptation: the paper benchmarks its policy on a Jetson; on TPU
+the natural mapping is one VMEM-resident tile per batch block with the
+(B,22)x(22,31) projection feeding the MXU. ``interpret=True`` everywhere —
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret-mode
+lowering emits plain HLO that the rust runtime executes byte-for-byte like
+any other fusion.
+
+Parameter layout matches ``rust/src/sched/policy.rs::NativeDdt`` and is
+pinned in ``artifacts/abi.json``:
+    [w: 31x22 | b: 31 | beta: 31 | leaves: 32x4]  (row-major, f32)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEPTH = 5
+INTERNAL = (1 << DEPTH) - 1  # 31
+LEAVES = 1 << DEPTH  # 32
+
+
+def theta_len(state_dim: int, num_actions: int) -> int:
+    """Flat parameter length (must equal rust's ddt_theta_len)."""
+    return INTERNAL * (state_dim + 2) + LEAVES * num_actions
+
+
+def unpack(theta, state_dim: int, num_actions: int):
+    """Split a flat theta into (w, b, beta, leaves)."""
+    wlen = INTERNAL * state_dim
+    w = theta[:wlen].reshape(INTERNAL, state_dim)
+    b = theta[wlen : wlen + INTERNAL]
+    beta = theta[wlen + INTERNAL : wlen + 2 * INTERNAL]
+    leaves = theta[wlen + 2 * INTERNAL :].reshape(LEAVES, num_actions)
+    return w, b, beta, leaves
+
+
+def _ddt_kernel(x_ref, w_ref, b_ref, beta_ref, leaves_ref, o_ref):
+    """One batch tile: (B_t, D) -> (B_t, A) leaf-mixture logits."""
+    x = x_ref[...]  # (B_t, D)
+    w = w_ref[...]  # (INTERNAL, D)
+    b = b_ref[...]  # (INTERNAL,)
+    beta = beta_ref[...]
+    leaves = leaves_ref[...]  # (LEAVES, A)
+
+    # Node activations sigma(beta (w.x + b)): one (B,D)x(D,31) matmul —
+    # the MXU-bound op of the kernel.
+    z = jax.nn.sigmoid(beta[None, :] * (jnp.dot(x, w.T) + b[None, :]))
+
+    # Static heap-indexed path products (children of j are 2j+1 / 2j+2).
+    # The tree is tiny and fixed-depth, so the product tree is unrolled at
+    # trace time: probs[k] has shape (B_t,).
+    probs = [None] * (2 * INTERNAL + 1)
+    probs[0] = jnp.ones(x.shape[0], dtype=x.dtype)
+    for j in range(INTERNAL):
+        probs[2 * j + 1] = probs[j] * z[:, j]
+        probs[2 * j + 2] = probs[j] * (1.0 - z[:, j])
+    leaf_probs = jnp.stack(probs[INTERNAL:], axis=1)  # (B_t, LEAVES)
+
+    # Mixture of leaf logit rows.
+    o_ref[...] = jnp.dot(leaf_probs, leaves)
+
+
+@functools.partial(jax.jit, static_argnames=("state_dim", "num_actions", "block_b"))
+def ddt_forward(theta, x, *, state_dim: int, num_actions: int, block_b: int = 128):
+    """Pallas DDT forward: theta[theta_len], x[B, state_dim] -> [B, actions].
+
+    The batch is tiled into ``block_b``-row VMEM blocks; parameters are
+    broadcast to every grid step (index_map pins them to block 0).
+    """
+    w, b, beta, leaves = unpack(theta, state_dim, num_actions)
+    bsz = x.shape[0]
+    if bsz <= block_b:
+        # Single tile: no grid.
+        return pl.pallas_call(
+            _ddt_kernel,
+            out_shape=jax.ShapeDtypeStruct((bsz, num_actions), x.dtype),
+            interpret=True,
+        )(x, w, b, beta, leaves)
+    assert bsz % block_b == 0, f"batch {bsz} must be a multiple of {block_b}"
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _ddt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, state_dim), lambda i: (i, 0)),
+            pl.BlockSpec((INTERNAL, state_dim), lambda i: (0, 0)),
+            pl.BlockSpec((INTERNAL,), lambda i: (0,)),
+            pl.BlockSpec((INTERNAL,), lambda i: (0,)),
+            pl.BlockSpec((LEAVES, num_actions), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, num_actions), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, num_actions), x.dtype),
+        interpret=True,
+    )(x, w, b, beta, leaves)

@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: fused ReLU-MLP forward.
+
+Used for the vector-valued critic V_phi(s, omega) (22->64->64->64->2) and
+the RELMAS baseline's flat actor/critic. All layers execute inside one
+kernel so the (tiny) weight set stays VMEM-resident across layers instead
+of bouncing to HBM between matmuls; batch tiled like the DDT kernel.
+
+Parameter layout matches ``rust/src/sched/policy.rs::NativeMlp``:
+per layer ``W (out x in, row-major) | b (out)``, concatenated; pinned in
+``artifacts/abi.json``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def param_len(dims) -> int:
+    return sum(i * o + o for i, o in zip(dims[:-1], dims[1:]))
+
+
+def unpack(params, dims):
+    """Split flat params into [(W, b), ...]."""
+    out = []
+    off = 0
+    for fin, fout in zip(dims[:-1], dims[1:]):
+        w = params[off : off + fin * fout].reshape(fout, fin)
+        off += fin * fout
+        b = params[off : off + fout]
+        off += fout
+        out.append((w, b))
+    return out
+
+
+def _make_kernel(num_layers):
+    def kernel(x_ref, *refs):
+        o_ref = refs[-1]
+        act = x_ref[...]
+        for li in range(num_layers):
+            w = refs[2 * li][...]
+            b = refs[2 * li + 1][...]
+            act = jnp.dot(act, w.T) + b[None, :]
+            if li < num_layers - 1:
+                act = jnp.maximum(act, 0.0)
+        o_ref[...] = act
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "block_b"))
+def mlp_forward(params, x, *, dims, block_b: int = 128):
+    """Pallas MLP forward: params[param_len(dims)], x[B, dims[0]] -> [B, dims[-1]]."""
+    dims = tuple(dims)
+    layers = unpack(params, dims)
+    flat = []
+    for w, b in layers:
+        flat.extend((w, b))
+    kernel = _make_kernel(len(layers))
+    bsz = x.shape[0]
+    out_dim = dims[-1]
+    if bsz <= block_b:
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((bsz, out_dim), x.dtype),
+            interpret=True,
+        )(x, *flat)
+    assert bsz % block_b == 0, f"batch {bsz} must be a multiple of {block_b}"
+    in_specs = [pl.BlockSpec((block_b, dims[0]), lambda i: (i, 0))]
+    for w, b in layers:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // block_b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, out_dim), x.dtype),
+        interpret=True,
+    )(x, *flat)

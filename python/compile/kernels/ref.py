@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness anchor.
+
+``ddt_forward_ref`` / ``mlp_forward_ref`` implement the identical math
+with plain jax.numpy. pytest (python/tests) asserts allclose between the
+Pallas kernels and these references across shape/dtype sweeps (hypothesis),
+and the rust integration tests assert the native rust evaluators match the
+AOT artifacts built from the kernels — closing the loop
+ref == pallas == artifact == native-rust.
+
+These reference functions are also what the PPO update graph
+(compile/model.py) differentiates through: Pallas interpret-mode kernels
+do not define VJPs, and the update graph is a build-time artifact where
+XLA fuses the jnp ops anyway (DESIGN.md 8, L2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import ddt as ddt_mod
+
+
+def ddt_forward_ref(theta, x, *, state_dim: int, num_actions: int):
+    """Soft decision tree forward, vectorized jnp. x: (B, D) -> (B, A)."""
+    w, b, beta, leaves = ddt_mod.unpack(theta, state_dim, num_actions)
+    z = jax.nn.sigmoid(beta[None, :] * (x @ w.T + b[None, :]))  # (B, 31)
+    probs = [None] * (2 * ddt_mod.INTERNAL + 1)
+    probs[0] = jnp.ones(x.shape[0], dtype=x.dtype)
+    for j in range(ddt_mod.INTERNAL):
+        probs[2 * j + 1] = probs[j] * z[:, j]
+        probs[2 * j + 2] = probs[j] * (1.0 - z[:, j])
+    leaf_probs = jnp.stack(probs[ddt_mod.INTERNAL :], axis=1)  # (B, 32)
+    return leaf_probs @ leaves
+
+
+def mlp_forward_ref(params, x, *, dims):
+    """ReLU MLP forward, plain jnp. x: (B, dims[0]) -> (B, dims[-1])."""
+    from . import mlp as mlp_mod
+
+    act = x
+    layers = mlp_mod.unpack(params, tuple(dims))
+    for li, (w, b) in enumerate(layers):
+        act = act @ w.T + b[None, :]
+        if li < len(layers) - 1:
+            act = jnp.maximum(act, 0.0)
+    return act

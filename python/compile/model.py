@@ -1,0 +1,187 @@
+"""Layer-2: the MORL actor-critic and the vectorized PPO update (4.3).
+
+Everything here is build-time jax that gets lowered once to HLO text by
+``aot.py``; the rust coordinator then drives the artifacts through PJRT.
+
+* Actor pi_theta(a|s, omega): soft DDT (kernels/ddt.py at inference;
+  the differentiable jnp reference inside the update graph).
+* Critic V_phi(s, omega): vector-valued MLP (one value per objective) —
+  Eq. 3's vectorized advantage needs a (B, 2) value head.
+* Update: PPO clip loss on the omega-scalarized advantage (Eq. 4), MSE
+  vector critic loss (Eq. 5), entropy bonus, invalid-action masking
+  (-1e7 pre-softmax, 4.2.2), and Adam — one fused jitted step over a
+  fixed-size minibatch so the whole optimizer is a single artifact.
+
+Parameter vectors are FLAT f32 arrays whose layout matches the rust
+native evaluators; Adam state is a flat pair (m, v) over the
+concatenation [theta | phi]. Hyperparameters (Table 4): lr 5e-4,
+clip 0.1, gamma 0.95 — gamma lives in the rust GAE, not here.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ddt as ddt_mod
+from .kernels import mlp as mlp_mod
+from .kernels.ref import ddt_forward_ref, mlp_forward_ref
+
+# ---- dimensions (single source of truth; exported into abi.json) -------
+STATE_DIM = 22
+NUM_CLUSTERS = 4
+CRITIC_DIMS = (STATE_DIM, 64, 64, 64, 2)
+THETA_LEN = ddt_mod.theta_len(STATE_DIM, NUM_CLUSTERS)  # 872
+PHI_LEN = mlp_mod.param_len(CRITIC_DIMS)  # 9922
+UPDATE_BATCH = 256
+
+# RELMAS baseline (flat chiplet-level policy) for the 78-chiplet system.
+NUM_CHIPLETS = 78
+RELMAS_OBS = 2 * NUM_CHIPLETS + 12  # 168
+RELMAS_ACTOR_DIMS = (RELMAS_OBS, 128, 128, NUM_CHIPLETS)
+RELMAS_CRITIC_DIMS = (RELMAS_OBS, 128, 128, 1)
+RELMAS_THETA_LEN = mlp_mod.param_len(RELMAS_ACTOR_DIMS)
+RELMAS_PHI_LEN = mlp_mod.param_len(RELMAS_CRITIC_DIMS)
+
+# PPO hyperparameters (Table 4 + standard PPO auxiliaries).
+LR = 5.0e-4
+CLIP_EPS = 0.1
+VALUE_COEF = 0.5
+ENTROPY_COEF = 0.01
+MASK_NEG = -1.0e7
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1.0e-8
+
+
+# ---- inference graphs (these call the L1 Pallas kernels) ----------------
+
+def policy_logits_pallas(theta, x):
+    """DDT actor forward via the Pallas kernel. x: (B, 22) -> (B, 4)."""
+    return ddt_mod.ddt_forward(
+        theta, x, state_dim=STATE_DIM, num_actions=NUM_CLUSTERS
+    )
+
+
+def critic_values_pallas(phi, x):
+    """Vector critic forward via the Pallas MLP kernel: (B, 22) -> (B, 2)."""
+    return mlp_mod.mlp_forward(phi, x, dims=CRITIC_DIMS)
+
+
+def relmas_logits_pallas(theta, x):
+    """RELMAS flat actor: (B, 168) -> (B, 78)."""
+    return mlp_mod.mlp_forward(theta, x, dims=RELMAS_ACTOR_DIMS)
+
+
+def relmas_values_pallas(phi, x):
+    return mlp_mod.mlp_forward(phi, x, dims=RELMAS_CRITIC_DIMS)
+
+
+# ---- shared PPO machinery ------------------------------------------------
+
+def masked_log_softmax(logits, mask):
+    """Invalid-action masking (4.2.2): -1e7 added pre-softmax."""
+    masked = logits + (1.0 - mask) * MASK_NEG
+    return jax.nn.log_softmax(masked, axis=-1)
+
+
+def _adam(params, grads, m, v, t):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = m / (1.0 - ADAM_B1**t)
+    vhat = v / (1.0 - ADAM_B2**t)
+    params = params - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return params, m, v
+
+
+def _ppo_losses(logits, mask, a_onehot, logp_old, adv, values, ret):
+    """Clip loss (Eq. 4) on scalarized advantage + vector MSE (Eq. 5)."""
+    logp_all = masked_log_softmax(logits, mask)
+    logp = jnp.sum(logp_all * a_onehot, axis=-1)
+    ratio = jnp.exp(logp - logp_old)
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS)
+    policy_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    # Entropy over the *valid* actions only.
+    probs = jnp.exp(logp_all)
+    entropy = -jnp.mean(jnp.sum(probs * logp_all * mask, axis=-1))
+    value_loss = jnp.mean(jnp.sum((values - ret) ** 2, axis=-1))
+    return policy_loss, value_loss, entropy
+
+
+def make_ppo_update(actor_fwd, critic_fwd, theta_len, phi_len):
+    """Build a fused PPO+Adam step over flat [theta | phi] parameters.
+
+    Returns fn(params, m, v, t, x, a_onehot, mask, logp_old, adv, ret) ->
+    (params', m', v', t', policy_loss, value_loss, entropy).
+    `adv` is the omega-scalarized advantage (omega^T A, Eq. 4) computed by
+    the rust GAE; `ret` is the vector TD(lambda) return target (Eq. 5).
+    The preference omega rides inside the state x (4.2.1), so a single
+    update graph trains the single preference-conditioned policy.
+    """
+    del phi_len  # implied by params length; kept for call-site clarity
+
+    def loss_fn(params, x, a_onehot, mask, logp_old, adv, ret):
+        theta = params[:theta_len]
+        phi = params[theta_len:]
+        logits = actor_fwd(theta, x)
+        values = critic_fwd(phi, x)
+        pl_, vl, ent = _ppo_losses(logits, mask, a_onehot, logp_old, adv, values, ret)
+        total = pl_ + VALUE_COEF * vl - ENTROPY_COEF * ent
+        return total, (pl_, vl, ent)
+
+    def update(params, m, v, t, x, a_onehot, mask, logp_old, adv, ret):
+        grad_fn = jax.grad(loss_fn, has_aux=True)
+        grads, (pl_, vl, ent) = grad_fn(params, x, a_onehot, mask, logp_old, adv, ret)
+        t = t + 1.0
+        params, m, v = _adam(params, grads, m, v, t[0])
+        return params, m, v, t, pl_, vl, ent
+
+    return update
+
+
+# ---- the two concrete update graphs -------------------------------------
+
+def thermos_actor_fwd(theta, x):
+    return ddt_forward_ref(theta, x, state_dim=STATE_DIM, num_actions=NUM_CLUSTERS)
+
+
+def thermos_critic_fwd(phi, x):
+    return mlp_forward_ref(phi, x, dims=CRITIC_DIMS)
+
+
+def relmas_actor_fwd(theta, x):
+    return mlp_forward_ref(theta, x, dims=RELMAS_ACTOR_DIMS)
+
+
+def relmas_critic_fwd(phi, x):
+    return mlp_forward_ref(phi, x, dims=RELMAS_CRITIC_DIMS)
+
+
+ppo_update_thermos = make_ppo_update(
+    thermos_actor_fwd, thermos_critic_fwd, THETA_LEN, PHI_LEN
+)
+ppo_update_relmas = make_ppo_update(
+    relmas_actor_fwd, relmas_critic_fwd, RELMAS_THETA_LEN, RELMAS_PHI_LEN
+)
+
+
+# ---- reference init (mirrors rust NativeDdt::init / NativeMlp::init) ----
+
+def init_ddt(key):
+    """Xavier-ish DDT init: w ~ N(0, 1/D), b = 0, beta = 1, leaves ~ 0.1 N."""
+    kw, kl = jax.random.split(key)
+    wlen = ddt_mod.INTERNAL * STATE_DIM
+    w = jax.random.normal(kw, (wlen,)) / jnp.sqrt(STATE_DIM)
+    b = jnp.zeros(ddt_mod.INTERNAL)
+    beta = jnp.ones(ddt_mod.INTERNAL)
+    leaves = 0.1 * jax.random.normal(kl, (ddt_mod.LEAVES * NUM_CLUSTERS,))
+    return jnp.concatenate([w, b, beta, leaves]).astype(jnp.float32)
+
+
+def init_mlp(key, dims):
+    """He init, zero biases, flat layout."""
+    parts = []
+    for fin, fout in zip(dims[:-1], dims[1:]):
+        key, kw = jax.random.split(key)
+        w = jax.random.normal(kw, (fout * fin,)) * jnp.sqrt(2.0 / fin)
+        parts.append(w)
+        parts.append(jnp.zeros(fout))
+    return jnp.concatenate(parts).astype(jnp.float32)

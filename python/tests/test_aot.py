@@ -1,0 +1,83 @@
+"""AOT exporter checks: every artifact lowers to parseable HLO text and
+the abi manifest stays consistent with the model constants."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class TestAbi:
+    def test_abi_dims_consistent(self):
+        abi = aot.abi()
+        assert abi["theta_len"] == 31 * (22 + 2) + 32 * 4 == 872
+        assert abi["phi_len"] == M.PHI_LEN
+        assert abi["relmas_obs"] == 2 * abi["num_chiplets"] + 12
+        assert abi["update_batch"] % 128 == 0, "batch must tile the kernels"
+        assert abi["lr"] == pytest.approx(5e-4)
+        assert abi["clip_eps"] == pytest.approx(0.1)
+
+    def test_abi_is_json_serializable(self):
+        text = json.dumps(aot.abi())
+        back = json.loads(text)
+        assert back["state_dim"] == 22
+
+
+class TestLowering:
+    def test_policy_artifact_lowers_to_hlo_text(self):
+        arts = aot.artifact_specs()
+        fn, specs, io = arts["ddt_policy"]
+        text = aot.to_hlo_text(fn, *specs)
+        # HLO text structure: a module with an ENTRY computation.
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        assert "f32[872]" in text, "theta input shape present"
+        assert io["outputs"] == ["logits[1,4]"]
+
+    def test_update_artifact_has_all_io(self):
+        arts = aot.artifact_specs()
+        fn, specs, io = arts["ppo_update_thermos"]
+        assert len(specs) == 10
+        assert len(io["inputs"]) == 10
+        assert len(io["outputs"]) == 7
+        text = aot.to_hlo_text(fn, *specs)
+        p = M.THETA_LEN + M.PHI_LEN
+        assert f"f32[{p}]" in text
+
+    def test_every_artifact_lowers(self):
+        # Smoke-lower each (cheap: lowering only, no compile/execute).
+        for name, (fn, specs, _) in aot.artifact_specs().items():
+            text = aot.to_hlo_text(fn, *specs)
+            assert text.startswith("HloModule"), name
+            assert len(text) > 500, f"{name} suspiciously small"
+
+
+class TestUpdateGraphSemantics:
+    def test_update_is_pure_function_of_inputs(self):
+        # Same inputs -> identical outputs (no hidden state; required for
+        # the AOT contract with the rust driver).
+        key = jax.random.PRNGKey(0)
+        theta = M.init_ddt(key)
+        phi = M.init_mlp(jax.random.PRNGKey(1), M.CRITIC_DIMS)
+        params = jnp.concatenate([theta, phi])
+        P = params.shape[0]
+        B = M.UPDATE_BATCH
+        x = jax.random.normal(jax.random.PRNGKey(2), (B, M.STATE_DIM), dtype=jnp.float32)
+        a = jax.nn.one_hot(jnp.zeros(B, dtype=jnp.int32), 4, dtype=jnp.float32)
+        mask = jnp.ones((B, 4), dtype=jnp.float32)
+        logp = jnp.full((B,), -1.0, dtype=jnp.float32)
+        adv = jnp.ones(B, dtype=jnp.float32)
+        ret = jnp.zeros((B, 2), dtype=jnp.float32)
+        args = (params, jnp.zeros(P), jnp.zeros(P), jnp.zeros(1), x, a, mask, logp, adv, ret)
+        out1 = M.ppo_update_thermos(*args)
+        out2 = M.ppo_update_thermos(*args)
+        for o1, o2 in zip(out1, out2):
+            assert jnp.array_equal(o1, o2)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,114 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps batch sizes and input magnitudes; assert_allclose against
+ref.py is THE core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ddt as ddt_mod
+from compile.kernels import mlp as mlp_mod
+from compile.kernels.ref import ddt_forward_ref, mlp_forward_ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+class TestDdtKernel:
+    @SET
+    @given(
+        batch=st.sampled_from([1, 2, 3, 7, 16, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.1, 1.0, 5.0]),
+    )
+    def test_matches_ref_across_shapes(self, batch, seed, scale):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        theta = M.init_ddt(k1)
+        x = rand(k2, (batch, M.STATE_DIM), scale)
+        got = M.policy_logits_pallas(theta, x)
+        want = ddt_forward_ref(theta, x, state_dim=M.STATE_DIM, num_actions=M.NUM_CLUSTERS)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_grid_tiled_batch_matches_ref(self):
+        # B=256 exercises the multi-tile BlockSpec path (block_b=128).
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        theta = M.init_ddt(k1)
+        x = rand(k2, (256, M.STATE_DIM))
+        got = M.policy_logits_pallas(theta, x)
+        want = ddt_forward_ref(theta, x, state_dim=M.STATE_DIM, num_actions=M.NUM_CLUSTERS)
+        assert got.shape == (256, M.NUM_CLUSTERS)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_theta_len_matches_abi(self):
+        assert ddt_mod.theta_len(M.STATE_DIM, M.NUM_CLUSTERS) == 872
+        assert M.THETA_LEN == 872
+
+    def test_path_probabilities_sum_to_one(self):
+        # Uniform leaves of 1.0 => output exactly 1 for every action.
+        theta = M.init_ddt(jax.random.PRNGKey(0))
+        wlen = ddt_mod.INTERNAL * M.STATE_DIM
+        theta = theta.at[wlen + 2 * ddt_mod.INTERNAL :].set(1.0)
+        x = rand(jax.random.PRNGKey(1), (16, M.STATE_DIM), 2.0)
+        out = M.policy_logits_pallas(theta, x)
+        np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+    def test_output_within_leaf_hull(self):
+        # Convex mixture: outputs bounded by per-action leaf min/max.
+        theta = M.init_ddt(jax.random.PRNGKey(7))
+        _, _, _, leaves = ddt_mod.unpack(theta, M.STATE_DIM, M.NUM_CLUSTERS)
+        x = rand(jax.random.PRNGKey(8), (32, M.STATE_DIM))
+        out = np.asarray(M.policy_logits_pallas(theta, x))
+        lo = np.asarray(leaves).min(axis=0) - 1e-5
+        hi = np.asarray(leaves).max(axis=0) + 1e-5
+        assert (out >= lo).all() and (out <= hi).all()
+
+
+class TestMlpKernel:
+    @SET
+    @given(
+        batch=st.sampled_from([1, 5, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        dims=st.sampled_from([(22, 64, 64, 64, 2), (10, 16, 3), (168, 128, 128, 78)]),
+    )
+    def test_matches_ref_across_dims(self, batch, seed, dims):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        params = M.init_mlp(k1, dims)
+        x = rand(k2, (batch, dims[0]))
+        got = mlp_mod.mlp_forward(params, x, dims=dims)
+        want = mlp_forward_ref(params, x, dims=dims)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    def test_grid_tiled_batch(self):
+        dims = M.CRITIC_DIMS
+        params = M.init_mlp(jax.random.PRNGKey(0), dims)
+        x = rand(jax.random.PRNGKey(1), (256, dims[0]))
+        got = mlp_mod.mlp_forward(params, x, dims=dims)
+        want = mlp_forward_ref(params, x, dims=dims)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    def test_param_len(self):
+        assert mlp_mod.param_len(M.CRITIC_DIMS) == 9922
+        assert mlp_mod.param_len(M.RELMAS_ACTOR_DIMS) == M.RELMAS_THETA_LEN
+
+    def test_relu_clamps_hidden(self):
+        # All-negative first-layer weights + all-positive input => hidden 0
+        # => output equals final bias (0).
+        dims = (4, 8, 2)
+        n = mlp_mod.param_len(dims)
+        params = jnp.zeros(n)
+        params = params.at[: 4 * 8].set(-1.0)
+        x = jnp.ones((3, 4), dtype=jnp.float32)
+        out = mlp_mod.mlp_forward(params, x, dims=dims)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

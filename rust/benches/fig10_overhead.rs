@@ -1,0 +1,97 @@
+//! Fig. 10: THERMOS scheduling overhead (% of runtime and % of energy)
+//! as the per-job image count grows — 1 000 … 500 000 images. The
+//! per-call cost is fixed, so the relative overhead must fall sharply
+//! (paper: < 1.5% even at 1 000 images, imperceptible beyond).
+//!
+//! Run: `cargo bench --bench fig10_overhead`
+
+use thermos::arch::Arch;
+use thermos::experiments::report::Table;
+use thermos::noi::NoiTopology;
+use thermos::pim::ComputeModel;
+use thermos::sched::policy::{NativeDdt, PolicyEval};
+use thermos::sched::proximity::assign_in_cluster;
+use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::SysSnapshot;
+use thermos::sim::{ExecProfile, LayerAssignment, Mapping};
+use thermos::util::bench::{black_box, Group};
+use thermos::util::rng::Rng;
+use thermos::workload::{DnnModel, Job, ModelZoo};
+
+const P_PROXY_W: f64 = 12.0; // CPU power proxy (see table6_overhead.rs)
+
+fn main() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(&arch, &zoo, 500_000);
+    let snap = SysSnapshot::fresh(&arch);
+    let mut rng = Rng::new(2);
+    let mut ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+    let job = Job { id: 0, dcg: zoo.dcg(DnnModel::ResNet50), images: 10_000, arrival_s: 0.0 };
+    let state = encoder.encode(&arch, &snap, &job, 5, 50_000, &[(0, 1000)], [0.5, 0.5]);
+
+    // Measure the per-decision cost once.
+    let mut g = Group::new("Fig. 10: overhead scaling with image count");
+    let pol = g.bench("policy_call", || ddt.logits(black_box(&state))).clone();
+    let prev: Vec<(usize, u64)> = vec![(0, 500_000)];
+    let free_template = snap.free_bits.clone();
+    let prox = g
+        .bench("proximity_call", || {
+            let mut free = free_template.clone();
+            assign_in_cluster(&arch, &snap, &mut free, 1, black_box(2_000_000), &prev)
+        })
+        .clone();
+    let per_decision_s = (pol.mean_ns + prox.mean_ns) * 1e-9;
+    let decisions = job.dcg.num_layers() as f64;
+    let sched_s = per_decision_s * decisions;
+    let sched_j = sched_s * P_PROXY_W;
+
+    // Reference execution profile (shared-ADC mapping, as in Table 6).
+    let ids = &arch.clusters[1];
+    let cap = arch.specs[1].mem_bits;
+    let mut freec: Vec<u64> = vec![cap; ids.len()];
+    let mut layers = Vec::new();
+    let mut k = 0usize;
+    for l in &job.dcg.layers {
+        let mut need = l.weight_bits;
+        let mut parts = Vec::new();
+        while need > 0 {
+            let idx = k % ids.len();
+            if freec[idx] == 0 {
+                k += 1;
+                continue;
+            }
+            let take = need.min(freec[idx]);
+            parts.push((ids[idx], take));
+            freec[idx] -= take;
+            need -= take;
+        }
+        layers.push(LayerAssignment { parts });
+    }
+    let mapping = Mapping { layers };
+    let profile = ExecProfile::compute(&arch, &ComputeModel::default(), &job.dcg, &mapping);
+
+    let mut t = Table::new(&["images", "exec_s", "sched_overhead_pct", "energy_overhead_pct"]);
+    println!();
+    for images in [1_000u64, 5_000, 10_000, 50_000, 100_000, 500_000] {
+        let exec_s = profile.ideal_exec_s(images);
+        let exec_j = profile.ideal_dynamic_j(images);
+        let time_pct = sched_s / exec_s * 100.0;
+        let energy_pct = sched_j / exec_j * 100.0;
+        println!(
+            "  {:>7} images: exec {:>8.2} s | time overhead {:>8.5}% | energy overhead {:>8.5}%",
+            images, exec_s, time_pct, energy_pct
+        );
+        t.row(vec![
+            images.to_string(),
+            format!("{:.3}", exec_s),
+            format!("{:.6}", time_pct),
+            format!("{:.6}", energy_pct),
+        ]);
+    }
+    println!("\n(paper Fig. 10: <1.5% time and <0.25% energy at 1 000 images, falling fast)");
+    match t.write_csv("fig10_overhead") {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -1,0 +1,94 @@
+//! Fig. 1b: radar comparison of homogeneous vs heterogeneous PIM systems
+//! at equal processing area — execution time, energy, memory density, and
+//! thermal sensitivity. Each homogeneous system replaces the paper's
+//! four-cluster mix with one PIM type sized to the same total area; the
+//! heterogeneous system should dominate the aggregate trade-off.
+//!
+//! Run: `cargo bench --bench fig1b_radar`
+
+use thermos::arch::{Arch, PimType};
+use thermos::experiments::report::Table;
+use thermos::experiments::{fast_mode, run_one, SchedKind};
+use thermos::noi::NoiTopology;
+use thermos::sim::SimConfig;
+
+fn main() {
+    let rate = 1.5;
+    let cfg = SimConfig {
+        admit_rate: rate,
+        warmup_s: if fast_mode() { 10.0 } else { 30.0 },
+        duration_s: if fast_mode() { 60.0 } else { 180.0 },
+        max_images: 2_000,
+        mix_jobs: 200,
+        seed: 17,
+        ..SimConfig::default()
+    };
+
+    println!("== Fig. 1b: homogeneous vs heterogeneous at equal area (@{rate} DNN/s) ==\n");
+    let mut t = Table::new(&[
+        "system", "chiplets", "mem_MB", "exec_s", "energy_j", "mem_density_MB_mm2",
+        "violation_chiplet_s", "max_temp_k", "throughput",
+    ]);
+
+    // Homogeneous systems of each PIM type + the heterogeneous system.
+    let mut systems: Vec<(String, Arch)> = PimType::all()
+        .into_iter()
+        .map(|p| {
+            (
+                format!("homogeneous_{}", p.name()),
+                Arch::homogeneous_equal_area(NoiTopology::Mesh, p),
+            )
+        })
+        .collect();
+    systems.push(("heterogeneous".into(), Arch::paper_heterogeneous(NoiTopology::Mesh)));
+
+    for (name, arch) in &systems {
+        // Simba scheduling is type-blind, making it a fair common policy.
+        let sched = thermos::sched::SimbaSched::new(arch.clone());
+        let (r, _) = thermos::sim::Simulator::new(arch, sched, cfg.clone()).run();
+        let mem_mb = arch.total_memory_bits() as f64 / 8e6;
+        let density = mem_mb / arch.total_area_mm2();
+        if r.jobs.is_empty() {
+            // e.g. the all-ADC-less system cannot even hold AlexNet's
+            // weights — the radar's "memory density" axis at its extreme.
+            println!(
+                "{:<28} cannot sustain the mix (total weight memory {:.1} MB too small)",
+                name, mem_mb
+            );
+            t.row(vec![
+                name.clone(),
+                arch.num_chiplets().to_string(),
+                format!("{:.1}", mem_mb),
+                "inf".into(),
+                "inf".into(),
+                format!("{:.3}", density),
+                format!("{:.2}", r.violation_chiplet_s),
+                format!("{:.1}", r.max_temp_k),
+                "0".into(),
+            ]);
+            continue;
+        }
+        println!(
+            "{:<28} exec {:>7.3} s  energy {:>8.4} J  density {:>5.2} MB/mm²  viol {:>7.1} c·s  maxT {:>5.1} K",
+            name, r.mean_exec_s, r.mean_energy_j, density, r.violation_chiplet_s, r.max_temp_k
+        );
+        t.row(vec![
+            name.clone(),
+            arch.num_chiplets().to_string(),
+            format!("{:.1}", mem_mb),
+            format!("{:.4}", r.mean_exec_s),
+            format!("{:.5}", r.mean_energy_j),
+            format!("{:.3}", density),
+            format!("{:.2}", r.violation_chiplet_s),
+            format!("{:.1}", r.max_temp_k),
+            format!("{:.3}", r.throughput_jobs_s),
+        ]);
+    }
+    println!("\n(radar shape: standard=fast/hot, adc-less=efficient/small-memory,");
+    println!(" accumulator=dense, shared-adc=balanced; heterogeneous=best overall)");
+    match t.write_csv("fig1b_radar") {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    let _ = run_one(NoiTopology::Mesh, &SchedKind::Simba, cfg); // keep linkage honest
+}

@@ -1,0 +1,42 @@
+//! Fig. 7 (Mesh NoI): (a) achieved throughput vs host admit rate and
+//! (b) end-to-end latency vs achieved throughput, for the three baselines
+//! and the single THERMOS policy under its three runtime preferences.
+//!
+//! Run: `cargo bench --bench fig7_throughput`
+//! (THERMOS_EXP_FAST=1 for a CI-scale run.)
+
+use thermos::experiments::report::{result_cells, Table, RESULT_HEADERS};
+use thermos::experiments::{exp_config, exp_seeds, fast_mode, run_averaged, standard_contenders};
+use thermos::noi::NoiTopology;
+
+fn main() {
+    let noi = NoiTopology::Mesh;
+    let rates: Vec<f64> = if fast_mode() {
+        vec![1.0, 2.0, 4.0]
+    } else {
+        vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0, 6.0]
+    };
+    let seeds = exp_seeds();
+    let contenders = standard_contenders(noi);
+
+    println!("== Fig. 7: throughput vs admit rate, e2e latency vs throughput (mesh) ==");
+    let mut table = Table::new(&RESULT_HEADERS);
+    for kind in &contenders {
+        let mut saturated = 0.0f64;
+        for &rate in &rates {
+            let r = run_averaged(noi, kind, &exp_config(rate, 1), &seeds);
+            saturated = saturated.max(r.throughput_jobs_s);
+            table.row(result_cells(rate, &r));
+        }
+        println!(
+            "{:<22} max achieved throughput: {:.2} DNN/s",
+            kind.label(),
+            saturated
+        );
+    }
+    println!("\n{}", table.render());
+    match table.write_csv("fig7_throughput") {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

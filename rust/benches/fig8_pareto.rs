@@ -1,0 +1,75 @@
+//! Fig. 8 (Mesh NoI): Pareto plots of average execution time vs average
+//! energy per DNN under increasing throughput scenarios. The three
+//! connected THERMOS points come from a SINGLE policy evaluated with
+//! ω = [1,0], [0.5,0.5], [0,1]; baselines are single points.
+//!
+//! Also runs the finer ω grid (ablation: Pareto front of the single
+//! preference-conditioned policy, Fig. 2b).
+//!
+//! Run: `cargo bench --bench fig8_pareto`
+
+use thermos::experiments::report::Table;
+use thermos::experiments::{
+    exp_config, exp_seeds, fast_mode, load_thermos_theta, run_averaged, standard_contenders,
+    SchedKind,
+};
+use thermos::noi::NoiTopology;
+
+fn main() {
+    let noi = NoiTopology::Mesh;
+    let rates: Vec<f64> =
+        if fast_mode() { vec![1.5, 2.5] } else { vec![1.5, 2.0, 2.5, 3.0, 3.5, 4.0] };
+    let seeds = exp_seeds();
+
+    println!("== Fig. 8: Pareto exec-time vs energy per throughput scenario (mesh) ==");
+    let mut table = Table::new(&["throughput_scenario", "scheduler", "exec_s", "energy_j", "edp"]);
+    for &rate in &rates {
+        println!("\n-- scenario: {rate} DNN/s --");
+        for kind in standard_contenders(noi) {
+            let r = run_averaged(noi, &kind, &exp_config(rate, 1), &seeds);
+            println!(
+                "  {:<22} exec {:>8.3} s  energy {:>9.4} J  (achieved {:>5.2} DNN/s)",
+                r.scheduler, r.mean_exec_s, r.mean_energy_j, r.throughput_jobs_s
+            );
+            table.row(vec![
+                format!("{rate}"),
+                r.scheduler.clone(),
+                format!("{:.4}", r.mean_exec_s),
+                format!("{:.5}", r.mean_energy_j),
+                format!("{:.5}", r.mean_edp),
+            ]);
+        }
+    }
+
+    // ω-grid ablation: the single policy swept over five preferences.
+    println!("\n-- ω grid (single policy, 2 DNN/s): Pareto front --");
+    let (theta, trained) = load_thermos_theta(noi);
+    if !trained {
+        println!("   (untrained policy — run `thermos train` for the real front)");
+    }
+    for &(wl, label) in
+        &[(1.0, "1.00/0.00"), (0.75, "0.75/0.25"), (0.5, "0.50/0.50"), (0.25, "0.25/0.75"), (0.0, "0.00/1.00")]
+    {
+        let kind = SchedKind::Thermos {
+            theta: theta.clone(),
+            pref: [wl, 1.0 - wl],
+            label: "grid",
+        };
+        let r = run_averaged(noi, &kind, &exp_config(2.0, 1), &seeds);
+        println!(
+            "  ω = {label}   exec {:>8.3} s   energy {:>9.4} J",
+            r.mean_exec_s, r.mean_energy_j
+        );
+        table.row(vec![
+            "2.0-grid".into(),
+            format!("omega_{label}"),
+            format!("{:.4}", r.mean_exec_s),
+            format!("{:.5}", r.mean_energy_j),
+            format!("{:.5}", r.mean_edp),
+        ]);
+    }
+    match table.write_csv("fig8_pareto") {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig. 9: the Fig. 8 Pareto comparison repeated on the alternative NoI
+//! architectures — (a) Floret, (b) HexaMesh, (c) Kite — demonstrating
+//! that the single adaptive THERMOS policy generalizes across
+//! interconnects (§5.4).
+//!
+//! Run: `cargo bench --bench fig9_noi_pareto`
+
+use thermos::experiments::report::Table;
+use thermos::experiments::{exp_config, exp_seeds, fast_mode, run_averaged, standard_contenders};
+use thermos::noi::NoiTopology;
+
+fn main() {
+    let nois = [NoiTopology::Floret, NoiTopology::HexaMesh, NoiTopology::Kite];
+    let rates: Vec<f64> = if fast_mode() { vec![1.5, 2.5] } else { vec![1.5, 2.5, 3.5] };
+    let seeds = exp_seeds();
+
+    println!("== Fig. 9: Pareto comparison on Floret / HexaMesh / Kite ==");
+    let mut table =
+        Table::new(&["noi", "throughput_scenario", "scheduler", "exec_s", "energy_j", "edp"]);
+    for &noi in &nois {
+        println!("\n==== {} ====", noi.name());
+        for &rate in &rates {
+            println!("-- scenario {rate} DNN/s --");
+            for kind in standard_contenders(noi) {
+                let r = run_averaged(noi, &kind, &exp_config(rate, 1), &seeds);
+                println!(
+                    "  {:<22} exec {:>8.3} s  energy {:>9.4} J  (achieved {:>5.2} DNN/s)",
+                    r.scheduler, r.mean_exec_s, r.mean_energy_j, r.throughput_jobs_s
+                );
+                table.row(vec![
+                    noi.name().into(),
+                    format!("{rate}"),
+                    r.scheduler.clone(),
+                    format!("{:.4}", r.mean_exec_s),
+                    format!("{:.5}", r.mean_energy_j),
+                    format!("{:.5}", r.mean_edp),
+                ]);
+            }
+        }
+    }
+    match table.write_csv("fig9_noi_pareto") {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

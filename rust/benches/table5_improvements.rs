@@ -1,0 +1,73 @@
+//! Table 5: average percentage improvement of the single multi-objective
+//! THERMOS policy over Simba, Big-Little, and RELMAS across all four NoI
+//! architectures — % speedup (THERMOS.exe_time), % energy reduction
+//! (THERMOS.energy), % EDP improvement (THERMOS.balanced), averaged over
+//! throughput scenarios.
+//!
+//! Run: `cargo bench --bench table5_improvements`
+
+use thermos::experiments::report::{pct_improvement, Table};
+use thermos::experiments::{exp_config, exp_seeds, fast_mode, run_averaged, standard_contenders};
+use thermos::noi::NoiTopology;
+use thermos::util::stats::mean;
+
+fn main() {
+    let rates: Vec<f64> = if fast_mode() { vec![1.5, 2.5] } else { vec![1.5, 2.5, 3.5] };
+    let seeds = exp_seeds();
+
+    println!("== Table 5: average % improvement of THERMOS vs baselines ==");
+    let mut table = Table::new(&[
+        "noi",
+        "speedup_vs_simba", "speedup_vs_biglittle", "speedup_vs_relmas",
+        "energy_vs_simba", "energy_vs_biglittle", "energy_vs_relmas",
+        "edp_vs_simba", "edp_vs_biglittle", "edp_vs_relmas",
+    ]);
+
+    for noi in NoiTopology::all() {
+        // Collect per-rate metrics per scheduler.
+        let mut exec: std::collections::HashMap<String, Vec<f64>> = Default::default();
+        let mut energy: std::collections::HashMap<String, Vec<f64>> = Default::default();
+        let mut edp: std::collections::HashMap<String, Vec<f64>> = Default::default();
+        for &rate in &rates {
+            for kind in standard_contenders(noi) {
+                let r = run_averaged(noi, &kind, &exp_config(rate, 1), &seeds);
+                if r.jobs.is_empty() {
+                    continue; // scheduler saturated below this rate
+                }
+                exec.entry(r.scheduler.clone()).or_default().push(r.mean_exec_s);
+                energy.entry(r.scheduler.clone()).or_default().push(r.mean_energy_j);
+                edp.entry(r.scheduler.clone()).or_default().push(r.mean_edp);
+            }
+        }
+        let avg = |m: &std::collections::HashMap<String, Vec<f64>>, k: &str| -> f64 {
+            m.get(k).map(|v| mean(v)).unwrap_or(f64::NAN)
+        };
+        let pct = |m: &std::collections::HashMap<String, Vec<f64>>, ours: &str, base: &str| {
+            pct_improvement(avg(m, base), avg(m, ours))
+        };
+        let row = vec![
+            noi.name().to_string(),
+            format!("{:.1}", pct(&exec, "thermos.exec_time", "simba")),
+            format!("{:.1}", pct(&exec, "thermos.exec_time", "big_little")),
+            format!("{:.1}", pct(&exec, "thermos.exec_time", "relmas")),
+            format!("{:.1}", pct(&energy, "thermos.energy", "simba")),
+            format!("{:.1}", pct(&energy, "thermos.energy", "big_little")),
+            format!("{:.1}", pct(&energy, "thermos.energy", "relmas")),
+            format!("{:.1}", pct(&edp, "thermos.balanced", "simba")),
+            format!("{:.1}", pct(&edp, "thermos.balanced", "big_little")),
+            format!("{:.1}", pct(&edp, "thermos.balanced", "relmas")),
+        ];
+        println!(
+            "{}: speedup [{} {} {}]  energy [{} {} {}]  EDP [{} {} {}]",
+            row[0], row[1], row[2], row[3], row[4], row[5], row[6], row[7], row[8], row[9]
+        );
+        table.row(row);
+    }
+    println!("\n{}", table.render());
+    println!("(paper Table 5 shape: all entries positive; Big-Little column largest,");
+    println!(" Simba/RELMAS moderate; energy gains smaller than speedups.)");
+    match table.write_csv("table5_improvements") {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -1,0 +1,141 @@
+//! Table 6: THERMOS scheduling overhead — per-call execution time (and an
+//! energy proxy) of the RL policy, the proximity-driven algorithm, and
+//! the combined scheduler, plus the relative overhead per DNN with
+//! ~10 000 images. The paper measures a Jetson Xavier NX; we measure this
+//! machine's CPU and report both the native evaluator and the canonical
+//! PJRT-artifact path.
+//!
+//! Also reports the MFIT-substitute DSS step cost (§5.5's 15 µs/100 ms
+//! figure).
+//!
+//! Run: `cargo bench --bench table6_overhead`
+
+use thermos::arch::Arch;
+use thermos::experiments::report::Table;
+use thermos::noi::NoiTopology;
+use thermos::pim::ComputeModel;
+use thermos::sched::policy::{NativeDdt, PolicyEval};
+use thermos::sched::proximity::assign_in_cluster;
+use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::SysSnapshot;
+use thermos::sim::ExecProfile;
+use thermos::sim::{LayerAssignment, Mapping};
+use thermos::thermal::DssModel;
+use thermos::util::bench::{black_box, Group};
+use thermos::util::rng::Rng;
+use thermos::workload::{DnnModel, Job, ModelZoo};
+
+/// CPU power proxy for the energy column (W per active core) — documented
+/// in DESIGN.md §2 (platform substitution): energy/call = time × P_PROXY.
+const P_PROXY_W: f64 = 12.0;
+
+fn main() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(&arch, &zoo, 20_000);
+    let snap = SysSnapshot::fresh(&arch);
+    let mut rng = Rng::new(1);
+    let mut ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+    let job = Job { id: 0, dcg: zoo.dcg(DnnModel::ResNet50), images: 10_000, arrival_s: 0.0 };
+    let state = encoder.encode(&arch, &snap, &job, 10, 100_000, &[(0, 1000)], [0.5, 0.5]);
+
+    let mut g = Group::new("Table 6: scheduler overhead per call");
+
+    // -- RL policy (DDT forward), native evaluator.
+    let policy = g.bench("rl_policy_native_ddt", || ddt.logits(black_box(&state))).clone();
+    let policy_ns = policy.mean_ns;
+
+    // -- RL policy through the PJRT artifact (canonical runtime path).
+    let pjrt_ns = match thermos::runtime::Runtime::open_default() {
+        Ok(runtime) => {
+            let mut pol = thermos::runtime::PjrtPolicy::new(
+                runtime, "ddt_policy", STATE_DIM, NUM_CLUSTERS, ddt.theta.clone(),
+            )
+            .expect("compile ddt_policy");
+            let r = g.bench("rl_policy_pjrt_artifact", || pol.logits(black_box(&state)));
+            Some(r.mean_ns)
+        }
+        Err(e) => {
+            eprintln!("(pjrt path skipped: {e})");
+            None
+        }
+    };
+
+    // -- proximity-driven algorithm (one cluster assignment).
+    let prev: Vec<(usize, u64)> = vec![(0, 500_000), (5, 500_000)];
+    let free_template = snap.free_bits.clone();
+    let prox = g
+        .bench("proximity_driven_algorithm", || {
+            let mut free = free_template.clone();
+            assign_in_cluster(&arch, &snap, &mut free, 1, black_box(2_000_000), &prev)
+        })
+        .clone();
+    let prox_ns = prox.mean_ns;
+
+    // -- thermal DSS step (§5.5: paper reports ~15 µs per 100 ms interval).
+    let mut dss = DssModel::from_arch(&arch);
+    let powers = vec![0.2f64; arch.num_chiplets()];
+    let dss_r = g.bench("thermal_dss_step_100ms", || dss.step(black_box(&powers))).clone();
+
+    // -- combined per-decision cost and relative overheads.
+    let combined_ns = policy_ns + prox_ns;
+    // Reference DNN execution: ResNet-50, 10 000 images on the shared-ADC
+    // cluster (a representative mapping).
+    let ids = &arch.clusters[1];
+    let cap = arch.specs[1].mem_bits;
+    let mut freec: Vec<u64> = vec![cap; ids.len()];
+    let mut layers = Vec::new();
+    let mut k = 0usize;
+    for l in &job.dcg.layers {
+        let mut need = l.weight_bits;
+        let mut parts = Vec::new();
+        while need > 0 {
+            let idx = k % ids.len();
+            if freec[idx] == 0 {
+                k += 1;
+                continue;
+            }
+            let take = need.min(freec[idx]);
+            parts.push((ids[idx], take));
+            freec[idx] -= take;
+            need -= take;
+        }
+        layers.push(LayerAssignment { parts });
+    }
+    let profile =
+        ExecProfile::compute(&arch, &ComputeModel::default(), &job.dcg, &Mapping { layers });
+    let exec_s = profile.ideal_exec_s(job.images);
+    let decisions = job.dcg.num_layers() as f64; // ≥1 call per layer
+
+    let mut t = Table::new(&["component", "time_per_call", "energy_per_call", "pct_time_per_dnn_10k"]);
+    let rowf = |name: &str, ns: f64| {
+        vec![
+            name.to_string(),
+            format!("{:.2} us", ns / 1e3),
+            format!("{:.2} uJ", ns * 1e-9 * P_PROXY_W * 1e6),
+            format!("{:.4}%", ns * 1e-9 * decisions / exec_s * 100.0),
+        ]
+    };
+    t.row(rowf("rl_policy (native)", policy_ns));
+    if let Some(ns) = pjrt_ns {
+        t.row(rowf("rl_policy (pjrt)", ns));
+    }
+    t.row(rowf("proximity_algorithm", prox_ns));
+    t.row(rowf("thermos_combined", combined_ns));
+    t.row(vec![
+        "thermal_dss_step".into(),
+        format!("{:.2} us", dss_r.mean_ns / 1e3),
+        format!("{:.2} uJ", dss_r.mean_ns * 1e-9 * P_PROXY_W * 1e6),
+        format!("{:.4}%", dss_r.mean_ns * 1e-9 / 0.1 * 100.0), // per 100 ms
+    ]);
+    println!("\n{}", t.render());
+    println!(
+        "reference DNN: resnet50 × 10k images, exec {:.2} s, {} scheduling decisions",
+        exec_s, decisions as u64
+    );
+    println!("(paper Table 6: policy 0.6 µs, proximity 49.3 µs, combined 0.14% time/DNN)");
+    match t.write_csv("table6_overhead") {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -1,0 +1,186 @@
+//! Heterogeneous multi-chiplet PIM architecture model (paper §3.2,
+//! Definition 2: the Architecture Characterization Graph) and the Table 3
+//! chiplet catalogue.
+//!
+//! The ACG vertices are chiplets `(v_i, M_i^cap, M_i(t), T_i(t), T_i^max)`;
+//! the arcs are NoI links (built in [`crate::noi`]). Chiplets are logically
+//! grouped into clusters by PIM type; the level-1 MORL policy picks a
+//! cluster, the level-2 proximity algorithm picks chiplets inside it.
+
+pub mod pimtype;
+
+pub use pimtype::{PimSpec, PimType, NUM_PIM_TYPES};
+
+use crate::noi::{NoiTopology, Topology};
+
+/// Kilobit → bit helper (Table 3 lists memory per chiplet in Kb).
+pub const KB: u64 = 1024;
+
+/// A single chiplet die on the interposer.
+#[derive(Clone, Debug)]
+pub struct Chiplet {
+    pub id: usize,
+    pub pim: PimType,
+    /// Die centre on the interposer, millimetres (used by the floorplan,
+    /// the thermal model, and proximity distances).
+    pub pos: (f64, f64),
+    /// Die edge length in mm (dies are square: Table 3 areas are 4/9 mm²).
+    pub size_mm: f64,
+}
+
+/// Full system description: chiplets + clusters + interconnect.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub chiplets: Vec<Chiplet>,
+    pub specs: [PimSpec; NUM_PIM_TYPES],
+    /// Chiplet ids per PIM cluster, indexed by `PimType as usize`.
+    pub clusters: [Vec<usize>; NUM_PIM_TYPES],
+    pub topology: Topology,
+    /// Which NoI generated `topology` (for reports).
+    pub noi: NoiTopology,
+    /// Ambient temperature (K) — thermal boundary condition.
+    pub t_ambient: f64,
+}
+
+impl Arch {
+    /// Build the paper's evaluation system: 25 Standard + 28 Shared-ADC +
+    /// 10 Accumulator + 15 ADC-less chiplets (Table 3) interconnected by
+    /// the given NoI.
+    pub fn paper_heterogeneous(noi: NoiTopology) -> Arch {
+        Self::heterogeneous(noi, [25, 28, 10, 15])
+    }
+
+    /// Build a heterogeneous system with the given per-type chiplet counts.
+    pub fn heterogeneous(noi: NoiTopology, counts: [usize; NUM_PIM_TYPES]) -> Arch {
+        let specs = PimSpec::table3();
+        // Chiplet type sequence: clusters are contiguous so the floorplan
+        // groups each PIM type into a region (paper Fig. 1a shows four
+        // cluster regions).
+        let mut types = Vec::new();
+        for (ti, &n) in counts.iter().enumerate() {
+            types.extend(std::iter::repeat(PimType::from_index(ti)).take(n));
+        }
+        Self::from_types(noi, &types, specs)
+    }
+
+    /// Build a homogeneous system of a single PIM type with a total
+    /// processing area equal to the paper's heterogeneous system
+    /// (used by the Fig. 1b radar experiment).
+    pub fn homogeneous_equal_area(noi: NoiTopology, pim: PimType) -> Arch {
+        let specs = PimSpec::table3();
+        let hetero_area: f64 = [25.0 * 4.0, 28.0 * 9.0, 10.0 * 4.0, 15.0 * 4.0].iter().sum();
+        let n = (hetero_area / specs[pim as usize].area_mm2).round() as usize;
+        let types = vec![pim; n];
+        Self::from_types(noi, &types, specs)
+    }
+
+    fn from_types(noi: NoiTopology, types: &[PimType], specs: [PimSpec; NUM_PIM_TYPES]) -> Arch {
+        let n = types.len();
+        let topology = crate::noi::build(noi, n);
+        let mut chiplets = Vec::with_capacity(n);
+        let mut clusters: [Vec<usize>; NUM_PIM_TYPES] = Default::default();
+        for (id, &pim) in types.iter().enumerate() {
+            let pos = topology.positions[id];
+            chiplets.push(Chiplet {
+                id,
+                pim,
+                pos,
+                size_mm: specs[pim as usize].area_mm2.sqrt(),
+            });
+            clusters[pim as usize].push(id);
+        }
+        Arch { chiplets, specs, clusters, topology, noi, t_ambient: 300.0 }
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.chiplets.len()
+    }
+
+    pub fn spec(&self, id: usize) -> &PimSpec {
+        &self.specs[self.chiplets[id].pim as usize]
+    }
+
+    /// Total crossbar weight memory of the whole system, in bits.
+    pub fn total_memory_bits(&self) -> u64 {
+        self.chiplets.iter().map(|c| self.specs[c.pim as usize].mem_bits).sum()
+    }
+
+    /// Total crossbar memory of one cluster, in bits.
+    pub fn cluster_memory_bits(&self, pim: PimType) -> u64 {
+        self.clusters[pim as usize].len() as u64 * self.specs[pim as usize].mem_bits
+    }
+
+    /// Total processing area in mm².
+    pub fn total_area_mm2(&self) -> f64 {
+        self.chiplets.iter().map(|c| self.specs[c.pim as usize].area_mm2).sum()
+    }
+
+    /// Hop count between two chiplets over the NoI.
+    pub fn hops(&self, a: usize, b: usize) -> u32 {
+        self.topology.hops(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_system_has_78_chiplets() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        assert_eq!(arch.num_chiplets(), 78);
+        assert_eq!(arch.clusters[PimType::Standard as usize].len(), 25);
+        assert_eq!(arch.clusters[PimType::SharedAdc as usize].len(), 28);
+        assert_eq!(arch.clusters[PimType::Accumulator as usize].len(), 10);
+        assert_eq!(arch.clusters[PimType::AdcLess as usize].len(), 15);
+    }
+
+    #[test]
+    fn table3_memory_capacities() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        assert_eq!(arch.cluster_memory_bits(PimType::Standard), 25 * 9568 * KB);
+        assert_eq!(arch.cluster_memory_bits(PimType::SharedAdc), 28 * 9792 * KB);
+        assert_eq!(arch.cluster_memory_bits(PimType::Accumulator), 10 * 19200 * KB);
+        assert_eq!(arch.cluster_memory_bits(PimType::AdcLess), 15 * 2416 * KB);
+    }
+
+    #[test]
+    fn clusters_are_contiguous_and_partition() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let mut seen = vec![false; arch.num_chiplets()];
+        for cl in &arch.clusters {
+            for &id in cl {
+                assert!(!seen[id]);
+                seen[id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn homogeneous_equal_area_matches_area() {
+        let hetero = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        for t in PimType::all() {
+            let homo = Arch::homogeneous_equal_area(NoiTopology::Mesh, t);
+            let ratio = homo.total_area_mm2() / hetero.total_area_mm2();
+            assert!((0.9..1.1).contains(&ratio), "area ratio {ratio} for {t:?}");
+            assert!(homo.clusters[t as usize].len() == homo.num_chiplets());
+        }
+    }
+
+    #[test]
+    fn positions_are_distinct() {
+        for noi in NoiTopology::all() {
+            let arch = Arch::paper_heterogeneous(noi);
+            for i in 0..arch.num_chiplets() {
+                for j in (i + 1)..arch.num_chiplets() {
+                    let (a, b) = (arch.chiplets[i].pos, arch.chiplets[j].pos);
+                    assert!(
+                        (a.0 - b.0).abs() > 1e-9 || (a.1 - b.1).abs() > 1e-9,
+                        "{noi:?}: chiplets {i} and {j} overlap"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! The four PIM chiplet implementations considered by the paper (§3.2)
+//! and their Table 3 + §4.1 parameters, extended with the analytic compute
+//! model constants documented in DESIGN.md §5 (our CiMLoop substitute).
+
+use super::KB;
+
+pub const NUM_PIM_TYPES: usize = 4;
+
+/// PIM implementation variant. Order matches the paper's Table 3 and is
+/// the cluster index everywhere (action space, state features, abi).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PimType {
+    /// ReRAM macros, 1-bit streamed input, one 8-bit ADC per column [10].
+    Standard = 0,
+    /// SRAM macros with ADCs shared across crossbar columns [22].
+    SharedAdc = 1,
+    /// ReRAM with analog accumulators that defer ADC conversions [66].
+    Accumulator = 2,
+    /// Fully digital SRAM near-memory compute, no ADCs [28, 49].
+    AdcLess = 3,
+}
+
+impl PimType {
+    pub fn all() -> [PimType; NUM_PIM_TYPES] {
+        [PimType::Standard, PimType::SharedAdc, PimType::Accumulator, PimType::AdcLess]
+    }
+
+    pub fn from_index(i: usize) -> PimType {
+        match i {
+            0 => PimType::Standard,
+            1 => PimType::SharedAdc,
+            2 => PimType::Accumulator,
+            3 => PimType::AdcLess,
+            _ => panic!("invalid PIM type index {i}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PimType::Standard => "standard",
+            PimType::SharedAdc => "shared_adc",
+            PimType::Accumulator => "accumulator",
+            PimType::AdcLess => "adc_less",
+        }
+    }
+
+    /// ReRAM-based types are thermally fragile (conductance drift); SRAM
+    /// tolerates standard 85 °C.
+    pub fn is_reram(self) -> bool {
+        matches!(self, PimType::Standard | PimType::Accumulator)
+    }
+}
+
+/// Static per-type chiplet parameters.
+///
+/// Columns 1–7 come from the paper's Table 3. The last four columns are
+/// the analytic compute model (DESIGN.md §5): peak MAC rate, energy/MAC,
+/// leakage power, and the §4.1 Eq. 2 thermal limit.
+#[derive(Clone, Debug)]
+pub struct PimSpec {
+    pub pim: PimType,
+    pub fabrication: &'static str,
+    pub crossbar: usize,
+    pub bits_per_cell: u32,
+    /// ADC precision in bits; `None` for the ADC-less digital design.
+    pub adc_bits: Option<u32>,
+    /// Weight-storage capacity per chiplet (bits).
+    pub mem_bits: u64,
+    pub area_mm2: f64,
+    /// Effective peak rate in MAC/s per chiplet (analytic CiMLoop-substitute).
+    pub rate_mac_s: f64,
+    /// Dynamic energy per MAC (J).
+    pub energy_per_mac_j: f64,
+    /// Leakage / retention power per chiplet (W). Paid whenever weights
+    /// are resident, including while throttled (§4.1).
+    pub leakage_w: f64,
+    /// Thermal throttling threshold, Kelvin (Eq. 2).
+    pub t_max_k: f64,
+}
+
+impl PimSpec {
+    /// The paper's Table 3 catalogue with DESIGN.md §5 model constants.
+    ///
+    /// Rate rationale (all at nominal 1 GHz macro clock, INT8 weights on
+    /// 2-bit ReRAM cells / 1-bit SRAM cells):
+    /// * Standard: 128×128 crossbar, per-column ADCs keep full column
+    ///   parallelism → highest rate per area, but every column conversion
+    ///   burns ADC energy → highest energy and heat density.
+    /// * Shared-ADC: 768×768 macro with column-shared ADCs — conversions
+    ///   are serialized across column groups (lower rate per area), and
+    ///   energy amortized (lower J/MAC) [22].
+    /// * Accumulator: analog accumulation across input cycles defers ADC
+    ///   activity → mid rate, markedly lower J/MAC [66]; densest weight
+    ///   memory (256×256, 2 b/cell).
+    /// * ADC-less: digital bit-serial MACs — lowest J/MAC and leakage, but
+    ///   serialized bitwise arithmetic → lowest rate; smallest capacity.
+    pub fn table3() -> [PimSpec; NUM_PIM_TYPES] {
+        [
+            PimSpec {
+                pim: PimType::Standard,
+                fabrication: "ReRAM",
+                crossbar: 128,
+                bits_per_cell: 2,
+                adc_bits: Some(8),
+                mem_bits: 9568 * KB,
+                area_mm2: 4.0,
+                rate_mac_s: 204.8e9,
+                energy_per_mac_j: 1.10e-12,
+                leakage_w: 0.035,
+                t_max_k: 330.0,
+            },
+            PimSpec {
+                pim: PimType::SharedAdc,
+                fabrication: "SRAM",
+                crossbar: 768,
+                bits_per_cell: 1,
+                adc_bits: Some(8),
+                mem_bits: 9792 * KB,
+                area_mm2: 9.0,
+                rate_mac_s: 147.5e9,
+                energy_per_mac_j: 0.65e-12,
+                leakage_w: 0.110,
+                t_max_k: 358.0,
+            },
+            PimSpec {
+                pim: PimType::Accumulator,
+                fabrication: "ReRAM",
+                crossbar: 256,
+                bits_per_cell: 2,
+                adc_bits: Some(8),
+                mem_bits: 19200 * KB,
+                area_mm2: 4.0,
+                rate_mac_s: 163.8e9,
+                energy_per_mac_j: 0.48e-12,
+                leakage_w: 0.040,
+                t_max_k: 330.0,
+            },
+            PimSpec {
+                pim: PimType::AdcLess,
+                fabrication: "SRAM",
+                crossbar: 128,
+                bits_per_cell: 1,
+                adc_bits: None,
+                mem_bits: 2416 * KB,
+                area_mm2: 4.0,
+                rate_mac_s: 102.4e9,
+                energy_per_mac_j: 0.28e-12,
+                leakage_w: 0.028,
+                t_max_k: 358.0,
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_thermal_thresholds() {
+        for spec in PimSpec::table3() {
+            if spec.pim.is_reram() {
+                assert_eq!(spec.t_max_k, 330.0, "{:?}", spec.pim);
+            } else {
+                assert_eq!(spec.t_max_k, 358.0, "{:?}", spec.pim);
+            }
+        }
+    }
+
+    #[test]
+    fn relative_orderings_match_fig1b() {
+        let s = PimSpec::table3();
+        // Standard is the fastest; ADC-less the slowest but most efficient.
+        assert!(s[0].rate_mac_s > s[1].rate_mac_s);
+        assert!(s[0].rate_mac_s > s[2].rate_mac_s);
+        assert!(s[3].rate_mac_s < s[2].rate_mac_s);
+        assert!(s[0].energy_per_mac_j > s[1].energy_per_mac_j);
+        assert!(s[1].energy_per_mac_j > s[2].energy_per_mac_j);
+        assert!(s[2].energy_per_mac_j > s[3].energy_per_mac_j);
+        // Accumulator has the densest weight memory per area.
+        let density = |p: &PimSpec| p.mem_bits as f64 / p.area_mm2;
+        assert!(density(&s[2]) > density(&s[0]));
+        assert!(density(&s[2]) > density(&s[1]));
+        assert!(density(&s[2]) > density(&s[3]));
+    }
+
+    #[test]
+    fn round_trip_index() {
+        for t in PimType::all() {
+            assert_eq!(PimType::from_index(t as usize), t);
+        }
+    }
+}

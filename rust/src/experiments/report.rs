@@ -1,0 +1,114 @@
+//! Report helpers: aligned console tables (the rows the paper's tables
+//! print) and CSV export under `results/`.
+
+use crate::sim::SimResult;
+use std::fmt::Write as _;
+
+/// A simple aligned table builder.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<width$}  ", c, width = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Write as CSV to `results/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all("results")?;
+        let path = format!("results/{name}.csv");
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+pub fn fmt(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Standard metric row for a SimResult.
+pub fn result_cells(rate: f64, r: &SimResult) -> Vec<String> {
+    vec![
+        r.scheduler.clone(),
+        fmt(rate, 2),
+        fmt(r.throughput_jobs_s, 3),
+        fmt(r.mean_exec_s, 3),
+        fmt(r.mean_e2e_s, 3),
+        fmt(r.mean_energy_j, 4),
+        fmt(r.mean_edp, 4),
+        fmt(r.max_temp_k, 1),
+        r.throttle_events.to_string(),
+    ]
+}
+
+pub const RESULT_HEADERS: [&str; 9] = [
+    "scheduler", "admit_rate", "throughput", "exec_s", "e2e_s", "energy_j", "edp", "max_temp_k",
+    "throttles",
+];
+
+/// Percentage improvement of `ours` vs `base` where smaller is better
+/// (the paper's Table 5 convention: (base − ours) / ours × 100).
+pub fn pct_improvement(base: f64, ours: f64) -> f64 {
+    (base - ours) / ours * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bcd"]);
+        t.row(vec!["xx".into(), "1".into()]);
+        t.row(vec!["y".into(), "23456".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a "));
+        assert!(lines[2].starts_with("xx"));
+    }
+
+    #[test]
+    fn improvement_math() {
+        // base 2x ours => 100% improvement.
+        assert!((pct_improvement(2.0, 1.0) - 100.0).abs() < 1e-12);
+        assert!(pct_improvement(1.0, 2.0) < 0.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! # THERMOS — Thermally-Aware Multi-Objective Scheduling of AI Workloads
+//! # on Heterogeneous Multi-Chiplet PIM Architectures
+//!
+//! Production-quality reproduction of the THERMOS paper (Kanani et al.,
+//! 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: heterogeneous chiplet
+//!   system model, NoI, PIM compute model, RC thermal model, streaming
+//!   multi-workload simulator, the two-level THERMOS scheduler, the
+//!   baseline schedulers (Simba / Big-Little / RELMAS), and a PPO trainer
+//!   that drives the AOT-compiled update graph.
+//! * **Layer 2 (python/compile, build-time)** — the jax actor-critic and
+//!   PPO update, lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
+//!   the differentiable-decision-tree policy forward pass and the MLP
+//!   critic, verified against pure-jnp oracles.
+//!
+//! Python never runs at simulation/serving time: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and is
+//! self-contained after `make artifacts`.
+
+pub mod arch;
+pub mod experiments;
+pub mod noi;
+pub mod pim;
+pub mod rl;
+pub mod runtime;
+pub mod thermal;
+pub mod util;
+pub mod sched;
+pub mod sim;
+pub mod workload;

@@ -1,0 +1,308 @@
+//! `thermos` — leader binary: train policies, run simulations, sweep
+//! experiments, and print system info. All heavy lifting lives in the
+//! library; this is the CLI entrypoint.
+
+use anyhow::{bail, Context, Result};
+use thermos::arch::Arch;
+use thermos::noi::NoiTopology;
+use thermos::rl::relmas_trainer::RelmasTrainer;
+use thermos::rl::trainer::{TrainConfig, Trainer};
+use thermos::runtime::{params_io, Runtime};
+use thermos::sched::policy::NativeDdt;
+use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::thermos::{Preference, ThermosSched};
+use thermos::sched::{BigLittleSched, SimbaSched};
+use thermos::sim::{SimConfig, SimResult, Simulator};
+use thermos::util::cli;
+use thermos::workload::ModelZoo;
+
+const HELP: &str = "\
+thermos — thermally-aware multi-objective scheduling of AI workloads on
+heterogeneous multi-chiplet PIM architectures (paper reproduction).
+
+USAGE: thermos <command> [options]
+
+COMMANDS:
+  info                      Print the Table 3 system + Table 4 parameters
+  train                     Train the THERMOS MORL policy (AOT PPO updates)
+  train-relmas              Train the RELMAS baseline policy
+  sim                       Run one streaming simulation and print metrics
+  explain                   Render a trained DDT policy human-readably (4.3.1)
+  smoke                     Load artifacts, run one policy call end-to-end
+
+Common options:
+  --noi <mesh|kite|floret|hexamesh>   NoI topology [mesh]
+  --seed <n>                          RNG seed [1]
+  --artifacts <dir>                   artifacts directory [artifacts]
+
+train options:
+  --episodes <n>            [40]      --jobs <n> per episode [60]
+  --max-images <n>          [4000]    --out <file> params output
+  --log-csv <file>          value-loss curve CSV (Fig. 6)
+
+sim options:
+  --sched <thermos|simba|biglittle>   [thermos]
+  --params <file>           trained params (thermos)
+  --pref <exec|balanced|energy>       runtime preference [balanced]
+  --rate <jobs/s>           [2.0]     --duration <s> [240]
+  --warmup <s>              [60]      --max-images <n> [20000]
+  --pjrt                    evaluate the policy through the PJRT artifact
+                            (default uses the bit-checked native evaluator)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(
+        &argv,
+        &[
+            "noi", "seed", "artifacts", "episodes", "jobs", "max-images", "out", "log-csv",
+            "sched", "params", "pref", "rate", "duration", "warmup", "epochs",
+        ],
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if args.cmd.is_empty() || args.has("help") {
+        println!("{HELP}");
+        return;
+    }
+    let r = match args.cmd.as_str() {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "train-relmas" => cmd_train_relmas(&args),
+        "sim" => cmd_sim(&args),
+        "explain" => cmd_explain(&args),
+        "smoke" => cmd_smoke(&args),
+        other => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn noi_of(args: &cli::Args) -> Result<NoiTopology> {
+    let name = args.get_or("noi", "mesh");
+    NoiTopology::from_name(name).with_context(|| format!("unknown NoI `{name}`"))
+}
+
+fn runtime_of(args: &cli::Args) -> Result<Runtime> {
+    Runtime::open(args.get_or("artifacts", "artifacts"))
+}
+
+fn pref_of(args: &cli::Args) -> Result<Preference> {
+    match args.get_or("pref", "balanced") {
+        "exec" | "exec_time" | "time" => Ok([1.0, 0.0]),
+        "balanced" => Ok([0.5, 0.5]),
+        "energy" => Ok([0.0, 1.0]),
+        other => bail!("unknown preference `{other}`"),
+    }
+}
+
+fn cmd_info(args: &cli::Args) -> Result<()> {
+    let noi = noi_of(args)?;
+    let arch = Arch::paper_heterogeneous(noi);
+    println!("THERMOS evaluation system (Table 3) on {} NoI", noi.name());
+    println!(
+        "{:<12} {:>6} {:>9} {:>10} {:>8} {:>10} {:>9} {:>8}",
+        "PIM type", "count", "crossbar", "mem/chip", "area", "rate", "pJ/MAC", "Tmax"
+    );
+    for (cl, spec) in arch.specs.iter().enumerate() {
+        println!(
+            "{:<12} {:>6} {:>9} {:>8}Kb {:>6}mm² {:>7.1}G/s {:>9.2} {:>7}K",
+            spec.pim.name(),
+            arch.clusters[cl].len(),
+            format!("{}×{}", spec.crossbar, spec.crossbar),
+            spec.mem_bits / 1024,
+            spec.area_mm2,
+            spec.rate_mac_s / 1e9,
+            spec.energy_per_mac_j * 1e12,
+            spec.t_max_k
+        );
+    }
+    println!(
+        "\nchiplets: {}  total memory: {:.1} MB  total area: {:.0} mm²",
+        arch.num_chiplets(),
+        arch.total_memory_bits() as f64 / 8e6,
+        arch.total_area_mm2()
+    );
+    println!(
+        "NoI: {} links, mean hops {:.2}, diameter {}",
+        arch.topology.num_links,
+        arch.topology.mean_hops(),
+        arch.topology.diameter()
+    );
+    let zoo = ModelZoo::new();
+    println!("\nworkload zoo:");
+    for dcg in zoo.all_dcgs() {
+        println!(
+            "  {:<20} {:>3} layers {:>7.1}M params {:>7.2}G MACs",
+            dcg.model.name(),
+            dcg.num_layers(),
+            dcg.total_weight_bits() as f64 / 8e6,
+            dcg.total_macs() as f64 / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &cli::Args) -> Result<()> {
+    let noi = noi_of(args)?;
+    let cfg = TrainConfig {
+        noi,
+        episodes: args.parse_usize("episodes", 40).map_err(anyhow::Error::msg)?,
+        jobs_per_episode: args.parse_usize("jobs", 60).map_err(anyhow::Error::msg)?,
+        max_images: args.parse_u64("max-images", 4000).map_err(anyhow::Error::msg)?,
+        epochs: args.parse_usize("epochs", 4).map_err(anyhow::Error::msg)?,
+        seed: args.parse_u64("seed", 7).map_err(anyhow::Error::msg)?,
+        ..TrainConfig::default()
+    };
+    let mut runtime = runtime_of(args)?;
+    eprintln!("training THERMOS policy on {} (pjrt platform: {})", noi.name(), runtime.platform());
+    let mut trainer = Trainer::new(cfg);
+    let params = trainer.train(&mut runtime)?;
+    let default_out = format!("results/thermos_{}.params", noi.name());
+    let out = args.get_or("out", &default_out);
+    params_io::save(out, &params)?;
+    eprintln!("saved trained params to {out}");
+    if let Some(csv) = args.get("log-csv") {
+        trainer.write_log_csv(csv)?;
+        eprintln!("wrote training log to {csv}");
+    } else {
+        let csv = format!("results/train_{}.csv", noi.name());
+        trainer.write_log_csv(&csv)?;
+        eprintln!("wrote training log to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_train_relmas(args: &cli::Args) -> Result<()> {
+    let noi = noi_of(args)?;
+    let cfg = TrainConfig {
+        noi,
+        episodes: args.parse_usize("episodes", 40).map_err(anyhow::Error::msg)?,
+        jobs_per_episode: args.parse_usize("jobs", 60).map_err(anyhow::Error::msg)?,
+        max_images: args.parse_u64("max-images", 4000).map_err(anyhow::Error::msg)?,
+        epochs: args.parse_usize("epochs", 4).map_err(anyhow::Error::msg)?,
+        seed: args.parse_u64("seed", 7).map_err(anyhow::Error::msg)?,
+        ..TrainConfig::default()
+    };
+    let mut runtime = runtime_of(args)?;
+    let mut trainer = RelmasTrainer::new(cfg);
+    let params = trainer.train(&mut runtime)?;
+    let default_out = format!("results/relmas_{}.params", noi.name());
+    let out = args.get_or("out", &default_out);
+    params_io::save(out, &params)?;
+    eprintln!("saved RELMAS params to {out}");
+    Ok(())
+}
+
+fn print_result(r: &SimResult) {
+    println!(
+        "{:<22} throughput {:>5.2} DNN/s | exec {:>7.2} s | e2e {:>7.2} s | energy {:>7.3} J | EDP {:>8.2} | maxT {:>5.1} K | throttles {} | jobs {}",
+        r.scheduler,
+        r.throughput_jobs_s,
+        r.mean_exec_s,
+        r.mean_e2e_s,
+        r.mean_energy_j,
+        r.mean_edp,
+        r.max_temp_k,
+        r.throttle_events,
+        r.jobs.len()
+    );
+}
+
+fn cmd_sim(args: &cli::Args) -> Result<()> {
+    let noi = noi_of(args)?;
+    let arch = Arch::paper_heterogeneous(noi);
+    let cfg = SimConfig {
+        admit_rate: args.parse_f64("rate", 2.0).map_err(anyhow::Error::msg)?,
+        warmup_s: args.parse_f64("warmup", 60.0).map_err(anyhow::Error::msg)?,
+        duration_s: args.parse_f64("duration", 240.0).map_err(anyhow::Error::msg)?,
+        max_images: args.parse_u64("max-images", 20_000).map_err(anyhow::Error::msg)?,
+        seed: args.parse_u64("seed", 1).map_err(anyhow::Error::msg)?,
+        ..SimConfig::default()
+    };
+    let sched_name = args.get_or("sched", "thermos");
+    let result = match sched_name {
+        "simba" => Simulator::new(&arch, SimbaSched::new(arch.clone()), cfg).run().0,
+        "biglittle" | "big_little" => {
+            Simulator::new(&arch, BigLittleSched::new(arch.clone()), cfg).run().0
+        }
+        "thermos" => {
+            let zoo = ModelZoo::new();
+            let encoder = StateEncoder::new(&arch, &zoo, cfg.max_images);
+            let omega = pref_of(args)?;
+            let theta = match args.get("params") {
+                Some(p) => {
+                    let params = params_io::load(p)?;
+                    params[..thermos::sched::policy::ddt_theta_len(STATE_DIM, NUM_CLUSTERS)]
+                        .to_vec()
+                }
+                None => {
+                    eprintln!("note: no --params given; using untrained policy");
+                    let mut rng = thermos::util::rng::Rng::new(cfg.seed);
+                    NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng).theta
+                }
+            };
+            if args.has("pjrt") {
+                let runtime = runtime_of(args)?;
+                let policy = thermos::runtime::PjrtPolicy::new(
+                    runtime, "ddt_policy", STATE_DIM, NUM_CLUSTERS, theta,
+                )?;
+                let sched = ThermosSched::new(arch.clone(), encoder, policy, omega);
+                Simulator::new(&arch, sched, cfg).run().0
+            } else {
+                let policy = NativeDdt::new(STATE_DIM, NUM_CLUSTERS, theta);
+                let sched = ThermosSched::new(arch.clone(), encoder, policy, omega);
+                Simulator::new(&arch, sched, cfg).run().0
+            }
+        }
+        other => bail!("unknown scheduler `{other}`"),
+    };
+    print_result(&result);
+    Ok(())
+}
+
+/// Render a trained DDT policy (requires --params).
+fn cmd_explain(args: &cli::Args) -> Result<()> {
+    let path = args.get("params").map(str::to_string).unwrap_or_else(|| {
+        format!("results/thermos_{}.params", args.get_or("noi", "mesh"))
+    });
+    let params = params_io::load(&path)?;
+    let tl = thermos::sched::policy::ddt_theta_len(STATE_DIM, NUM_CLUSTERS);
+    anyhow::ensure!(params.len() >= tl, "params file too short");
+    let ddt = NativeDdt::new(STATE_DIM, NUM_CLUSTERS, params[..tl].to_vec());
+    print!("{}", thermos::sched::explain::render(&ddt, 4));
+    Ok(())
+}
+
+/// End-to-end smoke test: artifacts load, PJRT runs, native matches.
+fn cmd_smoke(args: &cli::Args) -> Result<()> {
+    let mut runtime = runtime_of(args)?;
+    println!("platform: {}", runtime.platform());
+    println!("abi: state_dim={} theta_len={} phi_len={}", runtime.abi.state_dim,
+        runtime.abi.theta_len, runtime.abi.phi_len);
+    let mut rng = thermos::util::rng::Rng::new(3);
+    let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+    let x: Vec<f32> = (0..STATE_DIM).map(|i| (i as f32 * 0.37).sin()).collect();
+    let native = ddt.forward(&x);
+    let art = runtime.artifact("ddt_policy")?;
+    let out = art.run_f32(&[
+        thermos::runtime::F32Tensor::vec(ddt.theta.clone()),
+        thermos::runtime::F32Tensor::mat(x.clone(), 1, STATE_DIM),
+    ])?;
+    println!("native logits: {native:?}");
+    println!("pjrt   logits: {:?}", out[0]);
+    for (a, b) in native.iter().zip(&out[0]) {
+        anyhow::ensure!((a - b).abs() < 1e-4, "native/pjrt mismatch: {a} vs {b}");
+    }
+    println!("smoke OK — native == artifact");
+    Ok(())
+}

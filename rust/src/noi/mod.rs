@@ -1,0 +1,231 @@
+//! Network-on-Interposer (NoI) topologies and the UCIe link model.
+//!
+//! The paper evaluates THERMOS on four interposer networks: Mesh,
+//! Kite(-small) [6], Floret [57], and HexaMesh [19]. We generate each as a
+//! chiplet-level graph with physical die positions (consumed by the
+//! thermal floorplan and the proximity algorithm), precompute all-pairs
+//! hop counts, and expose a latency/energy link model with the paper's
+//! UCIe parameters (64-bit links, 0.5 pJ/bit/hop — Table 4).
+
+pub mod topologies;
+
+pub use topologies::build;
+
+/// The four NoI architectures of §5.3–5.4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NoiTopology {
+    Mesh,
+    Kite,
+    Floret,
+    HexaMesh,
+}
+
+impl NoiTopology {
+    pub fn all() -> [NoiTopology; 4] {
+        [NoiTopology::Mesh, NoiTopology::Kite, NoiTopology::Floret, NoiTopology::HexaMesh]
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            NoiTopology::Mesh => "mesh",
+            NoiTopology::Kite => "kite",
+            NoiTopology::Floret => "floret",
+            NoiTopology::HexaMesh => "hexamesh",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<NoiTopology> {
+        match s.to_ascii_lowercase().as_str() {
+            "mesh" => Some(NoiTopology::Mesh),
+            "kite" | "kite-small" => Some(NoiTopology::Kite),
+            "floret" => Some(NoiTopology::Floret),
+            "hexamesh" | "hexa" => Some(NoiTopology::HexaMesh),
+            _ => None,
+        }
+    }
+}
+
+/// UCIe-derived link parameters (Table 4 + [55]).
+#[derive(Clone, Debug)]
+pub struct LinkModel {
+    /// Link width in bits (Table 4: 64).
+    pub width_bits: u32,
+    /// Link clock (Hz). 2 GHz advanced-package UCIe lane rate.
+    pub clock_hz: f64,
+    /// Per-hop router+link traversal latency (s).
+    pub hop_latency_s: f64,
+    /// Energy per bit per hop (Table 4: 0.5 pJ/b).
+    pub energy_per_bit_hop_j: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel {
+            width_bits: 64,
+            clock_hz: 2.0e9,
+            hop_latency_s: 4.0e-9,
+            energy_per_bit_hop_j: 0.5e-12,
+        }
+    }
+}
+
+impl LinkModel {
+    /// Serialized bandwidth of one link, bits/s.
+    pub fn bandwidth_bits_s(&self) -> f64 {
+        self.width_bits as f64 * self.clock_hz
+    }
+
+    /// Time to move `bits` across `hops` hops (store-and-forward head
+    /// latency + serialization).
+    pub fn transfer_time_s(&self, bits: f64, hops: u32) -> f64 {
+        if hops == 0 || bits <= 0.0 {
+            return 0.0;
+        }
+        hops as f64 * self.hop_latency_s + bits / self.bandwidth_bits_s()
+    }
+
+    /// NoI energy to move `bits` across `hops` hops.
+    pub fn transfer_energy_j(&self, bits: f64, hops: u32) -> f64 {
+        bits * hops as f64 * self.energy_per_bit_hop_j
+    }
+}
+
+/// A generated topology: node positions, adjacency, and all-pairs hops.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub kind: NoiTopology,
+    /// Die-centre coordinates in mm.
+    pub positions: Vec<(f64, f64)>,
+    /// Adjacency list (undirected; both directions present).
+    pub adj: Vec<Vec<usize>>,
+    /// All-pairs hop counts (BFS distances), row-major n×n.
+    hops: Vec<u32>,
+    pub link: LinkModel,
+    /// Total link count (undirected edges).
+    pub num_links: usize,
+}
+
+impl Topology {
+    pub(crate) fn from_adjacency(
+        kind: NoiTopology,
+        positions: Vec<(f64, f64)>,
+        adj: Vec<Vec<usize>>,
+    ) -> Topology {
+        let n = positions.len();
+        assert_eq!(adj.len(), n);
+        let num_links = adj.iter().map(|a| a.len()).sum::<usize>() / 2;
+        let mut hops = vec![u32::MAX; n * n];
+        // BFS from every node — n ≈ 80, trivial.
+        let mut queue = std::collections::VecDeque::new();
+        for src in 0..n {
+            hops[src * n + src] = 0;
+            queue.clear();
+            queue.push_back(src);
+            while let Some(u) = queue.pop_front() {
+                let du = hops[src * n + u];
+                for &v in &adj[u] {
+                    if hops[src * n + v] == u32::MAX {
+                        hops[src * n + v] = du + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        assert!(
+            hops.iter().all(|&h| h != u32::MAX),
+            "{kind:?} topology is disconnected"
+        );
+        Topology { kind, positions, adj, hops, link: LinkModel::default(), num_links }
+    }
+
+    pub fn n(&self) -> usize {
+        self.positions.len()
+    }
+
+    #[inline]
+    pub fn hops(&self, a: usize, b: usize) -> u32 {
+        self.hops[a * self.n() + b]
+    }
+
+    /// Mean hop count over all distinct pairs — the headline NoI quality
+    /// metric used in the Kite/HexaMesh papers.
+    pub fn mean_hops(&self) -> f64 {
+        let n = self.n();
+        let mut total = 0u64;
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    total += self.hops(a, b) as u64;
+                }
+            }
+        }
+        total as f64 / (n * (n - 1)) as f64
+    }
+
+    /// Maximum hop count (network diameter).
+    pub fn diameter(&self) -> u32 {
+        *self.hops.iter().max().unwrap()
+    }
+
+    /// Euclidean die-centre distance in mm (UCIe passive-interposer reach
+    /// checks; proximity tie-breaking).
+    pub fn dist_mm(&self, a: usize, b: usize) -> f64 {
+        let (ax, ay) = self.positions[a];
+        let (bx, by) = self.positions[b];
+        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model_transfer_math() {
+        let lm = LinkModel::default();
+        // 1 Mb over 3 hops: 3*4ns + 1e6/128e9 s
+        let t = lm.transfer_time_s(1.0e6, 3);
+        assert!((t - (12.0e-9 + 1.0e6 / 128.0e9)).abs() < 1e-15);
+        let e = lm.transfer_energy_j(1.0e6, 3);
+        assert!((e - 1.0e6 * 3.0 * 0.5e-12).abs() < 1e-20);
+        assert_eq!(lm.transfer_time_s(0.0, 5), 0.0);
+        assert_eq!(lm.transfer_time_s(100.0, 0), 0.0);
+    }
+
+    #[test]
+    fn all_topologies_connected_78() {
+        for kind in NoiTopology::all() {
+            let t = build(kind, 78);
+            assert_eq!(t.n(), 78);
+            assert!(t.diameter() < 80, "{kind:?} diameter {}", t.diameter());
+            assert!(t.num_links >= 77, "{kind:?} must span");
+        }
+    }
+
+    #[test]
+    fn hexamesh_beats_mesh_on_mean_hops() {
+        let mesh = build(NoiTopology::Mesh, 78);
+        let hexa = build(NoiTopology::HexaMesh, 78);
+        let kite = build(NoiTopology::Kite, 78);
+        assert!(
+            hexa.mean_hops() < mesh.mean_hops(),
+            "hexa {} vs mesh {}",
+            hexa.mean_hops(),
+            mesh.mean_hops()
+        );
+        assert!(kite.mean_hops() < mesh.mean_hops());
+    }
+
+    #[test]
+    fn hops_symmetric_and_triangle() {
+        for kind in NoiTopology::all() {
+            let t = build(kind, 40);
+            for a in 0..t.n() {
+                for b in 0..t.n() {
+                    assert_eq!(t.hops(a, b), t.hops(b, a));
+                    for c in 0..t.n() {
+                        assert!(t.hops(a, c) <= t.hops(a, b) + t.hops(b, c));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Generators for the four NoI topologies.
+//!
+//! All generators produce physical die positions on a uniform-pitch
+//! interposer floorplan (pitch = largest die edge + 1 mm spacing) plus an
+//! adjacency list. Chiplet ids are assigned row-major, so the contiguous
+//! cluster id ranges chosen in [`crate::arch`] become contiguous spatial
+//! regions — matching the paper's Fig. 1a four-region layout.
+
+use super::{NoiTopology, Topology};
+
+/// Interposer placement pitch in mm: 3 mm die (largest, shared-ADC 9 mm²)
+/// plus 1 mm inter-die spacing.
+pub const PITCH_MM: f64 = 4.0;
+
+/// Build a topology over `n` chiplets. For Floret, the paper's cluster
+/// split is used when `n` matches the 78-chiplet evaluation system;
+/// otherwise the chiplets are split into four equal petals.
+pub fn build(kind: NoiTopology, n: usize) -> Topology {
+    match kind {
+        NoiTopology::Mesh => mesh(n),
+        NoiTopology::Kite => kite(n),
+        NoiTopology::HexaMesh => hexamesh(n),
+        NoiTopology::Floret => {
+            let clusters: Vec<usize> = if n == 78 {
+                vec![25, 28, 10, 15]
+            } else {
+                // Four near-equal petals.
+                let base = n / 4;
+                let mut c = vec![base; 4];
+                for item in c.iter_mut().take(n % 4) {
+                    *item += 1;
+                }
+                c.retain(|&x| x > 0);
+                c
+            };
+            floret(&clusters)
+        }
+    }
+}
+
+fn grid_dims(n: usize) -> (usize, usize) {
+    let w = (n as f64).sqrt().ceil() as usize;
+    let h = n.div_ceil(w);
+    (w, h)
+}
+
+fn grid_positions(n: usize, stagger: bool) -> Vec<(f64, f64)> {
+    let (w, _) = grid_dims(n);
+    (0..n)
+        .map(|i| {
+            let r = i / w;
+            let c = i % w;
+            let dx = if stagger && r % 2 == 1 { PITCH_MM / 2.0 } else { 0.0 };
+            (c as f64 * PITCH_MM + dx, r as f64 * PITCH_MM)
+        })
+        .collect()
+}
+
+fn push_edge(adj: &mut [Vec<usize>], a: usize, b: usize) {
+    if !adj[a].contains(&b) {
+        adj[a].push(b);
+        adj[b].push(a);
+    }
+}
+
+/// 2D mesh: 4-neighbour grid (the baseline NoI, as in SIAM [31]).
+fn mesh(n: usize) -> Topology {
+    let (w, _) = grid_dims(n);
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        let (r, c) = (i / w, i % w);
+        if c + 1 < w && i + 1 < n {
+            push_edge(&mut adj, i, i + 1);
+        }
+        let below = (r + 1) * w + c;
+        if below < n {
+            push_edge(&mut adj, i, below);
+        }
+    }
+    Topology::from_adjacency(NoiTopology::Mesh, grid_positions(n, false), adj)
+}
+
+/// Kite-small [6]: the mesh augmented with short diagonal skip links
+/// (both diagonals to the next row), complying with the passive-interposer
+/// reach limit by only linking immediately adjacent diagonals.
+fn kite(n: usize) -> Topology {
+    let (w, _) = grid_dims(n);
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        let (r, c) = (i / w, i % w);
+        if c + 1 < w && i + 1 < n {
+            push_edge(&mut adj, i, i + 1);
+        }
+        let below = (r + 1) * w + c;
+        if below < n {
+            push_edge(&mut adj, i, below);
+        }
+        // Diagonal skips.
+        if c + 1 < w {
+            let dr = (r + 1) * w + c + 1;
+            if dr < n {
+                push_edge(&mut adj, i, dr);
+            }
+        }
+        if c > 0 {
+            let dl = (r + 1) * w + c - 1;
+            if dl < n {
+                push_edge(&mut adj, i, dl);
+            }
+        }
+    }
+    Topology::from_adjacency(NoiTopology::Kite, grid_positions(n, false), adj)
+}
+
+/// HexaMesh [19]: staggered rows where each chiplet links to six
+/// neighbours (left, right, and four diagonal row-neighbours).
+fn hexamesh(n: usize) -> Topology {
+    let (w, _) = grid_dims(n);
+    let mut adj = vec![Vec::new(); n];
+    let idx = |r: usize, c: usize| r * w + c;
+    for i in 0..n {
+        let (r, c) = (i / w, i % w);
+        if c + 1 < w && i + 1 < n {
+            push_edge(&mut adj, i, i + 1);
+        }
+        // Row below: staggered rows touch (r+1, c) and one horizontal
+        // neighbour that depends on the row parity.
+        let below_candidates: [(usize, isize); 2] =
+            if r % 2 == 0 { [(r + 1, 0), (r + 1, -1)] } else { [(r + 1, 0), (r + 1, 1)] };
+        for (rr, dc) in below_candidates {
+            let cc = c as isize + dc;
+            if cc >= 0 && (cc as usize) < w {
+                let j = idx(rr, cc as usize);
+                if j < n {
+                    push_edge(&mut adj, i, j);
+                }
+            }
+        }
+    }
+    Topology::from_adjacency(NoiTopology::HexaMesh, grid_positions(n, true), adj)
+}
+
+/// Floret [57]: data-flow-aware space-filling-curve (SFC) petals, one per
+/// cluster. Each petal is a serpentine chain through its own quadrant so
+/// consecutive DNN layers mapped along the chain communicate over one hop.
+/// Petal heads sit near the interposer centre and are chained head-to-head
+/// (the "flower core") to connect the florets.
+fn floret(clusters: &[usize]) -> Topology {
+    let n: usize = clusters.iter().sum();
+    let mut positions = vec![(0.0, 0.0); n];
+    let mut adj = vec![Vec::new(); n];
+    // Quadrant unit vectors: petals grow outward from the centre.
+    let quadrant = [(1.0, 1.0), (-1.0, 1.0), (-1.0, -1.0), (1.0, -1.0)];
+    let mut base = 0usize;
+    let mut heads = Vec::new();
+    for (q, &size) in clusters.iter().enumerate() {
+        let (sx, sy) = quadrant[q % 4];
+        // Extra quadrant ring for >4 clusters (not used by the paper system).
+        let ring = (q / 4) as f64;
+        let w = (size as f64).sqrt().ceil() as usize;
+        for k in 0..size {
+            let id = base + k;
+            // Serpentine within the quadrant sub-grid.
+            let r = k / w;
+            let c = if r % 2 == 0 { k % w } else { w - 1 - k % w };
+            let off = 0.75 + ring * (w as f64 + 1.0);
+            positions[id] = (
+                sx * (off + c as f64) * PITCH_MM,
+                sy * (off + r as f64) * PITCH_MM,
+            );
+            if k > 0 {
+                push_edge(&mut adj, id - 1, id);
+            }
+        }
+        heads.push(base);
+        base += size;
+    }
+    // Flower core: chain the petal heads (id 0 of each cluster sits at the
+    // quadrant corner nearest the centre).
+    for win in heads.windows(2) {
+        push_edge(&mut adj, win[0], win[1]);
+    }
+    if heads.len() > 2 {
+        push_edge(&mut adj, heads[0], *heads.last().unwrap());
+    }
+    // Cross links between petal mid-points and the core improve bisection
+    // slightly, mirroring Floret's overlapping-SFC structure.
+    for (q, &size) in clusters.iter().enumerate() {
+        if size >= 4 {
+            let head = heads[q];
+            let mid = head + size / 2;
+            push_edge(&mut adj, head, mid);
+        }
+    }
+    Topology::from_adjacency(NoiTopology::Floret, positions, adj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_grid_neighbor_counts() {
+        let t = mesh(9); // 3x3
+        let deg: Vec<usize> = t.adj.iter().map(|a| a.len()).collect();
+        assert_eq!(deg[4], 4); // centre
+        assert_eq!(deg[0], 2); // corner
+        assert_eq!(t.num_links, 12);
+    }
+
+    #[test]
+    fn kite_has_diagonals() {
+        let t = kite(9);
+        // Centre node: 4 mesh + 4 diagonal = 8 links in a 3x3.
+        assert_eq!(t.adj[4].len(), 8);
+    }
+
+    #[test]
+    fn hexamesh_interior_degree_is_six() {
+        let t = hexamesh(49); // 7x7
+        // Interior node away from edges.
+        let i = 3 * 7 + 3;
+        assert_eq!(t.adj[i].len(), 6, "adj: {:?}", t.adj[i]);
+    }
+
+    #[test]
+    fn floret_chains_within_clusters() {
+        let t = build(NoiTopology::Floret, 78);
+        // Consecutive ids in the standard cluster (0..25) chained.
+        for i in 0..24 {
+            assert!(t.adj[i].contains(&(i + 1)), "chain broken at {i}");
+        }
+        // Petal heads connected (0 and 25).
+        assert!(t.adj[0].contains(&25));
+    }
+
+    #[test]
+    fn floret_works_for_non_paper_sizes() {
+        for n in [4, 7, 16, 40] {
+            let t = build(NoiTopology::Floret, n);
+            assert_eq!(t.n(), n);
+        }
+    }
+
+    #[test]
+    fn mesh_positions_row_major() {
+        let t = mesh(9);
+        assert_eq!(t.positions[0], (0.0, 0.0));
+        assert_eq!(t.positions[1], (PITCH_MM, 0.0));
+        assert_eq!(t.positions[3], (0.0, PITCH_MM));
+    }
+}

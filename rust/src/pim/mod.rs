@@ -1,0 +1,152 @@
+//! PIM compute model — our CiMLoop [3] substitute (DESIGN.md §5).
+//!
+//! Given a neural layer (or a share of one) mapped onto a chiplet of some
+//! PIM type, produces execution time, dynamic energy, and power. The
+//! simulator composes these per-chiplet figures with the NoI communication
+//! model and the thermal model. The constants live in
+//! [`crate::arch::PimSpec::table3`]; this module implements the equations.
+
+use crate::arch::PimSpec;
+
+/// Weight-programming model: jobs stream weights from the I/O chiplets
+/// into crossbars once per job (weight-stationary execution, §5.2).
+#[derive(Clone, Debug)]
+pub struct WeightLoadModel {
+    /// Aggregate host→interposer bandwidth through the I/O chiplets (bit/s).
+    pub io_bandwidth_bits_s: f64,
+    /// Write energy per bit: ReRAM SET/RESET is far costlier than SRAM.
+    pub reram_write_j_per_bit: f64,
+    pub sram_write_j_per_bit: f64,
+}
+
+impl Default for WeightLoadModel {
+    fn default() -> Self {
+        WeightLoadModel {
+            io_bandwidth_bits_s: 512.0e9, // 64 GB/s aggregate I/O
+            reram_write_j_per_bit: 10.0e-12,
+            sram_write_j_per_bit: 0.2e-12,
+        }
+    }
+}
+
+/// The analytic per-layer compute model.
+#[derive(Clone, Debug, Default)]
+pub struct ComputeModel {
+    pub load: WeightLoadModel,
+}
+
+impl ComputeModel {
+    /// Time for one chiplet of `spec` to execute `macs` MAC operations of
+    /// one input frame.
+    ///
+    /// Crossbar-array MVM achieves its peak rate only when the mapped
+    /// weight block fills enough crossbar columns; tiny shares still pay
+    /// the input-streaming cycles. We model this with a utilization floor:
+    /// a share using fraction `u` of the chiplet's crossbar capacity runs
+    /// at `rate × max(u, u_floor)^0` — i.e. full rate, but with a fixed
+    /// per-frame front-end latency `t_front` (input DAC/driver setup).
+    pub fn mac_time_s(&self, spec: &PimSpec, macs: f64) -> f64 {
+        const T_FRONT_S: f64 = 0.5e-6; // per-frame per-chiplet front-end
+        if macs <= 0.0 {
+            return 0.0;
+        }
+        macs / spec.rate_mac_s + T_FRONT_S
+    }
+
+    /// Dynamic energy for `macs` MAC operations on `spec`.
+    pub fn mac_energy_j(&self, spec: &PimSpec, macs: f64) -> f64 {
+        macs * spec.energy_per_mac_j
+    }
+
+    /// Dynamic power while a chiplet computes at a sustained frame rate
+    /// (`frames_s`) with `macs_per_frame` of work (leakage included).
+    pub fn active_power_w(&self, spec: &PimSpec, macs_per_frame: f64, frames_s: f64) -> f64 {
+        self.mac_energy_j(spec, macs_per_frame) * frames_s + spec.leakage_w
+    }
+
+    /// Power while idle or throttled: leakage only — throttled PIM
+    /// chiplets still retain weights (§4.1).
+    pub fn idle_power_w(&self, spec: &PimSpec) -> f64 {
+        spec.leakage_w
+    }
+
+    /// One-time weight-programming cost for `bits` of weights onto `spec`.
+    /// Returns (time contribution at the shared I/O, energy).
+    pub fn weight_load(&self, spec: &PimSpec, bits: f64) -> (f64, f64) {
+        let t = bits / self.load.io_bandwidth_bits_s;
+        let e_bit = if spec.pim.is_reram() {
+            self.load.reram_write_j_per_bit
+        } else {
+            self.load.sram_write_j_per_bit
+        };
+        (t, bits * e_bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{PimSpec, PimType};
+    use crate::util::testkit::{check, forall};
+
+    fn specs() -> [PimSpec; 4] {
+        PimSpec::table3()
+    }
+
+    #[test]
+    fn time_scales_linearly_in_macs() {
+        let m = ComputeModel::default();
+        let s = &specs()[0];
+        let t1 = m.mac_time_s(s, 1e9);
+        let t2 = m.mac_time_s(s, 2e9);
+        // Slope is 1/rate; front-end latency is constant.
+        let slope = (t2 - t1) / 1e9;
+        assert!((slope - 1.0 / s.rate_mac_s).abs() / slope < 1e-9);
+    }
+
+    #[test]
+    fn standard_is_fastest_adcless_most_efficient() {
+        let m = ComputeModel::default();
+        let ss = specs();
+        let macs = 5e9;
+        let times: Vec<f64> = ss.iter().map(|s| m.mac_time_s(s, macs)).collect();
+        let energies: Vec<f64> = ss.iter().map(|s| m.mac_energy_j(s, macs)).collect();
+        assert!(times[0] < times[1] && times[0] < times[2] && times[0] < times[3]);
+        assert!(energies[3] < energies[0] && energies[3] < energies[1] && energies[3] < energies[2]);
+    }
+
+    #[test]
+    fn power_includes_leakage() {
+        let m = ComputeModel::default();
+        let s = &specs()[1];
+        assert_eq!(m.idle_power_w(s), s.leakage_w);
+        let p = m.active_power_w(s, 1e7, 30.0);
+        assert!(p > s.leakage_w);
+        // 1e7 MACs/frame at 30 fps on shared-ADC: 1e7*0.65e-12*30 ≈ 0.2 mW dynamic
+        assert!((p - (1e7 * s.energy_per_mac_j * 30.0 + s.leakage_w)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reram_writes_cost_more() {
+        let m = ComputeModel::default();
+        let ss = specs();
+        let (_, e_reram) = m.weight_load(&ss[PimType::Standard as usize], 1e6);
+        let (_, e_sram) = m.weight_load(&ss[PimType::SharedAdc as usize], 1e6);
+        assert!(e_reram > 10.0 * e_sram);
+    }
+
+    #[test]
+    fn properties_nonnegative_monotone() {
+        let m = ComputeModel::default();
+        let ss = specs();
+        forall(200, |rng| {
+            let s = &ss[rng.below(4)];
+            let a = rng.range_f64(0.0, 1e10);
+            let b = rng.range_f64(0.0, 1e10);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            check(m.mac_time_s(s, lo) <= m.mac_time_s(s, hi), "time monotone")?;
+            check(m.mac_energy_j(s, lo) <= m.mac_energy_j(s, hi), "energy monotone")?;
+            check(m.mac_time_s(s, a) >= 0.0 && m.mac_energy_j(s, a) >= 0.0, "nonneg")
+        });
+    }
+}

@@ -1,0 +1,110 @@
+//! Vectorized generalized advantage estimation (Eq. 3 with TD(λ)).
+//!
+//! Rewards and values are 2-vectors (execution time, energy); the
+//! advantage is computed per objective and scalarized with ω only at the
+//! loss (Eq. 4), matching the paper's "reward vectors, not a scalar
+//! weighted sum" training design.
+
+/// One transition of a trajectory (already time-ordered).
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub mask: Vec<bool>,
+    pub action: usize,
+    pub logp: f32,
+    /// Vector reward assigned to this step (mostly zeros; job-final steps
+    /// carry primary + secondary, §4.3.3).
+    pub reward: [f32; 2],
+}
+
+/// GAE over a finite episode (terminal bootstrap value = 0).
+/// Returns per-step vector advantages and vector return targets
+/// (`adv + V(s)` — the TD(λ) critic target of Eq. 5).
+pub fn gae(
+    rewards: &[[f32; 2]],
+    values: &[[f32; 2]],
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<[f32; 2]>, Vec<[f32; 2]>) {
+    let n = rewards.len();
+    assert_eq!(values.len(), n);
+    let mut adv = vec![[0.0f32; 2]; n];
+    let mut acc = [0.0f32; 2];
+    for t in (0..n).rev() {
+        let next_v = if t + 1 < n { values[t + 1] } else { [0.0, 0.0] };
+        for k in 0..2 {
+            let delta = rewards[t][k] + gamma * next_v[k] - values[t][k];
+            acc[k] = delta + gamma * lambda * acc[k];
+            adv[t][k] = acc[k];
+        }
+    }
+    let ret: Vec<[f32; 2]> = adv
+        .iter()
+        .zip(values)
+        .map(|(a, v)| [a[0] + v[0], a[1] + v[1]])
+        .collect();
+    (adv, ret)
+}
+
+/// Normalize scalarized advantages to zero mean / unit variance (standard
+/// PPO stabilization; applied per update batch).
+pub fn normalize(adv: &mut [f32]) {
+    if adv.len() < 2 {
+        return;
+    }
+    let n = adv.len() as f32;
+    let mean: f32 = adv.iter().sum::<f32>() / n;
+    let var: f32 = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    for a in adv.iter_mut() {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_advantage_is_td_error() {
+        let rewards = vec![[1.0, -1.0]];
+        let values = vec![[0.25, 0.5]];
+        let (adv, ret) = gae(&rewards, &values, 0.95, 0.95);
+        assert!((adv[0][0] - (1.0 - 0.25)).abs() < 1e-6);
+        assert!((adv[0][1] - (-1.0 - 0.5)).abs() < 1e-6);
+        assert!((ret[0][0] - 1.0).abs() < 1e-6);
+        assert!((ret[0][1] - (-1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_zero_is_one_step_td() {
+        let rewards = vec![[0.0, 0.0], [1.0, 2.0]];
+        let values = vec![[0.1, 0.2], [0.3, 0.4]];
+        let (adv, _) = gae(&rewards, &values, 0.9, 0.0);
+        // t=0: delta = 0 + 0.9*0.3 - 0.1
+        assert!((adv[0][0] - (0.9 * 0.3 - 0.1)).abs() < 1e-6);
+        assert!((adv[1][0] - (1.0 - 0.3)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_one_is_monte_carlo() {
+        // With λ=1 and V=0, advantage = discounted return.
+        let rewards = vec![[0.0, 0.0], [0.0, 0.0], [1.0, 0.0]];
+        let values = vec![[0.0, 0.0]; 3];
+        let g = 0.9f32;
+        let (adv, _) = gae(&rewards, &values, g, 1.0);
+        assert!((adv[0][0] - g * g).abs() < 1e-6);
+        assert!((adv[1][0] - g).abs() < 1e-6);
+        assert!((adv[2][0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_standardizes() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        normalize(&mut a);
+        let mean: f32 = a.iter().sum::<f32>() / 4.0;
+        let var: f32 = a.iter().map(|x| x * x).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+}

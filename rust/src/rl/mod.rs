@@ -1,0 +1,90 @@
+//! MORL-PPO training driver (§4.3): rust collects trajectories from the
+//! simulator with the native policy evaluators, computes vector GAE, and
+//! drives the AOT-compiled `ppo_update_*` artifacts (forward + backward +
+//! Adam fused inside XLA) through PJRT. Python never runs during training.
+
+pub mod gae;
+pub mod relmas_trainer;
+pub mod trainer;
+
+pub use gae::{gae, normalize, Transition};
+pub use trainer::{TrainConfig, TrainLogEntry, Trainer};
+
+/// Reward normalization scales (DESIGN.md §4): per-image execution time
+/// and energy are O(1e-3 s) / O(1e-3 J) on this system; dividing by these
+/// puts both objectives on comparable O(1) footing (§4.3.3 "normalize and
+/// balance the reward values").
+pub const TIME_SCALE: f64 = 1.0e-3;
+pub const ENERGY_SCALE: f64 = 1.0e-3;
+
+/// Primary reward (deterministic execution, assigned at mapping; §4.3.3):
+/// negative normalized per-image execution time and energy.
+pub fn primary_reward(ideal_exec_s: f64, ideal_energy_j: f64, images: u64) -> [f32; 2] {
+    let img = images.max(1) as f64;
+    [
+        (-(ideal_exec_s / img) / TIME_SCALE) as f32,
+        (-(ideal_energy_j / img) / ENERGY_SCALE) as f32,
+    ]
+}
+
+/// Secondary reward (non-deterministic throttling effects, assigned after
+/// execution; §4.3.3): negative normalized stall time and stall leakage.
+pub fn secondary_reward(stall_s: f64, stall_leak_j: f64, images: u64) -> [f32; 2] {
+    let img = images.max(1) as f64;
+    [
+        (-(stall_s / img) / TIME_SCALE) as f32,
+        (-(stall_leak_j / img) / ENERGY_SCALE) as f32,
+    ]
+}
+
+/// Build fixed-size minibatch index sets, padding the tail by resampling
+/// (the AOT update graph has a baked batch dimension).
+pub fn minibatch_indices(
+    n: usize,
+    batch: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n > 0);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut out = Vec::new();
+    for chunk in order.chunks(batch) {
+        let mut idx = chunk.to_vec();
+        while idx.len() < batch {
+            idx.push(order[rng.below(n)]);
+        }
+        out.push(idx);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rewards_are_negative_and_scaled() {
+        let p = primary_reward(10.0, 5.0, 10_000);
+        assert!(p[0] < 0.0 && p[1] < 0.0);
+        // 10 s / 10k images = 1 ms/img => -1.0 after scaling.
+        assert!((p[0] + 1.0).abs() < 1e-6);
+        let s = secondary_reward(0.0, 0.0, 100);
+        assert_eq!(s, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn minibatches_cover_all_and_are_fixed_size() {
+        let mut rng = Rng::new(1);
+        let batches = minibatch_indices(700, 256, &mut rng);
+        assert_eq!(batches.len(), 3);
+        let mut seen = vec![false; 700];
+        for b in &batches {
+            assert_eq!(b.len(), 256);
+            for &i in b {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every transition appears at least once");
+    }
+}

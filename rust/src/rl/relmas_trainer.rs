@@ -1,0 +1,226 @@
+//! PPO trainer for the RELMAS baseline [8]: identical training rig, but a
+//! flat MLP policy over individual chiplets and a scalar (balanced)
+//! objective — RELMAS is single-objective, so its reward is the balanced
+//! scalarization. Trained through the AOT `ppo_update_relmas` artifact.
+
+use super::{gae, minibatch_indices, normalize, primary_reward, secondary_reward, Transition};
+use crate::arch::Arch;
+use crate::runtime::{F32Tensor, Runtime};
+use crate::sched::policy::{mlp_param_len, NativeMlp};
+use crate::sched::relmas::RelmasSched;
+use crate::sched::state::{relmas_obs_dim, StateEncoder};
+use crate::sim::{SimConfig, Simulator};
+use crate::util::rng::Rng;
+use crate::workload::ModelZoo;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct RelmasTrainer {
+    pub cfg: super::trainer::TrainConfig,
+    pub arch: Arch,
+    encoder: StateEncoder,
+    actor_dims: Vec<usize>,
+    critic_dims: Vec<usize>,
+    /// Flat [θ_R | φ_R].
+    pub params: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    adam_t: f32,
+    pub log: Vec<(usize, f32, f32)>, // (env_steps, value_loss, mean_reward)
+    pub total_env_steps: usize,
+    rng: Rng,
+}
+
+impl RelmasTrainer {
+    pub fn new(cfg: super::trainer::TrainConfig) -> RelmasTrainer {
+        let arch = Arch::paper_heterogeneous(cfg.noi);
+        let zoo = ModelZoo::new();
+        let encoder = StateEncoder::new(&arch, &zoo, cfg.max_images);
+        let n = arch.num_chiplets();
+        let obs = relmas_obs_dim(n);
+        let actor_dims = vec![obs, 128, 128, n];
+        let critic_dims = vec![obs, 128, 128, 1];
+        let mut rng = Rng::new(cfg.seed ^ 0x7e1u64);
+        let actor = NativeMlp::init(actor_dims.clone(), &mut rng);
+        let critic = NativeMlp::init(critic_dims.clone(), &mut rng);
+        let mut params = actor.params;
+        params.extend_from_slice(&critic.params);
+        let plen = params.len();
+        RelmasTrainer {
+            cfg,
+            arch,
+            encoder,
+            actor_dims,
+            critic_dims,
+            params,
+            adam_m: vec![0.0; plen],
+            adam_v: vec![0.0; plen],
+            adam_t: 0.0,
+            log: Vec::new(),
+            total_env_steps: 0,
+            rng,
+        }
+    }
+
+    fn theta_len(&self) -> usize {
+        mlp_param_len(&self.actor_dims)
+    }
+
+    pub fn native_actor(&self) -> NativeMlp {
+        NativeMlp::new(self.actor_dims.clone(), self.params[..self.theta_len()].to_vec())
+    }
+
+    fn native_critic(&self) -> NativeMlp {
+        NativeMlp::new(self.critic_dims.clone(), self.params[self.theta_len()..].to_vec())
+    }
+
+    fn rollout(&self, seed: u64, admit_rate: f64) -> (Vec<Transition>, f32) {
+        let mut sched = RelmasSched::new(self.arch.clone(), self.encoder.clone(), self.native_actor())
+            .sampling(Rng::new(seed ^ 0xbeef));
+        sched.record = true;
+        let cfg = SimConfig {
+            admit_rate,
+            warmup_s: 0.0,
+            duration_s: self.cfg.episode_max_s,
+            max_images: self.cfg.max_images,
+            mix_jobs: self.cfg.jobs_per_episode,
+            seed,
+            ..SimConfig::default()
+        };
+        let mut sim = Simulator::new(&self.arch, sched, cfg);
+        sim.limit_jobs(self.cfg.jobs_per_episode);
+        let mapped: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
+        let secondary: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
+        {
+            let mapped = mapped.clone();
+            sim.on_mapped = Some(Box::new(move |job, profile| {
+                mapped.borrow_mut().insert(
+                    job.id,
+                    primary_reward(
+                        profile.ideal_exec_s(job.images),
+                        profile.ideal_dynamic_j(job.images),
+                        job.images,
+                    ),
+                );
+            }));
+            let secondary = secondary.clone();
+            sim.on_completed = Some(Box::new(move |stats| {
+                secondary.borrow_mut().insert(
+                    stats.id,
+                    secondary_reward(stats.stall_s, stats.stall_leak_j, stats.images),
+                );
+            }));
+        }
+        let (_res, mut sched) = sim.run_drain(self.cfg.episode_max_s);
+        let decisions = sched.take_decisions();
+        let mut last_of_job: HashMap<u64, usize> = HashMap::new();
+        for (i, d) in decisions.iter().enumerate() {
+            last_of_job.insert(d.job_id, i);
+        }
+        let mapped = mapped.borrow();
+        let secondary = secondary.borrow();
+        let mut rsum = 0.0f32;
+        let mut rjobs = 0usize;
+        let transitions: Vec<Transition> = decisions
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| {
+                // Balanced scalar reward in channel 0; channel 1 unused.
+                let mut reward = [0.0f32; 2];
+                if last_of_job.get(&d.job_id) == Some(&i) {
+                    let p = mapped.get(&d.job_id).copied().unwrap_or([0.0, 0.0]);
+                    let s = secondary.get(&d.job_id).copied().unwrap_or([0.0, 0.0]);
+                    reward[0] = 0.5 * (p[0] + s[0]) + 0.5 * (p[1] + s[1]);
+                    rsum += reward[0];
+                    rjobs += 1;
+                }
+                Transition {
+                    state: d.obs,
+                    mask: d.mask,
+                    action: d.action,
+                    logp: d.logp,
+                    reward,
+                }
+            })
+            .collect();
+        (transitions, if rjobs > 0 { rsum / rjobs as f32 } else { 0.0 })
+    }
+
+    pub fn train(&mut self, runtime: &mut Runtime) -> Result<Vec<f32>> {
+        let n_chiplets = self.arch.num_chiplets();
+        let obs_dim = relmas_obs_dim(n_chiplets);
+        let batch = runtime.abi.update_batch;
+        for ep in 0..self.cfg.episodes {
+            let admit = self.rng.range_f64(self.cfg.rate_range.0, self.cfg.rate_range.1);
+            let seed = self.rng.next_u64();
+            let (transitions, mean_r) = self.rollout(seed, admit);
+            if transitions.is_empty() {
+                continue;
+            }
+            self.total_env_steps += transitions.len();
+            let critic = self.native_critic();
+            let values: Vec<[f32; 2]> = transitions
+                .iter()
+                .map(|t| {
+                    let v = critic.forward(&t.state);
+                    [v[0], 0.0]
+                })
+                .collect();
+            let rewards: Vec<[f32; 2]> = transitions.iter().map(|t| t.reward).collect();
+            let (adv2, ret2) = gae(&rewards, &values, self.cfg.gamma, self.cfg.lambda);
+            let mut adv: Vec<f32> = adv2.iter().map(|a| a[0]).collect();
+            normalize(&mut adv);
+            let mut last_vl = 0.0f32;
+            for _ in 0..self.cfg.epochs {
+                for idx in minibatch_indices(transitions.len(), batch, &mut self.rng) {
+                    let mut x = Vec::with_capacity(batch * obs_dim);
+                    let mut a_onehot = vec![0.0f32; batch * n_chiplets];
+                    let mut mask = vec![0.0f32; batch * n_chiplets];
+                    let mut logp_old = Vec::with_capacity(batch);
+                    let mut advb = Vec::with_capacity(batch);
+                    let mut ret = Vec::with_capacity(batch);
+                    for (row, &i) in idx.iter().enumerate() {
+                        let t = &transitions[i];
+                        x.extend_from_slice(&t.state);
+                        a_onehot[row * n_chiplets + t.action] = 1.0;
+                        for (k, &mv) in t.mask.iter().enumerate() {
+                            mask[row * n_chiplets + k] = if mv { 1.0 } else { 0.0 };
+                        }
+                        logp_old.push(t.logp);
+                        advb.push(adv[i]);
+                        ret.push(ret2[i][0]);
+                    }
+                    let art = runtime.artifact("ppo_update_relmas")?;
+                    let out = art.run_f32(&[
+                        F32Tensor::vec(self.params.clone()),
+                        F32Tensor::vec(self.adam_m.clone()),
+                        F32Tensor::vec(self.adam_v.clone()),
+                        F32Tensor::scalar1(self.adam_t),
+                        F32Tensor::mat(x, batch, obs_dim),
+                        F32Tensor::mat(a_onehot, batch, n_chiplets),
+                        F32Tensor::mat(mask, batch, n_chiplets),
+                        F32Tensor::vec(logp_old),
+                        F32Tensor::vec(advb),
+                        F32Tensor::mat(ret, batch, 1),
+                    ])?;
+                    self.params = out[0].clone();
+                    self.adam_m = out[1].clone();
+                    self.adam_v = out[2].clone();
+                    self.adam_t = out[3][0];
+                    last_vl = out[5][0];
+                }
+            }
+            self.log.push((self.total_env_steps, last_vl, mean_r));
+            eprintln!(
+                "[relmas {}] ep {ep:>3} steps {:>7} val {:.4} R {:+.3}",
+                self.cfg.noi.name(),
+                self.total_env_steps,
+                last_vl,
+                mean_r
+            );
+        }
+        Ok(self.params.clone())
+    }
+}

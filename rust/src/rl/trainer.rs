@@ -1,0 +1,416 @@
+//! The THERMOS MORL trainer: three parallel preference environments
+//! (ω = [1,0], [0.5,0.5], [0,1]) roll out the *same* policy parameters,
+//! their vector-reward trajectories are pooled, and a single
+//! preference-conditioned actor-critic is updated through the AOT
+//! `ppo_update_thermos` artifact (§4.3.2, Fig. 3b).
+
+use super::{gae, minibatch_indices, normalize, primary_reward, secondary_reward, Transition};
+use crate::arch::Arch;
+use crate::noi::NoiTopology;
+use crate::runtime::{F32Tensor, Runtime};
+use crate::sched::policy::{NativeDdt, NativeMlp};
+use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use crate::sched::thermos::{Preference, ThermosSched, PREF_BALANCED, PREF_ENERGY, PREF_EXEC_TIME};
+use crate::sim::{SimConfig, Simulator};
+use crate::util::rng::Rng;
+use crate::workload::ModelZoo;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub noi: NoiTopology,
+    /// Episodes; each runs the three preference environments.
+    pub episodes: usize,
+    pub jobs_per_episode: usize,
+    pub max_images: u64,
+    /// PPO epochs over each episode's pooled transitions.
+    pub epochs: usize,
+    pub gamma: f32,
+    pub lambda: f32,
+    pub seed: u64,
+    /// Wall-clock cap per episode (sim seconds).
+    pub episode_max_s: f64,
+    /// Admit-rate range sampled per episode ("randomly selected target
+    /// throughput", §4.3.2).
+    pub rate_range: (f64, f64),
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            noi: NoiTopology::Mesh,
+            episodes: 40,
+            jobs_per_episode: 60,
+            max_images: 4_000,
+            epochs: 4,
+            gamma: 0.95,
+            lambda: 0.95,
+            seed: 7,
+            episode_max_s: 400.0,
+            rate_range: (0.8, 6.0),
+        }
+    }
+}
+
+/// One policy-update-cycle log row (Fig. 6 feeds on `value_loss`).
+#[derive(Clone, Debug)]
+pub struct TrainLogEntry {
+    pub update: usize,
+    pub env_steps: usize,
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+    /// Mean undiscounted episode reward per preference env
+    /// ([exec, balanced, energy]).
+    pub episode_reward: [f32; 3],
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub arch: Arch,
+    #[allow(dead_code)]
+    zoo: ModelZoo,
+    encoder: StateEncoder,
+    /// Flat [θ | φ].
+    pub params: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    adam_t: f32,
+    pub log: Vec<TrainLogEntry>,
+    pub total_env_steps: usize,
+    rng: Rng,
+}
+
+pub const PREFS: [Preference; 3] = [PREF_EXEC_TIME, PREF_BALANCED, PREF_ENERGY];
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Trainer {
+        let arch = Arch::paper_heterogeneous(cfg.noi);
+        let zoo = ModelZoo::new();
+        let encoder = StateEncoder::new(&arch, &zoo, cfg.max_images);
+        let mut rng = Rng::new(cfg.seed);
+        let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+        let critic = NativeMlp::init(vec![STATE_DIM, 64, 64, 64, 2], &mut rng);
+        let mut params = ddt.theta;
+        params.extend_from_slice(&critic.params);
+        let n = params.len();
+        Trainer {
+            cfg,
+            arch,
+            zoo,
+            encoder,
+            params,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            adam_t: 0.0,
+            log: Vec::new(),
+            total_env_steps: 0,
+            rng,
+        }
+    }
+
+    fn theta_len(&self) -> usize {
+        crate::sched::policy::ddt_theta_len(STATE_DIM, NUM_CLUSTERS)
+    }
+
+    fn native_policy(&self) -> NativeDdt {
+        NativeDdt::new(STATE_DIM, NUM_CLUSTERS, self.params[..self.theta_len()].to_vec())
+    }
+
+    fn native_critic(&self) -> NativeMlp {
+        NativeMlp::new(vec![STATE_DIM, 64, 64, 64, 2], self.params[self.theta_len()..].to_vec())
+    }
+
+    /// Roll out one environment with preference ω; returns transitions
+    /// (vector rewards attached per §4.3.3) and the mean per-job reward.
+    pub fn rollout(&self, omega: Preference, seed: u64, admit_rate: f64) -> (Vec<Transition>, f32) {
+        let sched = ThermosSched::new(
+            self.arch.clone(),
+            self.encoder.clone(),
+            self.native_policy(),
+            omega,
+        )
+        .sampling(Rng::new(seed ^ 0x5eed))
+        .recording();
+
+        let cfg = SimConfig {
+            admit_rate,
+            warmup_s: 0.0,
+            duration_s: self.cfg.episode_max_s,
+            max_images: self.cfg.max_images,
+            mix_jobs: self.cfg.jobs_per_episode,
+            seed,
+            ..SimConfig::default()
+        };
+        let mut sim = Simulator::new(&self.arch, sched, cfg);
+        sim.limit_jobs(self.cfg.jobs_per_episode);
+
+        // Primary rewards become known at mapping; secondary at completion.
+        let mapped: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
+        let secondary: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
+        {
+            let mapped = mapped.clone();
+            sim.on_mapped = Some(Box::new(move |job, profile| {
+                mapped.borrow_mut().insert(
+                    job.id,
+                    primary_reward(
+                        profile.ideal_exec_s(job.images),
+                        profile.ideal_dynamic_j(job.images),
+                        job.images,
+                    ),
+                );
+            }));
+            let secondary = secondary.clone();
+            sim.on_completed = Some(Box::new(move |stats| {
+                secondary
+                    .borrow_mut()
+                    .insert(stats.id, secondary_reward(stats.stall_s, stats.stall_leak_j, stats.images));
+            }));
+        }
+        let (_result, mut sched) = sim.run_drain(self.cfg.episode_max_s);
+        let decisions = sched.take_decisions();
+
+        // Last decision index per job.
+        let mut last_of_job: HashMap<u64, usize> = HashMap::new();
+        for (i, d) in decisions.iter().enumerate() {
+            last_of_job.insert(d.job_id, i);
+        }
+        let mapped = mapped.borrow();
+        let secondary = secondary.borrow();
+        let mut reward_sum = 0.0f32;
+        let mut reward_jobs = 0usize;
+        let transitions: Vec<Transition> = decisions
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut reward = [0.0f32; 2];
+                if last_of_job.get(&d.job_id) == Some(&i) {
+                    if let Some(p) = mapped.get(&d.job_id) {
+                        reward[0] += p[0];
+                        reward[1] += p[1];
+                    }
+                    if let Some(s) = secondary.get(&d.job_id) {
+                        reward[0] += s[0];
+                        reward[1] += s[1];
+                    }
+                    reward_sum += omega[0] * reward[0] + omega[1] * reward[1];
+                    reward_jobs += 1;
+                }
+                Transition {
+                    state: d.state,
+                    mask: d.mask.to_vec(),
+                    action: d.action,
+                    logp: d.logp,
+                    reward,
+                }
+            })
+            .collect();
+        let mean_reward = if reward_jobs > 0 { reward_sum / reward_jobs as f32 } else { 0.0 };
+        (transitions, mean_reward)
+    }
+
+    /// One episode: the three preference environments in parallel threads
+    /// (§4.3.2 "multi-threading to run all three preferences in parallel"),
+    /// then PPO epochs through the AOT update artifact.
+    pub fn episode(&mut self, runtime: &mut Runtime, ep: usize) -> Result<()> {
+        let admit_rate = self.rng.range_f64(self.cfg.rate_range.0, self.cfg.rate_range.1);
+        let base_seed = self.rng.next_u64();
+
+        let rollouts: Vec<(Vec<Transition>, f32, Preference)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = PREFS
+                .iter()
+                .enumerate()
+                .map(|(i, &omega)| {
+                    let tr: &Trainer = &*self;
+                    scope.spawn(move || {
+                        let (t, r) = tr.rollout(omega, base_seed ^ (i as u64 + 1), admit_rate);
+                        (t, r, omega)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rollout thread panicked")).collect()
+        });
+
+        // Per-env GAE with the current critic, scalarized by each env's ω.
+        let critic = self.native_critic();
+        let mut pool: Vec<(Transition, f32, [f32; 2])> = Vec::new(); // (tr, adv_scalar, ret)
+        let mut episode_reward = [0.0f32; 3];
+        for (ei, (transitions, mean_r, omega)) in rollouts.into_iter().enumerate() {
+            episode_reward[ei] = mean_r;
+            if transitions.is_empty() {
+                continue;
+            }
+            let values: Vec<[f32; 2]> = transitions
+                .iter()
+                .map(|t| {
+                    let v = critic.forward(&t.state);
+                    [v[0], v[1]]
+                })
+                .collect();
+            let rewards: Vec<[f32; 2]> = transitions.iter().map(|t| t.reward).collect();
+            let (adv, ret) = gae(&rewards, &values, self.cfg.gamma, self.cfg.lambda);
+            for ((tr, a), r) in transitions.into_iter().zip(adv).zip(ret) {
+                let scalar = omega[0] * a[0] + omega[1] * a[1];
+                pool.push((tr, scalar, r));
+            }
+        }
+        if pool.is_empty() {
+            return Ok(());
+        }
+        self.total_env_steps += pool.len();
+
+        // Advantage normalization across the pooled batch.
+        let mut advs: Vec<f32> = pool.iter().map(|p| p.1).collect();
+        normalize(&mut advs);
+        for (p, a) in pool.iter_mut().zip(&advs) {
+            p.1 = *a;
+        }
+
+        // PPO epochs through the AOT update graph.
+        let batch = runtime.abi.update_batch;
+        let mut last = (0.0f32, 0.0f32, 0.0f32);
+        for _ in 0..self.cfg.epochs {
+            let batches = minibatch_indices(pool.len(), batch, &mut self.rng);
+            for idx in batches {
+                let mut x = Vec::with_capacity(batch * STATE_DIM);
+                let mut a_onehot = vec![0.0f32; batch * NUM_CLUSTERS];
+                let mut mask = vec![0.0f32; batch * NUM_CLUSTERS];
+                let mut logp_old = Vec::with_capacity(batch);
+                let mut adv = Vec::with_capacity(batch);
+                let mut ret = Vec::with_capacity(batch * 2);
+                for (row, &i) in idx.iter().enumerate() {
+                    let (tr, a, r) = &pool[i];
+                    x.extend_from_slice(&tr.state);
+                    a_onehot[row * NUM_CLUSTERS + tr.action] = 1.0;
+                    for (k, &mv) in tr.mask.iter().enumerate() {
+                        mask[row * NUM_CLUSTERS + k] = if mv { 1.0 } else { 0.0 };
+                    }
+                    logp_old.push(tr.logp);
+                    adv.push(*a);
+                    ret.extend_from_slice(r);
+                }
+                let art = runtime.artifact("ppo_update_thermos")?;
+                let out = art.run_f32(&[
+                    F32Tensor::vec(self.params.clone()),
+                    F32Tensor::vec(self.adam_m.clone()),
+                    F32Tensor::vec(self.adam_v.clone()),
+                    F32Tensor::scalar1(self.adam_t),
+                    F32Tensor::mat(x, batch, STATE_DIM),
+                    F32Tensor::mat(a_onehot, batch, NUM_CLUSTERS),
+                    F32Tensor::mat(mask, batch, NUM_CLUSTERS),
+                    F32Tensor::vec(logp_old),
+                    F32Tensor::vec(adv),
+                    F32Tensor::mat(ret, batch, 2),
+                ])?;
+                self.params = out[0].clone();
+                self.adam_m = out[1].clone();
+                self.adam_v = out[2].clone();
+                self.adam_t = out[3][0];
+                last = (out[4][0], out[5][0], out[6][0]);
+            }
+        }
+        self.log.push(TrainLogEntry {
+            update: ep,
+            env_steps: self.total_env_steps,
+            policy_loss: last.0,
+            value_loss: last.1,
+            entropy: last.2,
+            episode_reward,
+        });
+        Ok(())
+    }
+
+    /// Full training run; returns the trained flat parameters.
+    pub fn train(&mut self, runtime: &mut Runtime) -> Result<Vec<f32>> {
+        for ep in 0..self.cfg.episodes {
+            self.episode(runtime, ep)?;
+            if let Some(e) = self.log.last() {
+                eprintln!(
+                    "[train {}] ep {ep:>3} steps {:>7} pol {:+.4} val {:.4} ent {:.3} R[exec {:+.3} bal {:+.3} energy {:+.3}]",
+                    self.cfg.noi.name(),
+                    e.env_steps,
+                    e.policy_loss,
+                    e.value_loss,
+                    e.entropy,
+                    e.episode_reward[0],
+                    e.episode_reward[1],
+                    e.episode_reward[2],
+                );
+            }
+        }
+        Ok(self.params.clone())
+    }
+
+    /// Write the Fig. 6 value-loss curve as CSV.
+    pub fn write_log_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut s = String::from(
+            "update,env_steps,policy_loss,value_loss,entropy,r_exec,r_balanced,r_energy\n",
+        );
+        for e in &self.log {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                e.update,
+                e.env_steps,
+                e.policy_loss,
+                e.value_loss,
+                e.entropy,
+                e.episode_reward[0],
+                e.episode_reward[1],
+                e.episode_reward[2]
+            ));
+        }
+        std::fs::write(path, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollout_produces_consistent_transitions() {
+        let cfg = TrainConfig {
+            jobs_per_episode: 6,
+            max_images: 300,
+            episode_max_s: 120.0,
+            ..TrainConfig::default()
+        };
+        let tr = Trainer::new(cfg);
+        let (ts, _r) = tr.rollout(PREF_BALANCED, 3, 2.0);
+        assert!(!ts.is_empty());
+        // Rewards are attached only at job-final decisions and are ≤ 0.
+        let nonzero = ts.iter().filter(|t| t.reward != [0.0, 0.0]).count();
+        assert!(nonzero >= 1);
+        assert!(nonzero <= 6, "at most one rewarded step per job");
+        for t in &ts {
+            assert_eq!(t.state.len(), STATE_DIM);
+            assert!(t.mask[t.action], "recorded action must be valid");
+            assert!(t.reward[0] <= 0.0 && t.reward[1] <= 0.0);
+            // ω embedded in the state.
+            assert_eq!(t.state[20], 0.5);
+        }
+    }
+
+    #[test]
+    fn preference_environments_differ_only_in_omega() {
+        let cfg = TrainConfig {
+            jobs_per_episode: 3,
+            max_images: 200,
+            episode_max_s: 60.0,
+            ..TrainConfig::default()
+        };
+        let tr = Trainer::new(cfg);
+        let (t_exec, _) = tr.rollout(PREF_EXEC_TIME, 9, 1.5);
+        let (t_energy, _) = tr.rollout(PREF_ENERGY, 9, 1.5);
+        assert_eq!(t_exec[0].state[20], 1.0);
+        assert_eq!(t_energy[0].state[20], 0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Reader for `artifacts/abi.json` — the dimension/layout contract the
+//! python AOT exporter pins so the rust coordinator and the HLO artifacts
+//! can never drift. Every integration test that touches the artifacts
+//! asserts these against the rust-side constants.
+
+use crate::util::json::{Json, JsonError};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Abi {
+    pub state_dim: usize,
+    pub num_clusters: usize,
+    pub ddt_depth: usize,
+    pub theta_len: usize,
+    pub phi_len: usize,
+    pub critic_dims: Vec<usize>,
+    pub update_batch: usize,
+    pub num_chiplets: usize,
+    pub relmas_obs: usize,
+    pub relmas_actor_dims: Vec<usize>,
+    pub relmas_critic_dims: Vec<usize>,
+    pub relmas_theta_len: usize,
+    pub relmas_phi_len: usize,
+    pub lr: f64,
+    pub clip_eps: f64,
+    /// Artifact name → file name.
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl Abi {
+    pub fn params_len(&self) -> usize {
+        self.theta_len + self.phi_len
+    }
+    pub fn relmas_params_len(&self) -> usize {
+        self.relmas_theta_len + self.relmas_phi_len
+    }
+
+    pub fn load(dir: &Path) -> Result<Abi, JsonError> {
+        let path = dir.join("abi.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| JsonError(format!("read {}: {e}", path.display())))?;
+        let root = Json::parse(&text)?;
+        Self::from_json(&root)
+    }
+
+    pub fn from_json(root: &Json) -> Result<Abi, JsonError> {
+        let abi = root.get("abi");
+        let dims = |key: &str| -> Result<Vec<usize>, JsonError> {
+            abi.get(key)
+                .as_arr()
+                .ok_or_else(|| JsonError(format!("missing array `{key}`")))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| JsonError(format!("bad dim in `{key}`"))))
+                .collect()
+        };
+        let mut artifacts = Vec::new();
+        if let Some(arts) = root.get("artifacts").as_obj() {
+            for (name, desc) in arts {
+                artifacts.push((name.clone(), desc.req_str("file")?.to_string()));
+            }
+        }
+        Ok(Abi {
+            state_dim: abi.req_usize("state_dim")?,
+            num_clusters: abi.req_usize("num_clusters")?,
+            ddt_depth: abi.req_usize("ddt_depth")?,
+            theta_len: abi.req_usize("theta_len")?,
+            phi_len: abi.req_usize("phi_len")?,
+            critic_dims: dims("critic_dims")?,
+            update_batch: abi.req_usize("update_batch")?,
+            num_chiplets: abi.req_usize("num_chiplets")?,
+            relmas_obs: abi.req_usize("relmas_obs")?,
+            relmas_actor_dims: dims("relmas_actor_dims")?,
+            relmas_critic_dims: dims("relmas_critic_dims")?,
+            relmas_theta_len: abi.req_usize("relmas_theta_len")?,
+            relmas_phi_len: abi.req_usize("relmas_phi_len")?,
+            lr: abi.req_f64("lr")?,
+            clip_eps: abi.req_f64("clip_eps")?,
+            artifacts,
+        })
+    }
+
+    /// Assert the ABI matches the rust-side compile-time constants.
+    pub fn validate(&self) -> Result<(), String> {
+        use crate::sched::policy::{ddt_theta_len, mlp_param_len};
+        use crate::sched::state::{NUM_CLUSTERS, STATE_DIM};
+        if self.state_dim != STATE_DIM {
+            return Err(format!("state_dim {} != rust {}", self.state_dim, STATE_DIM));
+        }
+        if self.num_clusters != NUM_CLUSTERS {
+            return Err(format!("num_clusters {} != rust {}", self.num_clusters, NUM_CLUSTERS));
+        }
+        let want_theta = ddt_theta_len(self.state_dim, self.num_clusters);
+        if self.theta_len != want_theta {
+            return Err(format!("theta_len {} != rust {}", self.theta_len, want_theta));
+        }
+        let want_phi = mlp_param_len(&self.critic_dims);
+        if self.phi_len != want_phi {
+            return Err(format!("phi_len {} != rust {}", self.phi_len, want_phi));
+        }
+        let want_rt = mlp_param_len(&self.relmas_actor_dims);
+        if self.relmas_theta_len != want_rt {
+            return Err(format!("relmas_theta_len {} != {}", self.relmas_theta_len, want_rt));
+        }
+        let want_rp = mlp_param_len(&self.relmas_critic_dims);
+        if self.relmas_phi_len != want_rp {
+            return Err(format!("relmas_phi_len {} != {}", self.relmas_phi_len, want_rp));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "abi": {
+        "state_dim": 22, "num_clusters": 4, "ddt_depth": 5,
+        "theta_len": 872, "phi_len": 9922,
+        "critic_dims": [22, 64, 64, 64, 2], "update_batch": 256,
+        "num_chiplets": 78, "relmas_obs": 168,
+        "relmas_actor_dims": [168, 128, 128, 78],
+        "relmas_critic_dims": [168, 128, 128, 1],
+        "relmas_theta_len": 48206, "relmas_phi_len": 38273,
+        "lr": 0.0005, "clip_eps": 0.1
+      },
+      "artifacts": {"ddt_policy": {"file": "ddt_policy.hlo.txt"}}
+    }"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let abi = Abi::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(abi.theta_len, 872);
+        assert_eq!(abi.params_len(), 872 + 9922);
+        abi.validate().expect("abi should match rust constants");
+        assert_eq!(abi.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn validation_catches_drift() {
+        let mut j = Json::parse(SAMPLE).unwrap();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(abi)) = m.get_mut("abi") {
+                abi.insert("theta_len".into(), Json::Num(900.0));
+            }
+        }
+        let abi = Abi::from_json(&j).unwrap();
+        assert!(abi.validate().is_err());
+    }
+}

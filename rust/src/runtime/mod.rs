@@ -1,0 +1,250 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the CPU PJRT client via the `xla` crate.
+//!
+//! This is the only place the coordinator touches XLA. Python never runs
+//! here — `make artifacts` produced the `.hlo.txt` files once at build
+//! time; after that the rust binary is self-contained.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`, with
+//! `return_tuple=True` on the python side so every artifact yields one
+//! tuple literal we decompose.
+
+pub mod abi;
+
+pub use abi::Abi;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with f32 tensor inputs; returns the flattened f32 outputs
+    /// (one Vec per tuple element).
+    pub fn run_f32(&self, inputs: &[F32Tensor]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        let elems = tuple.to_tuple().context("decompose result tuple")?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("read f32 output"))
+            .collect()
+    }
+}
+
+/// Shape-carrying f32 buffer for artifact I/O.
+#[derive(Clone, Debug)]
+pub struct F32Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl F32Tensor {
+    pub fn vec(data: Vec<f32>) -> F32Tensor {
+        let dims = vec![data.len() as i64];
+        F32Tensor { data, dims }
+    }
+    pub fn mat(data: Vec<f32>, rows: usize, cols: usize) -> F32Tensor {
+        assert_eq!(data.len(), rows * cols);
+        F32Tensor { data, dims: vec![rows as i64, cols as i64] }
+    }
+    pub fn scalar1(v: f32) -> F32Tensor {
+        F32Tensor { data: vec![v], dims: vec![1] }
+    }
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&self.dims)?)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus lazily compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub abi: Abi,
+    cache: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (validating abi.json against the rust constants)
+    /// and create the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let abi = Abi::load(&dir)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .context("load abi.json — run `make artifacts` first")?;
+        abi.validate().map_err(|e| anyhow::anyhow!("abi drift: {e}"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, dir, abi, cache: HashMap::new() })
+    }
+
+    /// Default artifacts directory: $THERMOS_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("THERMOS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn artifact(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            self.cache.insert(name.to_string(), Artifact { name: name.to_string(), exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Save/load flat f32 parameter vectors (trained policies) as little-endian
+/// binary with a tiny header. Used by `thermos train` / `thermos sim`.
+pub mod params_io {
+    use anyhow::{bail, Context, Result};
+    use std::io::{Read, Write};
+    use std::path::Path;
+
+    const MAGIC: &[u8; 8] = b"THERMOS1";
+
+    pub fn save(path: impl AsRef<Path>, params: &[f32]) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(params.len() as u64).to_le_bytes())?;
+        let bytes: Vec<u8> = params.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a THERMOS params file", path.as_ref().display());
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let len = u64::from_le_bytes(lenb) as usize;
+        let mut bytes = vec![0u8; len * 4];
+        f.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn roundtrip() {
+            let dir = std::env::temp_dir().join("thermos_params_test");
+            let path = dir.join("p.bin");
+            let params: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+            save(&path, &params).unwrap();
+            let back = load(&path).unwrap();
+            assert_eq!(params, back);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+
+        #[test]
+        fn rejects_garbage() {
+            let dir = std::env::temp_dir().join("thermos_params_test2");
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("bad.bin");
+            std::fs::write(&path, b"not a params file").unwrap();
+            assert!(load(&path).is_err());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// A [`crate::sched::policy::PolicyEval`] backed by a PJRT artifact —
+/// the canonical runtime integration for the B=1 scheduling hot path.
+/// Owns its own `Runtime` to keep lifetimes simple at call sites.
+pub struct PjrtPolicy {
+    runtime: Runtime,
+    name: String,
+    in_dim: usize,
+    out_dim: usize,
+    pub theta: Vec<f32>,
+}
+
+impl PjrtPolicy {
+    pub fn new(
+        mut runtime: Runtime,
+        name: &str,
+        in_dim: usize,
+        out_dim: usize,
+        theta: Vec<f32>,
+    ) -> Result<PjrtPolicy> {
+        runtime.artifact(name)?; // pre-compile
+        Ok(PjrtPolicy { runtime, name: name.to_string(), in_dim, out_dim, theta })
+    }
+
+    /// THERMOS DDT policy from the default artifacts + a params file
+    /// (theta is the first `theta_len` entries of the flat param vector).
+    pub fn thermos_from_params(runtime: Runtime, params: &[f32]) -> Result<PjrtPolicy> {
+        let abi = runtime.abi.clone();
+        anyhow::ensure!(
+            params.len() == abi.params_len() || params.len() == abi.theta_len,
+            "params length {} matches neither theta ({}) nor theta+phi ({})",
+            params.len(),
+            abi.theta_len,
+            abi.params_len()
+        );
+        let theta = params[..abi.theta_len].to_vec();
+        Self::new(runtime, "ddt_policy", abi.state_dim, abi.num_clusters, theta)
+    }
+}
+
+impl crate::sched::policy::PolicyEval for PjrtPolicy {
+    fn num_actions(&self) -> usize {
+        self.out_dim
+    }
+    fn logits(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim);
+        let theta = std::mem::take(&mut self.theta);
+        let art = self.runtime.artifact(&self.name).expect("artifact vanished");
+        let out = art
+            .run_f32(&[
+                F32Tensor::vec(theta.clone()),
+                F32Tensor::mat(x.to_vec(), 1, self.in_dim),
+            ])
+            .expect("policy artifact execution failed");
+        self.theta = theta;
+        assert_eq!(out[0].len(), self.out_dim);
+        out[0].clone()
+    }
+}

@@ -1,0 +1,156 @@
+//! Big-Little baseline scheduler [32], adapted from chiplet-size
+//! heterogeneity to the four PIM-type clusters (as the paper does in
+//! §5.2): early layers — which have fewer weights — go to "little"
+//! clusters (small per-chiplet crossbar capacity), later layers to "big"
+//! ones; within a cluster, chiplets are filled by *highest crossbar
+//! utilization first* (the Big-Little selection rule), with no proximity
+//! awareness.
+
+use super::{fill_chiplets, Scheduler, SysSnapshot};
+use crate::arch::{Arch, NUM_PIM_TYPES};
+use crate::sim::mapping::{LayerAssignment, Mapping};
+use crate::workload::Job;
+
+pub struct BigLittleSched {
+    arch: Arch,
+    /// Cluster indices ordered little → big by per-chiplet capacity.
+    size_order: Vec<usize>,
+}
+
+impl BigLittleSched {
+    pub fn new(arch: Arch) -> BigLittleSched {
+        let mut size_order: Vec<usize> = (0..NUM_PIM_TYPES).collect();
+        size_order.sort_by_key(|&cl| arch.specs[cl].mem_bits);
+        BigLittleSched { arch, size_order }
+    }
+
+    /// Cluster choice: the "littlest" cluster whose *free* memory can
+    /// still hold the layer; if none fits entirely, the biggest cluster
+    /// with any free memory (tiling continues into the next cluster).
+    fn pick_cluster(&self, snap: &SysSnapshot, free: &[u64], need: u64) -> Option<usize> {
+        for &cl in &self.size_order {
+            let cluster_free: u64 = self.arch.clusters[cl].iter().map(|&c| free[c]).sum();
+            let usable = self.arch.clusters[cl]
+                .iter()
+                .any(|&c| free[c] > 0 && !snap.throttled[c]);
+            if usable && cluster_free >= need {
+                return Some(cl);
+            }
+        }
+        // Fall back: biggest cluster with any unthrottled free chiplet.
+        self.size_order
+            .iter()
+            .rev()
+            .copied()
+            .find(|&cl| {
+                self.arch.clusters[cl].iter().any(|&c| free[c] > 0 && !snap.throttled[c])
+            })
+    }
+}
+
+impl Scheduler for BigLittleSched {
+    fn name(&self) -> &'static str {
+        "big_little"
+    }
+
+    fn schedule(&mut self, job: &Job, snap: &SysSnapshot) -> Option<Mapping> {
+        if job.dcg.total_weight_bits() > snap.total_free() {
+            return None;
+        }
+        let mut free = snap.free_bits.clone();
+        let mut layers = Vec::with_capacity(job.dcg.num_layers());
+        for layer in &job.dcg.layers {
+            let mut need = layer.weight_bits;
+            let mut parts: Vec<(usize, u64)> = Vec::new();
+            let mut guard = 0;
+            while need > 0 {
+                guard += 1;
+                if guard > 2 * NUM_PIM_TYPES + 2 {
+                    return None;
+                }
+                let cl = self.pick_cluster(snap, &free, need)?;
+                // Highest-utilization-first within the cluster.
+                let cap = self.arch.specs[cl].mem_bits;
+                let mut cands: Vec<usize> = self.arch.clusters[cl]
+                    .iter()
+                    .copied()
+                    .filter(|&c| free[c] > 0 && !snap.throttled[c])
+                    .collect();
+                cands.sort_by(|&a, &b| {
+                    let ua = cap - free[a]; // used bits
+                    let ub = cap - free[b];
+                    ub.cmp(&ua).then(a.cmp(&b))
+                });
+                let placed = fill_chiplets(&cands, &mut free, need);
+                let got: u64 = placed.iter().map(|&(_, b)| b).sum();
+                if got == 0 {
+                    return None;
+                }
+                need -= got;
+                parts.extend(placed);
+            }
+            layers.push(LayerAssignment { parts });
+        }
+        Some(Mapping { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PimType;
+    use crate::noi::NoiTopology;
+    use crate::workload::{DnnModel, ModelZoo};
+
+    fn job(m: DnnModel) -> Job {
+        let zoo = ModelZoo::new();
+        Job { id: 0, dcg: zoo.dcg(m), images: 100, arrival_s: 0.0 }
+    }
+
+    #[test]
+    fn early_small_layers_go_little() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let mut s = BigLittleSched::new(arch.clone());
+        let j = job(DnnModel::ResNet18);
+        let m = s.schedule(&j, &snap).unwrap();
+        // The first layer (9.4k params) fits the ADC-less (littlest)
+        // cluster entirely.
+        let first_cluster = arch.chiplets[m.layers[0].parts[0].0].pim;
+        assert_eq!(first_cluster, PimType::AdcLess);
+        // All layers complete.
+        for (i, la) in m.layers.iter().enumerate() {
+            assert_eq!(la.total_bits(), j.dcg.layers[i].weight_bits, "layer {i}");
+        }
+    }
+
+    #[test]
+    fn packs_by_utilization() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let mut s = BigLittleSched::new(arch.clone());
+        let j = job(DnnModel::MobileNetV3Large);
+        let m = s.schedule(&j, &snap).unwrap();
+        // Big-Little concentrates weights: the number of distinct chiplets
+        // used should be near the theoretical minimum for the model
+        // (MobileNet overflows the 15-chiplet ADC-less cluster, so ~16 is
+        // the tight packing).
+        let used = m.chiplets_used().len();
+        assert!(used <= 18, "big-little should pack tightly, used {used}");
+    }
+
+    #[test]
+    fn big_layers_go_big_clusters() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let mut s = BigLittleSched::new(arch.clone());
+        let j = job(DnnModel::AlexNet);
+        let m = s.schedule(&j, &snap).unwrap();
+        // AlexNet fc6 (≈300 Mb) cannot fit the little clusters; its parts
+        // must land on big clusters (accumulator / shared-ADC / standard).
+        let fc6 = j.dcg.layers.iter().position(|l| l.name == "fc6").unwrap();
+        for &(c, _) in &m.layers[fc6].parts {
+            assert_ne!(arch.chiplets[c].pim, PimType::AdcLess);
+        }
+    }
+}

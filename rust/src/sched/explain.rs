@@ -1,0 +1,209 @@
+//! DDT explainability (§4.3.1): the paper motivates the differentiable
+//! decision tree over a neural policy because it is *explainable* — each
+//! internal node is a linear test over named state features and each leaf
+//! is an action distribution. This module renders a trained tree in
+//! human-readable form (`thermos explain`).
+
+use super::policy::{NativeDdt, DDT_INTERNAL, DDT_LEAVES};
+use super::state::{NUM_CLUSTERS, STATE_DIM};
+use std::fmt::Write as _;
+
+/// Names of the 22 state-vector components (§4.2.1 order — must match
+/// `StateEncoder::encode`).
+pub const FEATURE_NAMES: [&str; STATE_DIM] = [
+    "layer.weights",
+    "layer.macs",
+    "layer.in_activations",
+    "workload.layers_left",
+    "workload.weights_left",
+    "workload.macs_left",
+    "workload.act_left",
+    "workload.images",
+    "free_mem.standard",
+    "free_mem.shared_adc",
+    "free_mem.accumulator",
+    "free_mem.adc_less",
+    "thermal_headroom.standard",
+    "thermal_headroom.shared_adc",
+    "thermal_headroom.accumulator",
+    "thermal_headroom.adc_less",
+    "prev_placement.standard",
+    "prev_placement.shared_adc",
+    "prev_placement.accumulator",
+    "prev_placement.adc_less",
+    "omega.exec_time",
+    "omega.energy",
+];
+
+pub const CLUSTER_NAMES: [&str; NUM_CLUSTERS] =
+    ["standard", "shared_adc", "accumulator", "adc_less"];
+
+/// Per-node summary: the k most influential features and the routing
+/// steepness.
+#[derive(Clone, Debug)]
+pub struct NodeSummary {
+    pub index: usize,
+    pub depth: usize,
+    pub bias: f32,
+    pub beta: f32,
+    /// (feature name, weight), ordered by |weight| descending.
+    pub top_features: Vec<(&'static str, f32)>,
+}
+
+/// Summarize every internal node of a DDT.
+pub fn summarize_nodes(ddt: &NativeDdt, top_k: usize) -> Vec<NodeSummary> {
+    assert_eq!(ddt.state_dim, STATE_DIM);
+    let d = ddt.state_dim;
+    let w = &ddt.theta[..DDT_INTERNAL * d];
+    let b = &ddt.theta[DDT_INTERNAL * d..DDT_INTERNAL * (d + 1)];
+    let beta = &ddt.theta[DDT_INTERNAL * (d + 1)..DDT_INTERNAL * (d + 2)];
+    (0..DDT_INTERNAL)
+        .map(|j| {
+            let row = &w[j * d..(j + 1) * d];
+            let mut feats: Vec<(&'static str, f32)> =
+                FEATURE_NAMES.iter().zip(row).map(|(&n, &v)| (n, v)).collect();
+            feats.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+            feats.truncate(top_k);
+            NodeSummary {
+                index: j,
+                depth: (j + 1).ilog2() as usize,
+                bias: b[j],
+                beta: beta[j],
+                top_features: feats,
+            }
+        })
+        .collect()
+}
+
+/// Leaf action distributions (softmax of leaf logits, unmasked).
+pub fn leaf_distributions(ddt: &NativeDdt) -> Vec<[f32; NUM_CLUSTERS]> {
+    let d = ddt.state_dim;
+    let leaves = &ddt.theta[DDT_INTERNAL * (d + 2)..];
+    (0..DDT_LEAVES)
+        .map(|l| {
+            let row = &leaves[l * NUM_CLUSTERS..(l + 1) * NUM_CLUSTERS];
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&x| (x - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            let mut out = [0.0f32; NUM_CLUSTERS];
+            for (o, e) in out.iter_mut().zip(exps) {
+                *o = e / sum;
+            }
+            out
+        })
+        .collect()
+}
+
+/// Render the full explanation report.
+pub fn render(ddt: &NativeDdt, top_k: usize) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "DDT policy: depth {}, {} internal nodes, {} leaves, {} parameters",
+        (DDT_INTERNAL + 1).ilog2(),
+        DDT_INTERNAL,
+        DDT_LEAVES,
+        ddt.theta.len()
+    );
+    let _ = writeln!(s, "\nInternal nodes (σ(β·(w·s + b)); left branch taken when the test fires):");
+    for n in summarize_nodes(ddt, top_k) {
+        let feats: Vec<String> = n
+            .top_features
+            .iter()
+            .map(|(name, v)| format!("{v:+.3}·{name}"))
+            .collect();
+        let _ = writeln!(
+            s,
+            "  {:indent$}node {:>2} (β={:+.2}, b={:+.2}): {}",
+            "",
+            n.index,
+            n.beta,
+            n.bias,
+            feats.join("  "),
+            indent = 2 * n.depth
+        );
+    }
+    let _ = writeln!(s, "\nLeaf action distributions (softmax over cluster logits):");
+    for (l, dist) in leaf_distributions(ddt).iter().enumerate() {
+        let best = dist
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let cells: Vec<String> = CLUSTER_NAMES
+            .iter()
+            .zip(dist)
+            .map(|(n, p)| format!("{n} {:>4.1}%", p * 100.0))
+            .collect();
+        let _ = writeln!(s, "  leaf {:>2}: {}  → {}", l, cells.join("  "), CLUSTER_NAMES[best.0]);
+    }
+    // Aggregate feature importance: Σ_nodes |w_f| (a standard linear-tree
+    // saliency measure).
+    let d = ddt.state_dim;
+    let w = &ddt.theta[..DDT_INTERNAL * d];
+    let mut importance: Vec<(&'static str, f32)> = FEATURE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(f, &name)| {
+            let total: f32 = (0..DDT_INTERNAL).map(|j| w[j * d + f].abs()).sum();
+            (name, total)
+        })
+        .collect();
+    importance.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let max = importance[0].1.max(1e-9);
+    let _ = writeln!(s, "\nAggregate feature importance (Σ|w| across nodes):");
+    for (name, v) in importance {
+        let bar = "#".repeat(((v / max) * 40.0).round() as usize);
+        let _ = writeln!(s, "  {name:<28} {v:>7.3} |{bar}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ddt() -> NativeDdt {
+        NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut Rng::new(3))
+    }
+
+    #[test]
+    fn node_summaries_cover_tree() {
+        let ns = summarize_nodes(&ddt(), 3);
+        assert_eq!(ns.len(), DDT_INTERNAL);
+        assert_eq!(ns[0].depth, 0);
+        assert_eq!(ns[1].depth, 1);
+        assert_eq!(ns[30].depth, 4);
+        for n in &ns {
+            assert_eq!(n.top_features.len(), 3);
+            // Sorted by |weight|.
+            assert!(n.top_features[0].1.abs() >= n.top_features[1].1.abs());
+        }
+    }
+
+    #[test]
+    fn leaf_distributions_are_probabilities() {
+        for dist in leaf_distributions(&ddt()) {
+            let sum: f32 = dist.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(dist.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn render_contains_all_sections() {
+        let s = render(&ddt(), 3);
+        assert!(s.contains("Internal nodes"));
+        assert!(s.contains("Leaf action distributions"));
+        assert!(s.contains("feature importance"));
+        assert!(s.contains("omega.exec_time"));
+        assert!(s.contains("free_mem.accumulator"));
+    }
+
+    #[test]
+    fn feature_names_match_state_dim() {
+        assert_eq!(FEATURE_NAMES.len(), STATE_DIM);
+        assert_eq!(CLUSTER_NAMES.len(), NUM_CLUSTERS);
+    }
+}

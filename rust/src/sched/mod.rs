@@ -1,0 +1,129 @@
+//! Scheduling framework: the `Scheduler` trait consumed by the simulator,
+//! the system snapshot schedulers see, and the concrete policies — the
+//! two-level THERMOS scheduler plus the Simba [54], Big-Little [32], and
+//! RELMAS [8] baselines.
+
+pub mod biglittle;
+pub mod explain;
+pub mod policy;
+pub mod proximity;
+pub mod relmas;
+pub mod simba;
+pub mod state;
+pub mod thermos;
+
+pub use biglittle::BigLittleSched;
+pub use relmas::RelmasSched;
+pub use simba::SimbaSched;
+pub use thermos::ThermosSched;
+
+use crate::arch::Arch;
+use crate::sim::mapping::Mapping;
+use crate::workload::Job;
+
+/// What a scheduler can see when a job reaches the head of the queue:
+/// the ACG's dynamic fields (`M_i(t)`, `T_i(t)`, throttle state).
+#[derive(Clone, Debug)]
+pub struct SysSnapshot {
+    /// Free crossbar memory per chiplet, bits.
+    pub free_bits: Vec<u64>,
+    /// Die temperature per chiplet, K.
+    pub temps: Vec<f64>,
+    /// Throttle latch per chiplet (no new assignments while set, §4.1).
+    pub throttled: Vec<bool>,
+}
+
+impl SysSnapshot {
+    pub fn fresh(arch: &Arch) -> SysSnapshot {
+        SysSnapshot {
+            free_bits: arch.chiplets.iter().map(|c| arch.specs[c.pim as usize].mem_bits).collect(),
+            temps: vec![arch.t_ambient; arch.num_chiplets()],
+            throttled: vec![false; arch.num_chiplets()],
+        }
+    }
+
+    pub fn total_free(&self) -> u64 {
+        self.free_bits.iter().sum()
+    }
+
+    pub fn cluster_free(&self, arch: &Arch, cluster: usize) -> u64 {
+        arch.clusters[cluster].iter().map(|&c| self.free_bits[c]).sum()
+    }
+
+    pub fn cluster_max_temp(&self, arch: &Arch, cluster: usize) -> f64 {
+        arch.clusters[cluster].iter().map(|&c| self.temps[c]).fold(f64::MIN, f64::max)
+    }
+
+    /// A cluster can accept work if some chiplet has memory and is not
+    /// throttled.
+    pub fn cluster_available(&self, arch: &Arch, cluster: usize) -> bool {
+        arch.clusters[cluster]
+            .iter()
+            .any(|&c| self.free_bits[c] > 0 && !self.throttled[c])
+    }
+}
+
+/// A scheduler maps a whole job (every layer) or declines (insufficient
+/// resources — the job stays queued). Implementations mutate their own
+/// copy of the snapshot while assigning; the engine validates and commits.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Produce a complete mapping for `job`, or `None` to leave it queued.
+    fn schedule(&mut self, job: &Job, snap: &SysSnapshot) -> Option<Mapping>;
+
+    /// Notification hooks (training uses these; default no-op).
+    fn on_job_completed(&mut self, _job_id: u64) {}
+}
+
+/// Greedy fill helper shared by every scheduler: walk `candidates` in
+/// order, placing as much of `need_bits` as each chiplet's free memory
+/// allows. Returns placed parts (may be incomplete if memory ran out).
+pub fn fill_chiplets(
+    candidates: &[usize],
+    free_bits: &mut [u64],
+    mut need_bits: u64,
+) -> Vec<(usize, u64)> {
+    let mut parts = Vec::new();
+    for &c in candidates {
+        if need_bits == 0 {
+            break;
+        }
+        let take = free_bits[c].min(need_bits);
+        if take > 0 {
+            parts.push((c, take));
+            free_bits[c] -= take;
+            need_bits -= take;
+        }
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+
+    #[test]
+    fn snapshot_fresh_has_full_memory() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let s = SysSnapshot::fresh(&arch);
+        assert_eq!(s.total_free(), arch.total_memory_bits());
+        for cl in 0..4 {
+            assert!(s.cluster_available(&arch, cl));
+            assert_eq!(s.cluster_max_temp(&arch, cl), arch.t_ambient);
+        }
+    }
+
+    #[test]
+    fn fill_respects_capacity_and_order() {
+        let mut free = vec![100u64, 50, 200];
+        let parts = fill_chiplets(&[1, 0, 2], &mut free, 180);
+        assert_eq!(parts, vec![(1, 50), (0, 100), (2, 30)]);
+        assert_eq!(free, vec![0, 0, 170]);
+        // Incomplete fill when memory short.
+        let mut free2 = vec![10u64];
+        let parts2 = fill_chiplets(&[0], &mut free2, 25);
+        assert_eq!(parts2, vec![(0, 10)]);
+    }
+}

@@ -1,0 +1,353 @@
+//! Policy function approximators, native Rust implementations.
+//!
+//! The canonical policy artifacts are the AOT-compiled HLO graphs built by
+//! `python/compile/aot.py` and executed through PJRT
+//! ([`crate::runtime`]). This module provides *bit-compatible* native
+//! evaluators over the same flat parameter layout (the layout is pinned in
+//! `artifacts/abi.json` and asserted in integration tests):
+//!
+//! * [`NativeDdt`] — the soft differentiable decision tree actor (§4.3.1);
+//! * [`NativeMlp`] — the critic / RELMAS actor MLP;
+//!
+//! The native path exists for the training inner loop (millions of tiny
+//! forward passes where per-call PJRT dispatch would dominate — see
+//! EXPERIMENTS.md §Perf); correctness is anchored to the artifacts by
+//! round-trip tests.
+
+use crate::util::rng::Rng;
+
+/// DDT geometry (Table 4: depth 5).
+pub const DDT_DEPTH: usize = 5;
+pub const DDT_INTERNAL: usize = (1 << DDT_DEPTH) - 1; // 31
+pub const DDT_LEAVES: usize = 1 << DDT_DEPTH; // 32
+
+/// Flat parameter length of a DDT with `state_dim` inputs and
+/// `num_actions` outputs: per internal node a weight row + bias +
+/// steepness, plus per-leaf action logits.
+pub const fn ddt_theta_len(state_dim: usize, num_actions: usize) -> usize {
+    DDT_INTERNAL * (state_dim + 2) + DDT_LEAVES * num_actions
+}
+
+/// Anything that maps a state to action logits (cluster scores).
+pub trait PolicyEval {
+    fn num_actions(&self) -> usize;
+    fn logits(&mut self, x: &[f32]) -> Vec<f32>;
+}
+
+/// Soft differentiable decision tree (§4.3.1, Fig. 3a).
+///
+/// Internal node j computes σ(β_j·(w_j·x + b_j)); the probability of
+/// reaching a leaf is the product of branch probabilities along its path
+/// (heap indexing: children of j are 2j+1 / 2j+2); the output is the
+/// leaf-probability-weighted mixture of per-leaf action logit vectors.
+///
+/// Parameter layout (must match `python/compile/model.py::ddt_forward`):
+/// `[w: internal×state_dim, b: internal, beta: internal,
+///   leaves: leaves×actions]`, row-major, f32.
+#[derive(Clone, Debug)]
+pub struct NativeDdt {
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub theta: Vec<f32>,
+}
+
+impl NativeDdt {
+    pub fn new(state_dim: usize, num_actions: usize, theta: Vec<f32>) -> NativeDdt {
+        assert_eq!(theta.len(), ddt_theta_len(state_dim, num_actions));
+        NativeDdt { state_dim, num_actions, theta }
+    }
+
+    /// Xavier-ish random init matching the python initializer.
+    pub fn init(state_dim: usize, num_actions: usize, rng: &mut Rng) -> NativeDdt {
+        let len = ddt_theta_len(state_dim, num_actions);
+        let mut theta = vec![0.0f32; len];
+        let wscale = (1.0 / state_dim as f64).sqrt();
+        let (wlen, ilen) = (DDT_INTERNAL * state_dim, DDT_INTERNAL);
+        for v in theta.iter_mut().take(wlen) {
+            *v = (rng.gaussian() * wscale) as f32;
+        }
+        // b = 0; beta = 1.
+        for v in theta.iter_mut().skip(wlen + ilen).take(ilen) {
+            *v = 1.0;
+        }
+        for v in theta.iter_mut().skip(wlen + 2 * ilen) {
+            *v = (rng.gaussian() * 0.1) as f32;
+        }
+        NativeDdt { state_dim, num_actions, theta }
+    }
+
+    #[inline]
+    fn split(&self) -> (&[f32], &[f32], &[f32], &[f32]) {
+        let d = self.state_dim;
+        let wlen = DDT_INTERNAL * d;
+        let (w, rest) = self.theta.split_at(wlen);
+        let (b, rest) = rest.split_at(DDT_INTERNAL);
+        let (beta, leaves) = rest.split_at(DDT_INTERNAL);
+        (w, b, beta, leaves)
+    }
+
+    /// Mixture-of-leaves forward pass.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.state_dim);
+        let (w, b, beta, leaves) = self.split();
+        let d = self.state_dim;
+        // Node activations σ(β(w·x + b)).
+        let mut z = [0.0f32; DDT_INTERNAL];
+        for (j, zj) in z.iter_mut().enumerate() {
+            let row = &w[j * d..(j + 1) * d];
+            let mut acc = b[j];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            *zj = sigmoid(beta[j] * acc);
+        }
+        // Path probabilities via breadth-first products.
+        let mut probs = [0.0f32; 2 * DDT_INTERNAL + 1];
+        probs[0] = 1.0;
+        for j in 0..DDT_INTERNAL {
+            let p = probs[j];
+            probs[2 * j + 1] = p * z[j]; // left branch ≡ σ
+            probs[2 * j + 2] = p * (1.0 - z[j]);
+        }
+        // Leaves occupy heap slots [DDT_INTERNAL .. 2·DDT_INTERNAL+1).
+        let mut out = vec![0.0f32; self.num_actions];
+        for l in 0..DDT_LEAVES {
+            let p = probs[DDT_INTERNAL + l];
+            let row = &leaves[l * self.num_actions..(l + 1) * self.num_actions];
+            for (o, r) in out.iter_mut().zip(row) {
+                *o += p * r;
+            }
+        }
+        out
+    }
+}
+
+impl PolicyEval for NativeDdt {
+    fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+    fn logits(&mut self, x: &[f32]) -> Vec<f32> {
+        self.forward(x)
+    }
+}
+
+/// Plain ReLU MLP over a flat parameter vector. Layout per layer:
+/// `W (out×in, row-major), b (out)`, concatenated in order. Last layer
+/// linear. Used for the critic (22→64→64→64→2) and the RELMAS actor/critic.
+#[derive(Clone, Debug)]
+pub struct NativeMlp {
+    pub dims: Vec<usize>,
+    pub params: Vec<f32>,
+}
+
+/// Flat parameter length of an MLP with the given layer dims.
+pub fn mlp_param_len(dims: &[usize]) -> usize {
+    dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+}
+
+impl NativeMlp {
+    pub fn new(dims: Vec<usize>, params: Vec<f32>) -> NativeMlp {
+        assert_eq!(params.len(), mlp_param_len(&dims));
+        NativeMlp { dims, params }
+    }
+
+    pub fn init(dims: Vec<usize>, rng: &mut Rng) -> NativeMlp {
+        let mut params = vec![0.0f32; mlp_param_len(&dims)];
+        let mut off = 0;
+        for w in dims.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (2.0 / fan_in as f64).sqrt();
+            for v in params.iter_mut().skip(off).take(fan_in * fan_out) {
+                *v = (rng.gaussian() * scale) as f32;
+            }
+            off += fan_in * fan_out + fan_out; // biases stay 0
+        }
+        NativeMlp { dims, params }
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.dims[0]);
+        let mut act = x.to_vec();
+        let mut off = 0;
+        let last = self.dims.len() - 2;
+        for (li, w) in self.dims.windows(2).enumerate() {
+            let (fin, fout) = (w[0], w[1]);
+            let wmat = &self.params[off..off + fin * fout];
+            let bias = &self.params[off + fin * fout..off + fin * fout + fout];
+            let mut next = vec![0.0f32; fout];
+            for (o, nv) in next.iter_mut().enumerate() {
+                let row = &wmat[o * fin..(o + 1) * fin];
+                let mut acc = bias[o];
+                for (wi, ai) in row.iter().zip(&act) {
+                    acc += wi * ai;
+                }
+                *nv = if li < last { acc.max(0.0) } else { acc };
+            }
+            act = next;
+            off += fin * fout + fout;
+        }
+        act
+    }
+}
+
+impl PolicyEval for NativeMlp {
+    fn num_actions(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+    fn logits(&mut self, x: &[f32]) -> Vec<f32> {
+        self.forward(x)
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Invalid-action mask value (§4.2.2: −10⁷ before softmax).
+pub const MASK_NEG: f32 = -1.0e7;
+
+/// Masked softmax: returns probabilities; invalid actions get ~0.
+pub fn masked_softmax(logits: &[f32], valid: &[bool]) -> Vec<f32> {
+    debug_assert_eq!(logits.len(), valid.len());
+    let masked: Vec<f32> =
+        logits.iter().zip(valid).map(|(&l, &v)| if v { l } else { l + MASK_NEG }).collect();
+    let max = masked.iter().cloned().fold(f32::MIN, f32::max);
+    let exps: Vec<f32> = masked.iter().map(|&l| (l - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Sample an action from masked probabilities; returns (action, log-prob).
+pub fn sample_action(probs: &[f32], rng: &mut Rng) -> (usize, f32) {
+    let u = rng.f32();
+    let mut acc = 0.0f32;
+    let mut pick = probs.len() - 1;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            pick = i;
+            break;
+        }
+    }
+    (pick, probs[pick].max(1e-12).ln())
+}
+
+/// Greedy action (runtime: §4.2.2 argmax).
+pub fn argmax_action(probs: &[f32]) -> usize {
+    probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::state::{NUM_CLUSTERS, STATE_DIM};
+    use crate::util::testkit::{check, check_close, forall, vec_f32};
+
+    #[test]
+    fn theta_len_matches_design() {
+        // DESIGN.md §4: 31·24 + 32·4 = 872 for the paper dims.
+        assert_eq!(ddt_theta_len(STATE_DIM, NUM_CLUSTERS), 872);
+        assert_eq!(mlp_param_len(&[22, 64, 64, 64, 2]), 9922);
+    }
+
+    #[test]
+    fn ddt_leaf_mixture_is_convex() {
+        // Output of the DDT is a convex combination of leaf vectors, so it
+        // must lie within the min/max of leaf logits per action.
+        forall(50, |rng| {
+            let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, rng);
+            let x = vec_f32(rng, STATE_DIM, -1.0, 1.0);
+            let out = ddt.forward(&x);
+            let (_, _, _, leaves) = ddt.split();
+            for a in 0..NUM_CLUSTERS {
+                let col: Vec<f32> =
+                    (0..DDT_LEAVES).map(|l| leaves[l * NUM_CLUSTERS + a]).collect();
+                let lo = col.iter().cloned().fold(f32::MAX, f32::min) - 1e-5;
+                let hi = col.iter().cloned().fold(f32::MIN, f32::max) + 1e-5;
+                check(out[a] >= lo && out[a] <= hi, format!("action {a}: {} ∉ [{lo},{hi}]", out[a]))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ddt_path_probs_sum_to_one() {
+        // Implicit check: with all leaf vectors equal to 1, output = 1.
+        forall(30, |rng| {
+            let mut ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, rng);
+            let wlen = DDT_INTERNAL * STATE_DIM;
+            for v in ddt.theta.iter_mut().skip(wlen + 2 * DDT_INTERNAL) {
+                *v = 1.0;
+            }
+            let x = vec_f32(rng, STATE_DIM, -2.0, 2.0);
+            let out = ddt.forward(&x);
+            for &o in &out {
+                check_close(o as f64, 1.0, 1e-5, "mixture weight sum")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ddt_hard_routing_with_huge_beta() {
+        let mut rng = Rng::new(42);
+        let mut ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+        // Crank steepness: tree becomes a hard decision tree; output equals
+        // exactly one leaf row.
+        let wlen = DDT_INTERNAL * STATE_DIM;
+        for v in ddt.theta.iter_mut().skip(wlen + DDT_INTERNAL).take(DDT_INTERNAL) {
+            *v = 1e4;
+        }
+        let x = vec![0.3f32; STATE_DIM];
+        let out = ddt.forward(&x);
+        let (_, _, _, leaves) = ddt.split();
+        let matches = (0..DDT_LEAVES).any(|l| {
+            let row = &leaves[l * NUM_CLUSTERS..(l + 1) * NUM_CLUSTERS];
+            row.iter().zip(&out).all(|(a, b)| (a - b).abs() < 1e-3)
+        });
+        assert!(matches, "hard-routed output should equal a leaf row: {out:?}");
+    }
+
+    #[test]
+    fn mlp_relu_forward_known_values() {
+        // 2→2→1 with hand-set params.
+        // W1 = [[1, -1], [0, 2]], b1 = [0, 1]; W2 = [[1, 1]], b2 = [-0.5]
+        let params = vec![1.0, -1.0, 0.0, 2.0, 0.0, 1.0, 1.0, 1.0, -0.5];
+        let mlp = NativeMlp::new(vec![2, 2, 1], params);
+        let out = mlp.forward(&[1.0, 0.5]);
+        // h = relu([1-0.5, 0+1+1]) = [0.5, 2]; y = 0.5+2-0.5 = 2.0
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        // Negative pre-activation clamps.
+        let out2 = mlp.forward(&[-1.0, 0.0]);
+        // h = relu([-1, 1]) = [0, 1]; y = 1 - 0.5 = 0.5
+        assert!((out2[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masked_softmax_zeroes_invalid() {
+        let p = masked_softmax(&[1.0, 2.0, 3.0, 4.0], &[true, false, true, false]);
+        assert!(p[1] < 1e-6 && p[3] < 1e-6);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[0]);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut rng = Rng::new(7);
+        let probs = masked_softmax(&[0.0, 0.0, 2.0, 0.0], &[true; 4]);
+        let mut counts = [0usize; 4];
+        for _ in 0..20_000 {
+            let (a, lp) = sample_action(&probs, &mut rng);
+            counts[a] += 1;
+            assert!((lp - probs[a].ln()).abs() < 1e-5);
+        }
+        assert!(counts[2] > counts[0] * 3);
+        assert_eq!(argmax_action(&probs), 2);
+    }
+}

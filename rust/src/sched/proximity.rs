@@ -1,0 +1,167 @@
+//! Level-2 proximity-driven chiplet allocation (§4.4).
+//!
+//! Once the MORL policy picks a PIM cluster for a layer, this algorithm
+//! places the layer's weights on concrete chiplets of that cluster:
+//! chiplets with free memory are sorted by the *weighted hop distance*
+//! to the chiplets holding the previous layer (weights = the previous
+//! layer's placement shares), then filled to capacity in order —
+//! minimizing inter-layer NoI traffic while packing memory densely.
+
+use super::{fill_chiplets, SysSnapshot};
+use crate::arch::Arch;
+
+/// Previous-layer placement (ψ_{i-1}): `(chiplet, bits)` parts. Empty for
+/// the first layer — distance then falls back to the I/O boundary
+/// (chiplet 0's corner of the interposer).
+pub type PrevPlacement = [(usize, u64)];
+
+/// Weighted hop distance from the previous layer's placement to chiplet
+/// `c` (Σ share_s · hops(s, c)).
+pub fn weighted_distance(arch: &Arch, prev: &PrevPlacement, c: usize) -> f64 {
+    if prev.is_empty() {
+        return arch.hops(0, c) as f64;
+    }
+    let total: u64 = prev.iter().map(|&(_, b)| b).sum();
+    let total = total.max(1) as f64;
+    prev.iter().map(|&(s, b)| (b as f64 / total) * arch.hops(s, c) as f64).sum()
+}
+
+/// Candidate order for a cluster: available chiplets sorted by weighted
+/// distance (ties broken by physical distance, then id for determinism).
+pub fn order_cluster_by_proximity(
+    arch: &Arch,
+    snap: &SysSnapshot,
+    free_bits: &[u64],
+    cluster: usize,
+    prev: &PrevPlacement,
+) -> Vec<usize> {
+    let mut cands: Vec<usize> = arch.clusters[cluster]
+        .iter()
+        .copied()
+        .filter(|&c| free_bits[c] > 0 && !snap.throttled[c])
+        .collect();
+    let keyed: Vec<(f64, f64, usize)> = cands
+        .iter()
+        .map(|&c| {
+            let d = weighted_distance(arch, prev, c);
+            let phys = if prev.is_empty() {
+                0.0
+            } else {
+                prev.iter().map(|&(s, _)| arch.topology.dist_mm(s, c)).sum::<f64>()
+            };
+            (d, phys, c)
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    order.sort_by(|&a, &b| {
+        keyed[a]
+            .0
+            .partial_cmp(&keyed[b].0)
+            .unwrap()
+            .then(keyed[a].1.partial_cmp(&keyed[b].1).unwrap())
+            .then(keyed[a].2.cmp(&keyed[b].2))
+    });
+    cands = order.into_iter().map(|i| keyed[i].2).collect();
+    cands
+}
+
+/// Assign up to `need_bits` of a layer onto `cluster`, preferring chiplets
+/// near the previous layer. Mutates `free_bits`. Returns the placed parts
+/// (possibly incomplete — Algorithm 1's while-loop then asks the MORL
+/// policy for another cluster).
+pub fn assign_in_cluster(
+    arch: &Arch,
+    snap: &SysSnapshot,
+    free_bits: &mut [u64],
+    cluster: usize,
+    need_bits: u64,
+    prev: &PrevPlacement,
+) -> Vec<(usize, u64)> {
+    let order = order_cluster_by_proximity(arch, snap, free_bits, cluster, prev);
+    fill_chiplets(&order, free_bits, need_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Arch, PimType};
+    use crate::noi::NoiTopology;
+
+    fn setup() -> (Arch, SysSnapshot) {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        (arch, snap)
+    }
+
+    #[test]
+    fn nearest_chiplet_first() {
+        let (arch, snap) = setup();
+        let mut free = snap.free_bits.clone();
+        // Previous layer entirely on chiplet 0 (standard cluster).
+        let prev = [(0usize, 1000u64)];
+        let order =
+            order_cluster_by_proximity(&arch, &snap, &free, PimType::Standard as usize, &prev);
+        assert_eq!(order[0], 0, "chiplet 0 itself is distance 0");
+        // Weighted distances must be non-decreasing along the order.
+        let mut last = -1.0;
+        for &c in &order {
+            let d = weighted_distance(&arch, &prev, c);
+            assert!(d >= last);
+            last = d;
+        }
+        // Fill consumes nearest first.
+        let parts = assign_in_cluster(
+            &arch,
+            &snap,
+            &mut free,
+            PimType::Standard as usize,
+            arch.specs[0].mem_bits + 5,
+            &prev,
+        );
+        assert_eq!(parts[0].0, 0);
+        assert_eq!(parts[0].1, arch.specs[0].mem_bits);
+        assert_eq!(parts[1].1, 5);
+    }
+
+    #[test]
+    fn skips_throttled_and_full_chiplets() {
+        let (arch, mut snap) = setup();
+        let cl = PimType::Standard as usize;
+        let first = arch.clusters[cl][0];
+        let second = arch.clusters[cl][1];
+        snap.throttled[first] = true;
+        let mut free = snap.free_bits.clone();
+        free[second] = 0;
+        let prev = [(first, 100u64)];
+        let order = order_cluster_by_proximity(&arch, &snap, &free, cl, &prev);
+        assert!(!order.contains(&first), "throttled chiplet must be skipped");
+        assert!(!order.contains(&second), "full chiplet must be skipped");
+    }
+
+    #[test]
+    fn incomplete_fill_reports_partial() {
+        let (arch, snap) = setup();
+        let cl = PimType::Accumulator as usize;
+        let mut free = snap.free_bits.clone();
+        // Zero out all but one accumulator chiplet.
+        for &c in &arch.clusters[cl][1..] {
+            free[c] = 0;
+        }
+        let only = arch.clusters[cl][0];
+        let need = arch.specs[cl].mem_bits * 3;
+        let parts = assign_in_cluster(&arch, &snap, &mut free, cl, need, &[]);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], (only, arch.specs[cl].mem_bits));
+    }
+
+    #[test]
+    fn weighted_distance_mixes_sources() {
+        let (arch, _) = setup();
+        // Half the previous layer on chiplet 0, half on a far chiplet.
+        let far = arch.num_chiplets() - 1;
+        let prev = [(0usize, 500u64), (far, 500u64)];
+        let d0 = weighted_distance(&arch, &prev, 0);
+        let expected = 0.5 * arch.hops(far, 0) as f64;
+        assert!((d0 - expected).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! RELMAS baseline scheduler [8]: flat deep-RL scheduling.
+//!
+//! RELMAS selects *individual chiplets* with a neural-network policy (no
+//! cluster hierarchy, no decision tree). We adapt it to the PIM system as
+//! the paper does (§5.2): the MLP policy scores all chiplets, invalid
+//! (full/throttled) chiplets are masked, and the chosen chiplet is filled
+//! before the policy is queried again for the layer's remainder. Its vast
+//! flat action space (78 chiplets vs THERMOS's 4 clusters) is exactly the
+//! convergence handicap the paper discusses.
+
+use super::policy::{argmax_action, masked_softmax, sample_action, PolicyEval};
+use super::state::StateEncoder;
+use super::{Scheduler, SysSnapshot};
+use crate::arch::Arch;
+use crate::sim::mapping::{LayerAssignment, Mapping};
+use crate::util::rng::Rng;
+use crate::workload::Job;
+
+/// One flat decision (chiplet-level) for PPO training.
+#[derive(Clone, Debug)]
+pub struct RelmasDecision {
+    pub job_id: u64,
+    pub obs: Vec<f32>,
+    pub mask: Vec<bool>,
+    pub action: usize,
+    pub logp: f32,
+}
+
+pub struct RelmasSched<P: PolicyEval> {
+    arch: Arch,
+    encoder: StateEncoder,
+    pub policy: P,
+    pub sample_rng: Option<Rng>,
+    pub record: bool,
+    pub decisions: Vec<RelmasDecision>,
+}
+
+impl<P: PolicyEval> RelmasSched<P> {
+    pub fn new(arch: Arch, encoder: StateEncoder, policy: P) -> Self {
+        RelmasSched { arch, encoder, policy, sample_rng: None, record: false, decisions: Vec::new() }
+    }
+
+    pub fn sampling(mut self, rng: Rng) -> Self {
+        self.sample_rng = Some(rng);
+        self
+    }
+
+    pub fn take_decisions(&mut self) -> Vec<RelmasDecision> {
+        std::mem::take(&mut self.decisions)
+    }
+}
+
+impl<P: PolicyEval> Scheduler for RelmasSched<P> {
+    fn name(&self) -> &'static str {
+        "relmas"
+    }
+
+    fn schedule(&mut self, job: &Job, snap: &SysSnapshot) -> Option<Mapping> {
+        let n = self.arch.num_chiplets();
+        let usable: u64 =
+            (0..n).filter(|&c| !snap.throttled[c]).map(|c| snap.free_bits[c]).sum();
+        if job.dcg.total_weight_bits() > usable {
+            return None;
+        }
+        let mut free = snap.free_bits.clone();
+        let mut layers = Vec::with_capacity(job.dcg.num_layers());
+        let mut prev: Vec<(usize, u64)> = Vec::new();
+        let checkpoint = self.decisions.len();
+
+        for (li, layer) in job.dcg.layers.iter().enumerate() {
+            let mut need = layer.weight_bits;
+            let mut parts: Vec<(usize, u64)> = Vec::new();
+            while need > 0 {
+                let mask: Vec<bool> =
+                    (0..n).map(|c| free[c] > 0 && !snap.throttled[c]).collect();
+                if !mask.iter().any(|&m| m) {
+                    self.decisions.truncate(checkpoint);
+                    return None;
+                }
+                let obs = self.encoder.encode_relmas(&self.arch, snap, job, li, need, &prev);
+                let logits = self.policy.logits(&obs);
+                let probs = masked_softmax(&logits, &mask);
+                let (action, logp) = match &mut self.sample_rng {
+                    Some(rng) => sample_action(&probs, rng),
+                    None => {
+                        let a = argmax_action(&probs);
+                        (a, probs[a].max(1e-12).ln())
+                    }
+                };
+                if self.record {
+                    self.decisions.push(RelmasDecision {
+                        job_id: job.id,
+                        obs,
+                        mask: mask.clone(),
+                        action,
+                        logp,
+                    });
+                }
+                let take = free[action].min(need);
+                if take == 0 {
+                    self.decisions.truncate(checkpoint);
+                    return None;
+                }
+                free[action] -= take;
+                need -= take;
+                parts.push((action, take));
+            }
+            prev = parts.clone();
+            layers.push(LayerAssignment { parts });
+        }
+        Some(Mapping { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+    use crate::sched::policy::NativeMlp;
+    use crate::sched::state::relmas_obs_dim;
+    use crate::workload::{DnnModel, ModelZoo};
+
+    fn setup() -> (Arch, SysSnapshot, RelmasSched<NativeMlp>, Job) {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let zoo = ModelZoo::new();
+        let enc = StateEncoder::new(&arch, &zoo, 20_000);
+        let n = arch.num_chiplets();
+        let mut rng = Rng::new(5);
+        let mlp = NativeMlp::init(vec![relmas_obs_dim(n), 128, 128, n], &mut rng);
+        let sched = RelmasSched::new(arch.clone(), enc, mlp);
+        let job = Job { id: 0, dcg: zoo.dcg(DnnModel::ResNet18), images: 100, arrival_s: 0.0 };
+        (arch, snap, sched, job)
+    }
+
+    #[test]
+    fn complete_mapping_from_untrained_mlp() {
+        let (arch, snap, mut sched, job) = setup();
+        let m = sched.schedule(&job, &snap).expect("fits");
+        assert_eq!(m.layers.len(), job.dcg.num_layers());
+        for (i, la) in m.layers.iter().enumerate() {
+            assert_eq!(la.total_bits(), job.dcg.layers[i].weight_bits, "layer {i}");
+        }
+        let per = m.bits_per_chiplet(arch.num_chiplets());
+        for (c, &b) in per.iter().enumerate() {
+            assert!(b <= snap.free_bits[c]);
+        }
+    }
+
+    #[test]
+    fn flat_decisions_recorded() {
+        let (_, snap, mut sched, job) = setup();
+        sched.record = true;
+        sched.sample_rng = Some(Rng::new(9));
+        let _ = sched.schedule(&job, &snap).unwrap();
+        let ds = sched.take_decisions();
+        assert!(ds.len() >= job.dcg.num_layers());
+        for d in &ds {
+            assert!(d.mask[d.action]);
+            assert_eq!(d.obs.len(), sched.encoder.encode_relmas(
+                &sched.arch, &snap, &job, 0, 1, &[]).len());
+        }
+    }
+
+    #[test]
+    fn respects_throttle_mask() {
+        let (arch, mut snap, mut sched, job) = setup();
+        // Throttle the first half of the system.
+        for t in snap.throttled.iter_mut().take(arch.num_chiplets() / 2) {
+            *t = true;
+        }
+        let m = sched.schedule(&job, &snap).expect("still fits");
+        for la in &m.layers {
+            for &(c, _) in &la.parts {
+                assert!(!snap.throttled[c], "placed on throttled chiplet {c}");
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Simba baseline scheduler [54]: nearest-neighbour placement.
+//!
+//! Simba's strategy maps consecutive layers to spatially nearby chiplets
+//! to minimize inter-layer communication; it is type-blind (Simba is a
+//! homogeneous MCM), so on the heterogeneous system it simply ranks *all*
+//! available chiplets by weighted hop distance to the previous layer and
+//! fills greedily.
+
+use super::proximity::weighted_distance;
+use super::{fill_chiplets, Scheduler, SysSnapshot};
+use crate::arch::Arch;
+use crate::sim::mapping::{LayerAssignment, Mapping};
+use crate::workload::Job;
+
+pub struct SimbaSched {
+    arch: Arch,
+}
+
+impl SimbaSched {
+    pub fn new(arch: Arch) -> SimbaSched {
+        SimbaSched { arch }
+    }
+}
+
+impl Scheduler for SimbaSched {
+    fn name(&self) -> &'static str {
+        "simba"
+    }
+
+    fn schedule(&mut self, job: &Job, snap: &SysSnapshot) -> Option<Mapping> {
+        // Algorithm 1 guard: total weights must fit the free memory.
+        if job.dcg.total_weight_bits() > snap.total_free() {
+            return None;
+        }
+        let mut free = snap.free_bits.clone();
+        let mut layers = Vec::with_capacity(job.dcg.num_layers());
+        let mut prev: Vec<(usize, u64)> = Vec::new();
+        for layer in &job.dcg.layers {
+            // Rank every available chiplet by weighted distance to ψ_{i-1}.
+            let mut cands: Vec<usize> = (0..self.arch.num_chiplets())
+                .filter(|&c| free[c] > 0 && !snap.throttled[c])
+                .collect();
+            cands.sort_by(|&a, &b| {
+                let da = weighted_distance(&self.arch, &prev, a);
+                let db = weighted_distance(&self.arch, &prev, b);
+                da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+            });
+            let parts = fill_chiplets(&cands, &mut free, layer.weight_bits);
+            let placed: u64 = parts.iter().map(|&(_, b)| b).sum();
+            if placed < layer.weight_bits {
+                return None; // not enough unthrottled memory right now
+            }
+            prev = parts.clone();
+            layers.push(LayerAssignment { parts });
+        }
+        Some(Mapping { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+    use crate::workload::{DnnModel, ModelZoo};
+
+    fn job(m: DnnModel) -> Job {
+        let zoo = ModelZoo::new();
+        Job { id: 0, dcg: zoo.dcg(m), images: 100, arrival_s: 0.0 }
+    }
+
+    #[test]
+    fn maps_all_layers_completely() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let mut s = SimbaSched::new(arch.clone());
+        let j = job(DnnModel::ResNet50);
+        let m = s.schedule(&j, &snap).expect("must fit in empty system");
+        assert_eq!(m.layers.len(), j.dcg.num_layers());
+        for (i, la) in m.layers.iter().enumerate() {
+            assert_eq!(la.total_bits(), j.dcg.layers[i].weight_bits, "layer {i}");
+        }
+        // Memory conservation.
+        let per = m.bits_per_chiplet(arch.num_chiplets());
+        for (c, &b) in per.iter().enumerate() {
+            assert!(b <= snap.free_bits[c], "chiplet {c} overcommitted");
+        }
+    }
+
+    #[test]
+    fn declines_when_memory_insufficient() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let mut snap = SysSnapshot::fresh(&arch);
+        for b in snap.free_bits.iter_mut() {
+            *b /= 64; // nearly full system
+        }
+        let mut s = SimbaSched::new(arch);
+        assert!(s.schedule(&job(DnnModel::AlexNet), &snap).is_none());
+    }
+
+    #[test]
+    fn consecutive_layers_stay_close() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let mut s = SimbaSched::new(arch.clone());
+        let j = job(DnnModel::MobileNetV3Large);
+        let m = s.schedule(&j, &snap).unwrap();
+        // Mean hop distance between consecutive layer centroids must be
+        // small (nearest-neighbour behaviour).
+        let mut total_hops = 0.0;
+        let mut count = 0.0;
+        for w in m.layers.windows(2) {
+            let d = w[1]
+                .parts
+                .iter()
+                .map(|&(c, b)| {
+                    b as f64 * weighted_distance(&arch, &w[0].parts, c)
+                })
+                .sum::<f64>()
+                / w[1].total_bits() as f64;
+            total_hops += d;
+            count += 1.0;
+        }
+        assert!(total_hops / count < 3.0, "mean inter-layer hops {}", total_hops / count);
+    }
+}

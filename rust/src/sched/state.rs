@@ -1,0 +1,226 @@
+//! RL state construction (§4.2.1): layer features, DL-workload features,
+//! and PIM-cluster features, all normalized to [0, 1]-ish ranges, plus the
+//! preference vector ω appended — exactly the 22-dim input the DDT policy
+//! (and the AOT artifacts) consume. Also the flat per-chiplet observation
+//! used by the RELMAS baseline.
+
+use super::SysSnapshot;
+use crate::arch::{Arch, NUM_PIM_TYPES};
+use crate::workload::{Job, ModelZoo};
+
+/// THERMOS policy input dimension: 20 features + 2 preference entries.
+pub const STATE_DIM: usize = 22;
+/// Action space: the four PIM clusters.
+pub const NUM_CLUSTERS: usize = NUM_PIM_TYPES;
+
+/// Normalization constants (fixed per system + zoo, shared with training).
+#[derive(Clone, Debug)]
+pub struct StateEncoder {
+    max_layer_w: f64,
+    max_layer_o: f64,
+    max_layer_f: f64,
+    max_model_w: f64,
+    max_model_o: f64,
+    max_model_f: f64,
+    max_layers: f64,
+    max_images: f64,
+    cluster_cap: [f64; NUM_CLUSTERS],
+    t_ambient: f64,
+    t_max: [f64; NUM_CLUSTERS],
+}
+
+impl StateEncoder {
+    pub fn new(arch: &Arch, zoo: &ModelZoo, max_images: u64) -> StateEncoder {
+        let mut cluster_cap = [0.0; NUM_CLUSTERS];
+        let mut t_max = [0.0; NUM_CLUSTERS];
+        for cl in 0..NUM_CLUSTERS {
+            cluster_cap[cl] = arch.cluster_memory_bits(crate::arch::PimType::from_index(cl)) as f64;
+            t_max[cl] = arch.specs[cl].t_max_k;
+        }
+        StateEncoder {
+            max_layer_w: zoo.max_layer_weight_bits() as f64,
+            max_layer_o: zoo.max_layer_macs() as f64,
+            max_layer_f: zoo.max_layer_act_bits() as f64,
+            max_model_w: zoo.max_model_weight_bits() as f64,
+            max_model_o: zoo.max_model_macs() as f64,
+            max_model_f: zoo.max_model_act_bits() as f64,
+            max_layers: zoo.max_layers() as f64,
+            max_images: max_images.max(1) as f64,
+            cluster_cap,
+            t_ambient: arch.t_ambient,
+            t_max,
+        }
+    }
+
+    /// Build the 22-dim state for scheduling layer `layer_idx` of `job`,
+    /// with `need_bits` still unassigned (tiling re-decisions shrink it),
+    /// previous placement `prev`, and runtime preference `omega`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode(
+        &self,
+        arch: &Arch,
+        snap: &SysSnapshot,
+        job: &Job,
+        layer_idx: usize,
+        need_bits: u64,
+        prev: &[(usize, u64)],
+        omega: [f32; 2],
+    ) -> [f32; STATE_DIM] {
+        let dcg = &job.dcg;
+        let layer = &dcg.layers[layer_idx];
+        let mut s = [0.0f32; STATE_DIM];
+        // -- layer features
+        s[0] = (need_bits as f64 / self.max_layer_w) as f32;
+        s[1] = (layer.macs as f64 / self.max_layer_o) as f32;
+        s[2] = (dcg.in_bits(layer_idx) as f64 / self.max_layer_f) as f32;
+        // -- workload features (remaining = this layer onwards)
+        let remaining = &dcg.layers[layer_idx..];
+        s[3] = (remaining.len() as f64 / self.max_layers) as f32;
+        s[4] = (remaining.iter().map(|l| l.weight_bits).sum::<u64>() as f64 / self.max_model_w)
+            as f32;
+        s[5] = (remaining.iter().map(|l| l.macs).sum::<u64>() as f64 / self.max_model_o) as f32;
+        s[6] = (remaining.iter().map(|l| l.out_bits).sum::<u64>() as f64 / self.max_model_f) as f32;
+        s[7] = (job.images as f64 / self.max_images) as f32;
+        // -- PIM cluster features
+        for cl in 0..NUM_CLUSTERS {
+            let free = snap.cluster_free(arch, cl) as f64;
+            s[8 + cl] = (free / self.cluster_cap[cl]) as f32;
+            let t = snap.cluster_max_temp(arch, cl);
+            let headroom = (self.t_max[cl] - t) / (self.t_max[cl] - self.t_ambient);
+            s[12 + cl] = headroom.clamp(-1.0, 1.0) as f32;
+        }
+        // -- previous placement ψ_{i-1}: share of prev layer per cluster
+        let prev_total: u64 = prev.iter().map(|&(_, b)| b).sum();
+        if prev_total > 0 {
+            for &(c, b) in prev {
+                let cl = arch.chiplets[c].pim as usize;
+                s[16 + cl] += (b as f64 / prev_total as f64) as f32;
+            }
+        }
+        // -- preference vector
+        s[20] = omega[0];
+        s[21] = omega[1];
+        s
+    }
+
+    /// RELMAS flat observation: 8 workload dims + per-chiplet free-memory
+    /// fraction + per-chiplet previous-placement share + 4 cluster thermal
+    /// headrooms. Length = `2·n_chiplets + 12`.
+    pub fn encode_relmas(
+        &self,
+        arch: &Arch,
+        snap: &SysSnapshot,
+        job: &Job,
+        layer_idx: usize,
+        need_bits: u64,
+        prev: &[(usize, u64)],
+    ) -> Vec<f32> {
+        let n = arch.num_chiplets();
+        let mut s = vec![0.0f32; relmas_obs_dim(n)];
+        let base = self.encode(arch, snap, job, layer_idx, need_bits, prev, [0.5, 0.5]);
+        s[..8].copy_from_slice(&base[..8]);
+        for c in 0..n {
+            let cap = arch.spec(c).mem_bits as f64;
+            s[8 + c] = (snap.free_bits[c] as f64 / cap) as f32;
+        }
+        let prev_total: u64 = prev.iter().map(|&(_, b)| b).sum();
+        if prev_total > 0 {
+            for &(c, b) in prev {
+                s[8 + n + c] = (b as f64 / prev_total as f64) as f32;
+            }
+        }
+        for cl in 0..NUM_CLUSTERS {
+            s[8 + 2 * n + cl] = base[12 + cl];
+        }
+        s
+    }
+}
+
+/// RELMAS observation length for a system of `n` chiplets.
+pub fn relmas_obs_dim(n: usize) -> usize {
+    2 * n + 12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+    use crate::workload::DnnModel;
+
+    fn setup() -> (Arch, SysSnapshot, StateEncoder, Job) {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let zoo = ModelZoo::new();
+        let enc = StateEncoder::new(&arch, &zoo, 20_000);
+        let job = Job { id: 0, dcg: zoo.dcg(DnnModel::ResNet50), images: 10_000, arrival_s: 0.0 };
+        (arch, snap, enc, job)
+    }
+
+    #[test]
+    fn features_bounded() {
+        let (arch, snap, enc, job) = setup();
+        for li in 0..job.dcg.num_layers() {
+            let s = enc.encode(
+                &arch,
+                &snap,
+                &job,
+                li,
+                job.dcg.layers[li].weight_bits,
+                &[],
+                [1.0, 0.0],
+            );
+            for (i, &v) in s.iter().enumerate() {
+                assert!((-1.0..=1.5).contains(&v), "feature {i} = {v} at layer {li}");
+                assert!(v.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_system_features() {
+        let (arch, snap, enc, job) = setup();
+        let s = enc.encode(&arch, &snap, &job, 0, job.dcg.layers[0].weight_bits, &[], [0.5, 0.5]);
+        // All clusters fully free, full thermal headroom.
+        for cl in 0..4 {
+            assert!((s[8 + cl] - 1.0).abs() < 1e-6);
+            assert!((s[12 + cl] - 1.0).abs() < 1e-6);
+            assert_eq!(s[16 + cl], 0.0); // no previous placement
+        }
+        assert_eq!(s[20], 0.5);
+        assert_eq!(s[21], 0.5);
+    }
+
+    #[test]
+    fn remaining_workload_shrinks() {
+        let (arch, snap, enc, job) = setup();
+        let s0 = enc.encode(&arch, &snap, &job, 0, 1, &[], [1.0, 0.0]);
+        let last = job.dcg.num_layers() - 1;
+        let s_last = enc.encode(&arch, &snap, &job, last, 1, &[], [1.0, 0.0]);
+        assert!(s_last[3] < s0[3]);
+        assert!(s_last[4] < s0[4]);
+        assert!(s_last[5] < s0[5]);
+    }
+
+    #[test]
+    fn prev_placement_shares_sum_to_one() {
+        let (arch, snap, enc, job) = setup();
+        let prev = vec![(0usize, 300u64), (arch.clusters[1][0], 700u64)];
+        let s = enc.encode(&arch, &snap, &job, 1, 1, &prev, [0.0, 1.0]);
+        let total: f32 = (0..4).map(|cl| s[16 + cl]).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!((s[16] - 0.3).abs() < 1e-6);
+        assert!((s[17] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relmas_obs_layout() {
+        let (arch, snap, enc, job) = setup();
+        let n = arch.num_chiplets();
+        let obs = enc.encode_relmas(&arch, &snap, &job, 0, 1, &[]);
+        assert_eq!(obs.len(), relmas_obs_dim(n));
+        // Free fractions all 1 on a fresh system.
+        for c in 0..n {
+            assert!((obs[8 + c] - 1.0).abs() < 1e-6);
+        }
+    }
+}

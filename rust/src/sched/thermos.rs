@@ -1,0 +1,248 @@
+//! The THERMOS two-level scheduler (§4, Algorithm 1).
+//!
+//! Level 1: the MORL policy (a [`PolicyEval`] — the AOT-compiled DDT
+//! artifact via PJRT at runtime, or the bit-compatible native evaluator in
+//! the training inner loop) selects a PIM cluster per layer, conditioned
+//! on the runtime preference vector ω. Invalid clusters (no free memory or
+//! fully throttled) are masked with −10⁷ before the softmax (§4.2.2).
+//!
+//! Level 2: the proximity-driven algorithm (§4.4) places the layer's
+//! weights on concrete chiplets within the chosen cluster. Layers larger
+//! than the cluster's remaining memory loop back to Level 1 for another
+//! cluster (Algorithm 1's `while totalRemainingWeights > 0`).
+
+use super::policy::{argmax_action, masked_softmax, sample_action, PolicyEval};
+use super::proximity::assign_in_cluster;
+use super::state::{StateEncoder, NUM_CLUSTERS};
+use super::{Scheduler, SysSnapshot};
+use crate::arch::Arch;
+use crate::sim::mapping::{LayerAssignment, Mapping};
+use crate::util::rng::Rng;
+use crate::workload::Job;
+
+/// Runtime preference vector ω (ω_L + ω_E = 1, §4.1).
+pub type Preference = [f32; 2];
+
+pub const PREF_EXEC_TIME: Preference = [1.0, 0.0];
+pub const PREF_BALANCED: Preference = [0.5, 0.5];
+pub const PREF_ENERGY: Preference = [0.0, 1.0];
+
+/// One Level-1 decision, recorded for PPO training.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub job_id: u64,
+    pub state: Vec<f32>,
+    pub mask: [bool; NUM_CLUSTERS],
+    pub action: usize,
+    pub logp: f32,
+}
+
+/// Action selection mode.
+pub enum SelectMode {
+    /// Runtime: argmax over the masked distribution.
+    Greedy,
+    /// Training rollouts: stochastic sampling.
+    Sample(Rng),
+}
+
+pub struct ThermosSched<P: PolicyEval> {
+    arch: Arch,
+    encoder: StateEncoder,
+    pub policy: P,
+    pub omega: Preference,
+    pub mode: SelectMode,
+    /// When set, every Level-1 decision is recorded for the trainer.
+    pub record: bool,
+    pub decisions: Vec<Decision>,
+}
+
+impl<P: PolicyEval> ThermosSched<P> {
+    pub fn new(arch: Arch, encoder: StateEncoder, policy: P, omega: Preference) -> Self {
+        assert!((omega[0] + omega[1] - 1.0).abs() < 1e-5, "preferences must sum to 1");
+        ThermosSched {
+            arch,
+            encoder,
+            policy,
+            omega,
+            mode: SelectMode::Greedy,
+            record: false,
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn sampling(mut self, rng: Rng) -> Self {
+        self.mode = SelectMode::Sample(rng);
+        self
+    }
+
+    pub fn recording(mut self) -> Self {
+        self.record = true;
+        self
+    }
+
+    pub fn take_decisions(&mut self) -> Vec<Decision> {
+        std::mem::take(&mut self.decisions)
+    }
+
+    /// Valid-action mask over clusters given the working free-memory view.
+    fn mask(&self, snap: &SysSnapshot, free: &[u64]) -> [bool; NUM_CLUSTERS] {
+        let mut m = [false; NUM_CLUSTERS];
+        for (cl, mm) in m.iter_mut().enumerate() {
+            *mm = self.arch.clusters[cl]
+                .iter()
+                .any(|&c| free[c] > 0 && !snap.throttled[c]);
+        }
+        m
+    }
+}
+
+impl<P: PolicyEval> Scheduler for ThermosSched<P> {
+    fn name(&self) -> &'static str {
+        "thermos"
+    }
+
+    fn schedule(&mut self, job: &Job, snap: &SysSnapshot) -> Option<Mapping> {
+        // Algorithm 1 line 4: weights must fit available memory.
+        let usable: u64 = (0..self.arch.num_chiplets())
+            .filter(|&c| !snap.throttled[c])
+            .map(|c| snap.free_bits[c])
+            .sum();
+        if job.dcg.total_weight_bits() > usable {
+            return None;
+        }
+        let mut free = snap.free_bits.clone();
+        let mut layers = Vec::with_capacity(job.dcg.num_layers());
+        let mut prev: Vec<(usize, u64)> = Vec::new();
+        let checkpoint = self.decisions.len();
+
+        for (li, layer) in job.dcg.layers.iter().enumerate() {
+            let mut need = layer.weight_bits;
+            let mut parts: Vec<(usize, u64)> = Vec::new();
+            while need > 0 {
+                let mask = self.mask(snap, &free);
+                if !mask.iter().any(|&m| m) {
+                    self.decisions.truncate(checkpoint);
+                    return None;
+                }
+                // Level 1: MORL cluster selection.
+                let state = self.encoder.encode(
+                    &self.arch, snap, job, li, need, &prev, self.omega,
+                );
+                let logits = self.policy.logits(&state);
+                let probs = masked_softmax(&logits, &mask);
+                let (action, logp) = match &mut self.mode {
+                    SelectMode::Greedy => {
+                        let a = argmax_action(&probs);
+                        (a, probs[a].max(1e-12).ln())
+                    }
+                    SelectMode::Sample(rng) => sample_action(&probs, rng),
+                };
+                if self.record {
+                    self.decisions.push(Decision {
+                        job_id: job.id,
+                        state: state.to_vec(),
+                        mask,
+                        action,
+                        logp,
+                    });
+                }
+                // Level 2: proximity-driven placement inside the cluster.
+                let placed = assign_in_cluster(&self.arch, snap, &mut free, action, need, &prev);
+                let got: u64 = placed.iter().map(|&(_, b)| b).sum();
+                if got == 0 {
+                    // Masked cluster selection guarantees progress; zero
+                    // placement means the mask and memory view diverged.
+                    self.decisions.truncate(checkpoint);
+                    return None;
+                }
+                need -= got;
+                parts.extend(placed);
+            }
+            prev = parts.clone();
+            layers.push(LayerAssignment { parts });
+        }
+        Some(Mapping { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+    use crate::sched::policy::NativeDdt;
+    use crate::sched::state::STATE_DIM;
+    use crate::workload::{DnnModel, ModelZoo};
+
+    fn setup(omega: Preference) -> (Arch, SysSnapshot, ThermosSched<NativeDdt>, Job) {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let snap = SysSnapshot::fresh(&arch);
+        let zoo = ModelZoo::new();
+        let enc = StateEncoder::new(&arch, &zoo, 20_000);
+        let mut rng = Rng::new(11);
+        let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+        let sched = ThermosSched::new(arch.clone(), enc, ddt, omega);
+        let job = Job { id: 7, dcg: zoo.dcg(DnnModel::ResNet18), images: 1000, arrival_s: 0.0 };
+        (arch, snap, sched, job)
+    }
+
+    #[test]
+    fn untrained_policy_produces_complete_mapping() {
+        let (arch, snap, mut sched, job) = setup(PREF_BALANCED);
+        let m = sched.schedule(&job, &snap).expect("fits in empty system");
+        assert_eq!(m.layers.len(), job.dcg.num_layers());
+        for (i, la) in m.layers.iter().enumerate() {
+            assert_eq!(la.total_bits(), job.dcg.layers[i].weight_bits, "layer {i}");
+        }
+        let per = m.bits_per_chiplet(arch.num_chiplets());
+        for (c, &b) in per.iter().enumerate() {
+            assert!(b <= snap.free_bits[c], "chiplet {c} overcommitted");
+        }
+    }
+
+    #[test]
+    fn records_decisions_when_asked() {
+        let (_, snap, mut sched, job) = setup(PREF_EXEC_TIME);
+        sched.record = true;
+        sched.mode = SelectMode::Sample(Rng::new(3));
+        let _ = sched.schedule(&job, &snap).unwrap();
+        let ds = sched.take_decisions();
+        // At least one decision per layer (more when tiling spills).
+        assert!(ds.len() >= job.dcg.num_layers());
+        for d in &ds {
+            assert_eq!(d.job_id, 7);
+            assert_eq!(d.state.len(), STATE_DIM);
+            assert!(d.mask[d.action], "sampled action must be valid");
+            assert!(d.logp <= 0.0);
+            // Preference is embedded in the recorded state.
+            assert_eq!(d.state[20], 1.0);
+            assert_eq!(d.state[21], 0.0);
+        }
+        assert!(sched.take_decisions().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn declines_on_throttled_system_and_rolls_back_decisions() {
+        let (_, mut snap, mut sched, job) = setup(PREF_ENERGY);
+        sched.record = true;
+        snap.throttled.iter_mut().for_each(|t| *t = true);
+        assert!(sched.schedule(&job, &snap).is_none());
+        assert!(sched.take_decisions().is_empty(), "failed schedule must not leak decisions");
+    }
+
+    #[test]
+    fn huge_layer_tiles_across_clusters() {
+        let (arch, snap, mut sched, _) = setup(PREF_BALANCED);
+        let zoo = ModelZoo::new();
+        // AlexNet fc6 exceeds every single cluster's capacity → the
+        // while-loop must produce parts in ≥ 2 clusters.
+        let job = Job { id: 1, dcg: zoo.dcg(DnnModel::AlexNet), images: 10, arrival_s: 0.0 };
+        let m = sched.schedule(&job, &snap).expect("alexnet fits the system");
+        let fc6 = job.dcg.layers.iter().position(|l| l.name == "fc6").unwrap();
+        let clusters_used: std::collections::HashSet<usize> = m.layers[fc6]
+            .parts
+            .iter()
+            .map(|&(c, _)| arch.chiplets[c].pim as usize)
+            .collect();
+        assert!(clusters_used.len() >= 2, "fc6 should span clusters: {clusters_used:?}");
+    }
+}

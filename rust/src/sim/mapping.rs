@@ -1,0 +1,328 @@
+//! Mappings (scheduling policies Ψ for one job) and the deterministic
+//! execution profile derived from a mapping: per-frame stage times,
+//! pipeline bottleneck, and energy — the quantities both the simulator
+//! and the primary reward (§4.3.3) are computed from.
+
+use crate::arch::Arch;
+use crate::pim::ComputeModel;
+use crate::workload::Dcg;
+
+/// Weight placement of one neural layer: `(chiplet id, weight bits)`
+/// parts. Σ parts == the layer's `weight_bits` for a complete assignment.
+#[derive(Clone, Debug, Default)]
+pub struct LayerAssignment {
+    pub parts: Vec<(usize, u64)>,
+}
+
+impl LayerAssignment {
+    pub fn total_bits(&self) -> u64 {
+        self.parts.iter().map(|&(_, b)| b).sum()
+    }
+}
+
+/// Scheduling decision for an entire job (Ψ = ⋃ ψ_i, Algorithm 1 line 13).
+#[derive(Clone, Debug, Default)]
+pub struct Mapping {
+    pub layers: Vec<LayerAssignment>,
+}
+
+impl Mapping {
+    /// Bits placed per chiplet (for memory commit/release).
+    pub fn bits_per_chiplet(&self, n_chiplets: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n_chiplets];
+        for la in &self.layers {
+            for &(c, b) in &la.parts {
+                v[c] += b;
+            }
+        }
+        v
+    }
+
+    /// Distinct chiplets used.
+    pub fn chiplets_used(&self) -> Vec<usize> {
+        let mut used: Vec<usize> = self
+            .layers
+            .iter()
+            .flat_map(|la| la.parts.iter().map(|&(c, _)| c))
+            .collect();
+        used.sort_unstable();
+        used.dedup();
+        used
+    }
+}
+
+/// Per-layer deterministic execution figures for one frame.
+#[derive(Clone, Debug)]
+pub struct StageProfile {
+    /// Compute time of the slowest part (parts run in parallel).
+    pub compute_s: f64,
+    /// NoI transfer time of the layer's input activations.
+    pub comm_s: f64,
+    /// Dynamic compute energy of all parts.
+    pub compute_j: f64,
+    /// NoI transfer energy of the input activations.
+    pub comm_j: f64,
+}
+
+impl StageProfile {
+    pub fn stage_s(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+}
+
+/// Deterministic (no-throttle) execution profile of a mapped job —
+/// weight-stationary pipeline over the stream of frames (§3.3).
+#[derive(Clone, Debug)]
+pub struct ExecProfile {
+    pub stages: Vec<StageProfile>,
+    /// Pipeline fill latency: Σ stage times (s/frame).
+    pub frame_latency_s: f64,
+    /// Pipeline bottleneck: max stage time — steady-state seconds/frame.
+    pub bottleneck_s: f64,
+    /// Dynamic energy (compute + comm) per frame (J).
+    pub frame_energy_j: f64,
+    /// One-time weight programming: time at the shared I/O and energy.
+    pub load_time_s: f64,
+    pub load_energy_j: f64,
+    /// Per-chiplet MACs per frame (for runtime power computation).
+    pub macs_per_chiplet_frame: Vec<f64>,
+}
+
+impl ExecProfile {
+    /// Ideal execution time for `frames` inputs: weight load + pipeline
+    /// fill + steady-state streaming.
+    pub fn ideal_exec_s(&self, frames: u64) -> f64 {
+        if frames == 0 {
+            return self.load_time_s;
+        }
+        self.load_time_s + self.frame_latency_s + (frames - 1) as f64 * self.bottleneck_s
+    }
+
+    /// Ideal dynamic energy for `frames` inputs (leakage is accounted at
+    /// runtime because it depends on wall-clock residency).
+    pub fn ideal_dynamic_j(&self, frames: u64) -> f64 {
+        self.load_energy_j + frames as f64 * self.frame_energy_j
+    }
+
+    /// Build the profile for `dcg` under `mapping` on `arch`.
+    ///
+    /// Communication model: the activations into layer i (volume
+    /// `dcg.in_bits(i)`) travel from the producer parts to the consumer
+    /// parts; cost uses the share-weighted mean hop count
+    /// `h̄ = Σ_s Σ_d w_s·w_d·hops(s,d)` — the same weighted-distance notion
+    /// the proximity algorithm (§4.4) minimizes.
+    pub fn compute(arch: &Arch, cm: &ComputeModel, dcg: &Dcg, mapping: &Mapping) -> ExecProfile {
+        assert_eq!(mapping.layers.len(), dcg.num_layers(), "mapping must cover all layers");
+        let link = &arch.topology.link;
+        let mut stages = Vec::with_capacity(dcg.num_layers());
+        let mut macs_per_chiplet = vec![0.0f64; arch.num_chiplets()];
+        let mut load_time_s = 0.0;
+        let mut load_energy_j = 0.0;
+
+        for (i, layer) in dcg.layers.iter().enumerate() {
+            let parts = &mapping.layers[i].parts;
+            debug_assert!(!parts.is_empty(), "layer {i} unassigned");
+            let total_bits = mapping.layers[i].total_bits().max(1) as f64;
+
+            // Compute: parts execute in parallel; MACs split ∝ weight share.
+            let mut compute_s: f64 = 0.0;
+            let mut compute_j = 0.0;
+            for &(c, bits) in parts {
+                let share = bits as f64 / total_bits;
+                let macs = layer.macs as f64 * share;
+                let spec = arch.spec(c);
+                compute_s = compute_s.max(cm.mac_time_s(spec, macs));
+                compute_j += cm.mac_energy_j(spec, macs);
+                macs_per_chiplet[c] += macs;
+                let (lt, le) = cm.weight_load(spec, bits as f64);
+                load_time_s += lt;
+                load_energy_j += le;
+            }
+
+            // Communication: share-weighted mean hops from producers.
+            let in_bits = dcg.in_bits(i) as f64;
+            let mean_hops = if i == 0 {
+                // From the I/O boundary: approximate with distance from
+                // chiplet 0's corner — one traversal of the mean position.
+                let h: f64 = parts
+                    .iter()
+                    .map(|&(c, b)| {
+                        arch.hops(0, c) as f64 * b as f64 / total_bits
+                    })
+                    .sum();
+                h
+            } else {
+                let prev = &mapping.layers[i - 1].parts;
+                let prev_total = mapping.layers[i - 1].total_bits().max(1) as f64;
+                let mut h = 0.0;
+                for &(s, sb) in prev {
+                    for &(d, db) in parts {
+                        h += (sb as f64 / prev_total)
+                            * (db as f64 / total_bits)
+                            * arch.hops(s, d) as f64;
+                    }
+                }
+                h
+            };
+            let comm_s = link.transfer_time_s(in_bits, mean_hops.ceil() as u32);
+            let comm_j = in_bits * mean_hops * link.energy_per_bit_hop_j;
+            stages.push(StageProfile { compute_s, comm_s, compute_j, comm_j });
+        }
+
+        let frame_latency_s = stages.iter().map(|s| s.stage_s()).sum();
+        let bottleneck_s =
+            stages.iter().map(|s| s.stage_s()).fold(0.0f64, f64::max);
+        let frame_energy_j =
+            stages.iter().map(|s| s.compute_j + s.comm_j).sum();
+        ExecProfile {
+            stages,
+            frame_latency_s,
+            bottleneck_s,
+            frame_energy_j,
+            load_time_s,
+            load_energy_j,
+            macs_per_chiplet_frame: macs_per_chiplet,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::noi::NoiTopology;
+    use crate::workload::{DnnModel, ModelZoo};
+
+    fn setup() -> (Arch, ComputeModel, Dcg) {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let zoo = ModelZoo::new();
+        (arch, ComputeModel::default(), zoo.dcg(DnnModel::ResNet50))
+    }
+
+    /// Everything on one fast chiplet type vs spread across one slow type.
+    fn single_cluster_mapping(arch: &Arch, dcg: &Dcg, cluster: usize) -> Mapping {
+        // Fill chiplets of `cluster` round-robin, capacity-bounded.
+        let ids = &arch.clusters[cluster];
+        let cap = arch.specs[cluster].mem_bits;
+        assert!(
+            dcg.total_weight_bits() <= cap * ids.len() as u64,
+            "model does not fit cluster {cluster}"
+        );
+        let mut free: Vec<u64> = vec![cap; ids.len()];
+        let mut layers = Vec::new();
+        let mut k = 0usize;
+        for l in &dcg.layers {
+            let mut need = l.weight_bits;
+            let mut parts = Vec::new();
+            while need > 0 {
+                let idx = k % ids.len();
+                if free[idx] == 0 {
+                    k += 1;
+                    continue;
+                }
+                let take = need.min(free[idx]);
+                parts.push((ids[idx], take));
+                free[idx] -= take;
+                need -= take;
+                if free[idx] == 0 {
+                    k += 1;
+                }
+            }
+            layers.push(LayerAssignment { parts });
+        }
+        Mapping { layers }
+    }
+
+    #[test]
+    fn profile_pipeline_invariants() {
+        let (arch, cm, dcg) = setup();
+        let mapping = single_cluster_mapping(&arch, &dcg, 1); // shared-ADC fits AlexNet
+        let p = ExecProfile::compute(&arch, &cm, &dcg, &mapping);
+        assert_eq!(p.stages.len(), dcg.num_layers());
+        assert!(p.bottleneck_s > 0.0);
+        assert!(p.frame_latency_s >= p.bottleneck_s);
+        let sum: f64 = p.stages.iter().map(|s| s.stage_s()).sum();
+        assert!((p.frame_latency_s - sum).abs() < 1e-12);
+        // Exec time grows linearly with frames at the bottleneck rate.
+        let t100 = p.ideal_exec_s(100);
+        let t200 = p.ideal_exec_s(200);
+        assert!(((t200 - t100) - 100.0 * p.bottleneck_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn standard_cluster_faster_but_hungrier_than_shared_adc() {
+        let (arch, cm, _) = setup();
+        let zoo = ModelZoo::new();
+        // MobileNet fits both the standard and shared-ADC clusters whole.
+        let dcg = zoo.dcg(DnnModel::MobileNetV3Large);
+        let fast = single_cluster_mapping(&arch, &dcg, 0);
+        let eff = single_cluster_mapping(&arch, &dcg, 1);
+        let pf = ExecProfile::compute(&arch, &cm, &dcg, &fast);
+        let pe = ExecProfile::compute(&arch, &cm, &dcg, &eff);
+        assert!(
+            pf.frame_energy_j > pe.frame_energy_j,
+            "standard {} J vs shared-adc {} J",
+            pf.frame_energy_j,
+            pe.frame_energy_j
+        );
+        // Compute-only bottleneck comparison (comm may differ):
+        let cf: f64 = pf.stages.iter().map(|s| s.compute_s).fold(0.0, f64::max);
+        let ce: f64 = pe.stages.iter().map(|s| s.compute_s).fold(0.0, f64::max);
+        assert!(cf < ce, "standard compute {cf} vs shared-adc {ce}");
+    }
+
+    #[test]
+    fn spreading_a_layer_reduces_compute_time() {
+        let (arch, cm, dcg) = setup();
+        // Layer fully on one chiplet vs split across two.
+        let l0 = &dcg.layers[0];
+        let one = Mapping {
+            layers: std::iter::once(LayerAssignment { parts: vec![(0, l0.weight_bits)] })
+                .chain(dcg.layers[1..].iter().map(|l| LayerAssignment {
+                    parts: vec![(1, l.weight_bits)],
+                }))
+                .collect(),
+        };
+        let two = Mapping {
+            layers: std::iter::once(LayerAssignment {
+                parts: vec![(0, l0.weight_bits / 2), (2, l0.weight_bits - l0.weight_bits / 2)],
+            })
+            .chain(dcg.layers[1..].iter().map(|l| LayerAssignment {
+                parts: vec![(1, l.weight_bits)],
+            }))
+            .collect(),
+        };
+        let p1 = ExecProfile::compute(&arch, &cm, &dcg, &one);
+        let p2 = ExecProfile::compute(&arch, &cm, &dcg, &two);
+        assert!(p2.stages[0].compute_s < p1.stages[0].compute_s);
+    }
+
+    #[test]
+    fn distant_consumer_costs_more_comm() {
+        let (arch, cm, dcg) = setup();
+        let base: Vec<LayerAssignment> = dcg
+            .layers
+            .iter()
+            .map(|l| LayerAssignment { parts: vec![(0, l.weight_bits)] })
+            .collect();
+        let mut near = base.clone();
+        near[1] = LayerAssignment { parts: vec![(1, dcg.layers[1].weight_bits)] };
+        let mut far = base.clone();
+        let far_id = arch.num_chiplets() - 1;
+        far[1] = LayerAssignment { parts: vec![(far_id, dcg.layers[1].weight_bits)] };
+        let pn = ExecProfile::compute(&arch, &cm, &dcg, &Mapping { layers: near });
+        let pf = ExecProfile::compute(&arch, &cm, &dcg, &Mapping { layers: far });
+        assert!(pf.stages[1].comm_s > pn.stages[1].comm_s);
+        assert!(pf.stages[1].comm_j > pn.stages[1].comm_j);
+    }
+
+    #[test]
+    fn macs_accounting_conserved() {
+        let (arch, cm, dcg) = setup();
+        let mapping = single_cluster_mapping(&arch, &dcg, 1);
+        let p = ExecProfile::compute(&arch, &cm, &dcg, &mapping);
+        let total: f64 = p.macs_per_chiplet_frame.iter().sum();
+        let expect = dcg.total_macs() as f64;
+        assert!((total - expect).abs() / expect < 1e-9);
+    }
+}

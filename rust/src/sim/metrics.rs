@@ -1,0 +1,160 @@
+//! Simulation metrics: per-job statistics and run-level aggregates —
+//! the quantities every figure/table of §5 is built from.
+
+use crate::util::json::Json;
+use crate::util::stats::mean;
+use crate::workload::DnnModel;
+
+/// Per-completed-job record.
+#[derive(Clone, Debug)]
+pub struct JobStats {
+    pub id: u64,
+    pub model: DnnModel,
+    pub images: u64,
+    /// Host arrival time (s).
+    pub arrival_s: f64,
+    /// Time the scheduler mapped the job (execution start).
+    pub mapped_s: f64,
+    pub completed_s: f64,
+    /// Execution time: mapped → completed (§5.1 definition).
+    pub exec_s: f64,
+    /// End-to-end latency: arrival → completed (includes queue wait).
+    pub e2e_s: f64,
+    /// Measured energy: dynamic (compute + comm + weight load) plus the
+    /// job's attributed share of leakage over its residency.
+    pub energy_j: f64,
+    /// Deterministic (no-throttle) execution time — primary reward basis.
+    pub ideal_exec_s: f64,
+    /// Deterministic dynamic energy — primary reward basis.
+    pub ideal_energy_j: f64,
+    /// Throttle-induced stall time — secondary reward basis (§4.3.3).
+    pub stall_s: f64,
+    /// Extra leakage burned while stalled — secondary reward basis.
+    pub stall_leak_j: f64,
+}
+
+impl JobStats {
+    pub fn edp(&self) -> f64 {
+        self.exec_s * self.energy_j
+    }
+}
+
+/// Aggregates over one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub scheduler: String,
+    /// Jobs completed inside the measurement window.
+    pub jobs: Vec<JobStats>,
+    /// Achieved throughput: completed jobs / measurement window (DNNs/s).
+    pub throughput_jobs_s: f64,
+    pub mean_exec_s: f64,
+    pub mean_e2e_s: f64,
+    pub mean_energy_j: f64,
+    /// Mean per-job EDP (J·s).
+    pub mean_edp: f64,
+    /// Chiplet-seconds spent above T_max during the run.
+    pub violation_chiplet_s: f64,
+    /// Number of throttle events latched.
+    pub throttle_events: u64,
+    pub max_temp_k: f64,
+    /// Whole-system energy over the measurement window (J).
+    pub system_energy_j: f64,
+    pub sim_time_s: f64,
+    pub host_stalls: u64,
+    /// Jobs completed in total (including warm-up).
+    pub completed_total: u64,
+    /// Optional time trace: (t, per-cluster max temp, queue length,
+    /// active jobs).
+    pub trace: Vec<TracePoint>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub t_s: f64,
+    pub cluster_max_temp_k: [f64; 4],
+    pub queue_len: usize,
+    pub active_jobs: usize,
+}
+
+impl SimResult {
+    pub fn from_jobs(
+        scheduler: String,
+        jobs: Vec<JobStats>,
+        window_s: f64,
+    ) -> SimResult {
+        let throughput = jobs.len() as f64 / window_s.max(1e-9);
+        let exec: Vec<f64> = jobs.iter().map(|j| j.exec_s).collect();
+        let e2e: Vec<f64> = jobs.iter().map(|j| j.e2e_s).collect();
+        let energy: Vec<f64> = jobs.iter().map(|j| j.energy_j).collect();
+        let edp: Vec<f64> = jobs.iter().map(|j| j.edp()).collect();
+        SimResult {
+            scheduler,
+            throughput_jobs_s: throughput,
+            mean_exec_s: mean(&exec),
+            mean_e2e_s: mean(&e2e),
+            mean_energy_j: mean(&energy),
+            mean_edp: mean(&edp),
+            jobs,
+            violation_chiplet_s: 0.0,
+            throttle_events: 0,
+            max_temp_k: 0.0,
+            system_energy_j: 0.0,
+            sim_time_s: 0.0,
+            host_stalls: 0,
+            completed_total: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Compact JSON for results/ files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("throughput_jobs_s", Json::Num(self.throughput_jobs_s)),
+            ("mean_exec_s", Json::Num(self.mean_exec_s)),
+            ("mean_e2e_s", Json::Num(self.mean_e2e_s)),
+            ("mean_energy_j", Json::Num(self.mean_energy_j)),
+            ("mean_edp", Json::Num(self.mean_edp)),
+            ("violation_chiplet_s", Json::Num(self.violation_chiplet_s)),
+            ("throttle_events", Json::Num(self.throttle_events as f64)),
+            ("max_temp_k", Json::Num(self.max_temp_k)),
+            ("system_energy_j", Json::Num(self.system_energy_j)),
+            ("completed", Json::Num(self.jobs.len() as f64)),
+            ("host_stalls", Json::Num(self.host_stalls as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn js(exec: f64, energy: f64) -> JobStats {
+        JobStats {
+            id: 0,
+            model: DnnModel::AlexNet,
+            images: 10,
+            arrival_s: 0.0,
+            mapped_s: 1.0,
+            completed_s: 1.0 + exec,
+            exec_s: exec,
+            e2e_s: 1.0 + exec,
+            energy_j: energy,
+            ideal_exec_s: exec,
+            ideal_energy_j: energy,
+            stall_s: 0.0,
+            stall_leak_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = SimResult::from_jobs("x".into(), vec![js(1.0, 2.0), js(3.0, 4.0)], 10.0);
+        assert!((r.throughput_jobs_s - 0.2).abs() < 1e-12);
+        assert!((r.mean_exec_s - 2.0).abs() < 1e-12);
+        assert!((r.mean_energy_j - 3.0).abs() < 1e-12);
+        assert!((r.mean_edp - (2.0 + 12.0) / 2.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.get("completed").as_usize(), Some(2));
+    }
+}

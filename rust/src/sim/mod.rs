@@ -1,0 +1,16 @@
+//! Streaming multi-workload simulator (§5.1, Fig. 5).
+//!
+//! The host dispatches DL jobs at a Poisson admit rate into a FIFO queue
+//! (depth 20); the scheduler maps each queue-head job onto the chiplets
+//! when memory suffices; mapped jobs execute as weight-stationary
+//! pipelines over their image streams while the RC thermal model advances
+//! at 100 ms and throttles chiplets that violate Eq. 2. Metrics are
+//! collected after a warm-up period.
+
+pub mod engine;
+pub mod mapping;
+pub mod metrics;
+
+pub use engine::{SimConfig, Simulator};
+pub use mapping::{ExecProfile, LayerAssignment, Mapping};
+pub use metrics::{JobStats, SimResult};

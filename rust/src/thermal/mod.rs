@@ -1,0 +1,338 @@
+//! Compact thermal model of the 2.5D package — our substitute for the
+//! MFIT [45] discrete-state-space (DSS) mode the paper uses.
+//!
+//! RC network built from the floorplan: one node per chiplet die, one
+//! interposer node under each die, and a shared lid/heat-spreader node;
+//! ambient is the boundary. The continuous system
+//! `C·dT/dt = -G·T + P + g_amb·T_amb` is discretized once at construction
+//! with a matrix exponential (`x[k+1] = A_d x[k] + B_d P[k]`,
+//! `x = T - T_amb`) at the paper's 100 ms sampling interval, so each
+//! simulation step is a pair of mat-vecs — the same "very fast
+//! matrix-vector formulation" the paper credits MFIT's DSS model for.
+
+use crate::arch::Arch;
+use crate::util::linalg::Mat;
+
+/// Package physical constants (DESIGN.md §6). Tuned so that sustained
+/// full-rate activity on the ReRAM-heavy regions approaches the 330 K
+/// Eq. 2 threshold with 300 K ambient — the regime the paper's thermal
+/// management operates in.
+#[derive(Clone, Debug)]
+pub struct ThermalParams {
+    /// Die heat capacity per mm² of die area (J/K/mm²): 0.3 mm silicon
+    /// plus metallization.
+    pub die_c_per_mm2: f64,
+    /// Interposer node heat capacity per mm² (J/K/mm²).
+    pub interposer_c_per_mm2: f64,
+    /// Lid / heat-spreader heat capacity (J/K).
+    pub lid_c: f64,
+    /// Die → interposer vertical conductance per mm² (W/K/mm²), microbumps.
+    pub die_interposer_g_per_mm2: f64,
+    /// Die → lid conductance per mm² (W/K/mm²), TIM.
+    pub die_lid_g_per_mm2: f64,
+    /// Lateral interposer conductance between adjacent nodes (W/K).
+    pub lateral_g: f64,
+    /// Interposer → board/ambient conductance per node (W/K).
+    pub interposer_amb_g: f64,
+    /// Lid → ambient (heatsink) conductance (W/K).
+    pub lid_amb_g: f64,
+    /// Sampling interval (s); paper: 100 ms.
+    pub dt_s: f64,
+}
+
+impl Default for ThermalParams {
+    fn default() -> Self {
+        ThermalParams {
+            die_c_per_mm2: 5.0e-4,
+            interposer_c_per_mm2: 2.5e-4,
+            lid_c: 18.0,
+            die_interposer_g_per_mm2: 0.125, // 2 K/W for a 4 mm² die
+            die_lid_g_per_mm2: 0.017,        // ≈15 K/W for a 4 mm² die
+            lateral_g: 0.015,
+            interposer_amb_g: 0.003,
+            lid_amb_g: 0.22,
+            dt_s: 0.1,
+        }
+    }
+}
+
+/// Discrete-state-space thermal model.
+#[derive(Clone, Debug)]
+pub struct DssModel {
+    n_chiplets: usize,
+    n_nodes: usize,
+    /// x[k+1] = ad·x[k] + bd·p[k], x = T - T_amb, p = per-chiplet power.
+    ad: Mat,
+    bd: Mat,
+    /// Fused [A_d | B_d] (row-major, n_nodes × (n_nodes + n_chiplets)) so
+    /// the per-step update is ONE contiguous matvec over z = [x; p]
+    /// (EXPERIMENTS.md §Perf: ~1.5× faster than two separate passes).
+    abd: Mat,
+    /// Current state (K above ambient), length n_nodes.
+    x: Vec<f64>,
+    /// Fused input vector z = [x; p] staging buffer.
+    z: Vec<f64>,
+    scratch: Vec<f64>,
+    pub t_ambient: f64,
+    pub params: ThermalParams,
+}
+
+impl DssModel {
+    pub fn new(arch: &Arch, params: ThermalParams) -> DssModel {
+        let n = arch.num_chiplets();
+        let n_nodes = 2 * n + 1; // dies, interposer nodes, lid
+        let die = |i: usize| i;
+        let ipo = |i: usize| n + i;
+        let lid = 2 * n;
+
+        // Heat capacities.
+        let mut c = vec![0.0; n_nodes];
+        for (i, ch) in arch.chiplets.iter().enumerate() {
+            let area = arch.specs[ch.pim as usize].area_mm2;
+            c[die(i)] = params.die_c_per_mm2 * area;
+            c[ipo(i)] = params.interposer_c_per_mm2 * area;
+        }
+        c[lid] = params.lid_c;
+
+        // Conductance (Laplacian) assembly: g[(a,b)] adds -g off-diagonal,
+        // +g to both diagonals; ambient couplings add to diagonal only.
+        let mut gmat = Mat::zeros(n_nodes, n_nodes);
+        let couple = |g: &mut Mat, a: usize, b: usize, v: f64| {
+            g[(a, b)] -= v;
+            g[(b, a)] -= v;
+            g[(a, a)] += v;
+            g[(b, b)] += v;
+        };
+        for (i, ch) in arch.chiplets.iter().enumerate() {
+            let area = arch.specs[ch.pim as usize].area_mm2;
+            couple(&mut gmat, die(i), ipo(i), params.die_interposer_g_per_mm2 * area);
+            couple(&mut gmat, die(i), lid, params.die_lid_g_per_mm2 * area);
+            gmat[(ipo(i), ipo(i))] += params.interposer_amb_g;
+        }
+        gmat[(lid, lid)] += params.lid_amb_g;
+
+        // Lateral interposer coupling between physically adjacent dies
+        // (orthogonal + staggered neighbours: centre distance ≤ 1.25×pitch).
+        let pitch = crate::noi::topologies::PITCH_MM;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if arch.topology.dist_mm(i, j) <= 1.25 * pitch {
+                    couple(&mut gmat, ipo(i), ipo(j), params.lateral_g);
+                }
+            }
+        }
+
+        // A = -C⁻¹·G ; B = C⁻¹·E (E maps chiplet power onto die nodes).
+        let mut a = Mat::zeros(n_nodes, n_nodes);
+        for r in 0..n_nodes {
+            for cix in 0..n_nodes {
+                a[(r, cix)] = -gmat[(r, cix)] / c[r];
+            }
+        }
+        let mut b = Mat::zeros(n_nodes, n);
+        for i in 0..n {
+            b[(die(i), i)] = 1.0 / c[die(i)];
+        }
+
+        // Discretize: A_d = expm(A·dt); B_d = A⁻¹(A_d − I)·B.
+        let ad = a.scale(params.dt_s).expm();
+        let ad_minus_i = ad.sub(&Mat::eye(n_nodes));
+        let bd = a.solve(&ad_minus_i.matmul(&b));
+
+        // Fuse [A_d | B_d] for the single-pass step.
+        let mut abd = Mat::zeros(n_nodes, n_nodes + n);
+        for r in 0..n_nodes {
+            abd.data[r * (n_nodes + n)..r * (n_nodes + n) + n_nodes]
+                .copy_from_slice(ad.row(r));
+            abd.data[r * (n_nodes + n) + n_nodes..(r + 1) * (n_nodes + n)]
+                .copy_from_slice(bd.row(r));
+        }
+
+        DssModel {
+            n_chiplets: n,
+            n_nodes,
+            ad,
+            bd,
+            abd,
+            x: vec![0.0; n_nodes],
+            z: vec![0.0; n_nodes + n],
+            scratch: vec![0.0; n_nodes],
+            t_ambient: arch.t_ambient,
+            params,
+        }
+    }
+
+    pub fn from_arch(arch: &Arch) -> DssModel {
+        DssModel::new(arch, ThermalParams::default())
+    }
+
+    /// Advance one Δt with the given per-chiplet power vector (W).
+    /// x' = A_d·x + B_d·p, computed as one fused pass [A_d|B_d]·[x;p].
+    pub fn step(&mut self, powers: &[f64]) {
+        assert_eq!(powers.len(), self.n_chiplets);
+        self.z[..self.n_nodes].copy_from_slice(&self.x);
+        self.z[self.n_nodes..].copy_from_slice(powers);
+        self.abd.matvec(&self.z, &mut self.scratch);
+        std::mem::swap(&mut self.x, &mut self.scratch);
+    }
+
+    /// Die temperature of chiplet `i`, Kelvin (T_i(t) in the ACG).
+    #[inline]
+    pub fn temp(&self, i: usize) -> f64 {
+        self.t_ambient + self.x[i]
+    }
+
+    /// All die temperatures.
+    pub fn die_temps(&self) -> Vec<f64> {
+        (0..self.n_chiplets).map(|i| self.temp(i)).collect()
+    }
+
+    pub fn lid_temp(&self) -> f64 {
+        self.t_ambient + self.x[self.n_nodes - 1]
+    }
+
+    /// Steady-state die temperatures for a constant power vector
+    /// (x_ss = −A⁻¹·B·p solved via the discretized system:
+    /// x_ss = (I − A_d)⁻¹ B_d p).
+    pub fn steady_state(&self, powers: &[f64]) -> Vec<f64> {
+        let n = self.n_nodes;
+        let i_minus_ad = Mat::eye(n).sub(&self.ad);
+        let mut bp = Mat::zeros(n, 1);
+        for r in 0..n {
+            let row = self.bd.row(r);
+            bp[(r, 0)] = powers.iter().enumerate().map(|(j, &p)| row[j] * p).sum();
+        }
+        let xss = i_minus_ad.solve(&bp);
+        (0..self.n_chiplets).map(|i| self.t_ambient + xss[(i, 0)]).collect()
+    }
+
+    /// Reset all nodes to ambient.
+    pub fn reset(&mut self) {
+        self.x.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::noi::NoiTopology;
+
+    fn small_arch() -> Arch {
+        Arch::heterogeneous(NoiTopology::Mesh, [4, 4, 2, 2])
+    }
+
+    #[test]
+    fn zero_power_stays_ambient() {
+        let arch = small_arch();
+        let mut m = DssModel::from_arch(&arch);
+        let p = vec![0.0; arch.num_chiplets()];
+        for _ in 0..100 {
+            m.step(&p);
+        }
+        for i in 0..arch.num_chiplets() {
+            assert!((m.temp(i) - 300.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn heating_raises_and_converges_to_steady_state() {
+        let arch = small_arch();
+        let mut m = DssModel::from_arch(&arch);
+        let mut p = vec![0.0; arch.num_chiplets()];
+        p[0] = 0.5;
+        let ss = m.steady_state(&p);
+        // Long run converges to the steady state.
+        for _ in 0..20_000 {
+            m.step(&p);
+        }
+        assert!((m.temp(0) - ss[0]).abs() < 0.05, "{} vs {}", m.temp(0), ss[0]);
+        assert!(ss[0] > 300.5, "hot die should rise: {}", ss[0]);
+        // Monotone rise from ambient for the heated die.
+        let mut m2 = DssModel::from_arch(&arch);
+        let mut last = 300.0;
+        for _ in 0..50 {
+            m2.step(&p);
+            assert!(m2.temp(0) >= last - 1e-9);
+            last = m2.temp(0);
+        }
+    }
+
+    #[test]
+    fn neighbour_coupling_spreads_heat() {
+        let arch = small_arch();
+        let mut m = DssModel::from_arch(&arch);
+        let mut p = vec![0.0; arch.num_chiplets()];
+        p[0] = 0.5;
+        for _ in 0..5000 {
+            m.step(&p);
+        }
+        // Chiplet 1 is adjacent to 0 in the mesh floorplan; it must warm
+        // above ambient but stay cooler than the heated die.
+        assert!(m.temp(1) > 300.01);
+        assert!(m.temp(1) < m.temp(0));
+        // Heat decays with distance.
+        let far = arch.num_chiplets() - 1;
+        assert!(m.temp(far) < m.temp(1));
+    }
+
+    #[test]
+    fn superposition_of_linear_system() {
+        let arch = small_arch();
+        let n = arch.num_chiplets();
+        let m = DssModel::from_arch(&arch);
+        let mut p1 = vec![0.0; n];
+        p1[0] = 0.3;
+        let mut p2 = vec![0.0; n];
+        p2[3] = 0.7;
+        let p12: Vec<f64> = p1.iter().zip(&p2).map(|(a, b)| a + b).collect();
+        let s1 = m.steady_state(&p1);
+        let s2 = m.steady_state(&p2);
+        let s12 = m.steady_state(&p12);
+        for i in 0..n {
+            let lhs = s12[i] - 300.0;
+            let rhs = (s1[i] - 300.0) + (s2[i] - 300.0);
+            assert!((lhs - rhs).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn full_system_load_can_cross_reram_threshold() {
+        // The regime the paper studies: sustained full activity must be
+        // able to violate the 330 K ReRAM limit (otherwise thermal
+        // management would be vacuous), while idle systems must not.
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let m = DssModel::from_arch(&arch);
+        let cm = crate::pim::ComputeModel::default();
+        let powers: Vec<f64> = arch
+            .chiplets
+            .iter()
+            .map(|c| {
+                let spec = &arch.specs[c.pim as usize];
+                // Full-rate continuous compute.
+                spec.rate_mac_s * spec.energy_per_mac_j + cm.idle_power_w(spec)
+            })
+            .collect();
+        let ss = m.steady_state(&powers);
+        let max_t = ss.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max_t > 330.0, "full load should exceed ReRAM limit: {max_t:.1} K");
+        assert!(max_t < 420.0, "sanity: not absurdly hot: {max_t:.1} K");
+    }
+
+    #[test]
+    fn reset_returns_to_ambient() {
+        let arch = small_arch();
+        let mut m = DssModel::from_arch(&arch);
+        let p = vec![0.2; arch.num_chiplets()];
+        for _ in 0..100 {
+            m.step(&p);
+        }
+        assert!(m.temp(0) > 300.0);
+        m.reset();
+        assert_eq!(m.temp(0), 300.0);
+    }
+}

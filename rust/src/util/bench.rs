@@ -1,0 +1,212 @@
+//! Criterion-style micro-benchmark harness (the offline vendor set has no
+//! `criterion`). Used by the `[[bench]]` targets (all declared with
+//! `harness = false`): warm-up, calibrated iteration counts, multiple
+//! samples, and mean/σ/percentile reporting, plus a `black_box` to defeat
+//! constant folding.
+
+use crate::util::stats::{percentile, Running};
+use std::time::{Duration, Instant};
+
+/// Re-export of the compiler fence trick. Stable `std::hint::black_box`.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Time spent warming up before measurement.
+    pub warmup: Duration,
+    /// Target time per sample.
+    pub sample_time: Duration,
+    /// Number of samples.
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            sample_time: Duration::from_millis(100),
+            samples: 20,
+        }
+    }
+}
+
+/// Quick preset for end-to-end benches that run whole simulations.
+impl BenchConfig {
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(0),
+            sample_time: Duration::from_millis(0),
+            samples: 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration across samples.
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (σ {:>10}, p95 {:>10}, {} samples × {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p95_ns),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure. The closure should perform one logical iteration
+/// and return a value (passed through `black_box` internally).
+pub fn bench<F, T>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult
+where
+    F: FnMut() -> T,
+{
+    // Warm-up + calibration: find iters such that one sample ≈ sample_time.
+    let warm_start = Instant::now();
+    let mut calib_iters: u64 = 0;
+    let mut calib_ns: f64 = 0.0;
+    loop {
+        let t = Instant::now();
+        black_box(f());
+        calib_ns += t.elapsed().as_nanos() as f64;
+        calib_iters += 1;
+        if warm_start.elapsed() >= cfg.warmup && calib_iters >= 3 {
+            break;
+        }
+        if calib_iters >= 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = (calib_ns / calib_iters as f64).max(0.5);
+    let iters = ((cfg.sample_time.as_nanos() as f64 / per_iter).ceil() as u64).clamp(1, 10_000_000);
+
+    let mut per_iter_samples = Vec::with_capacity(cfg.samples);
+    let mut running = Running::new();
+    for _ in 0..cfg.samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        let ns = t.elapsed().as_nanos() as f64 / iters as f64;
+        per_iter_samples.push(ns);
+        running.push(ns);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: running.mean(),
+        std_ns: running.std(),
+        p50_ns: percentile(&per_iter_samples, 50.0),
+        p95_ns: percentile(&per_iter_samples, 95.0),
+        iters_per_sample: iters,
+        samples: cfg.samples,
+    }
+}
+
+/// Time a single run of a long operation (whole-simulation benches).
+pub fn time_once<F, T>(f: F) -> (T, Duration)
+where
+    F: FnOnce() -> T,
+{
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Group runner: prints a header and each result as it completes; returns
+/// results for CSV export.
+pub struct Group {
+    pub title: String,
+    pub cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Group {
+    pub fn new(title: &str) -> Group {
+        // Honor THERMOS_BENCH_FAST=1 for CI-speed runs.
+        let cfg = if std::env::var("THERMOS_BENCH_FAST").as_deref() == Ok("1") {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                sample_time: Duration::from_millis(10),
+                samples: 5,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        println!("\n== {title} ==");
+        Group { title: title.to_string(), cfg, results: Vec::new() }
+    }
+
+    pub fn bench<F, T>(&mut self, name: &str, f: F) -> &BenchResult
+    where
+        F: FnMut() -> T,
+    {
+        let r = bench(name, &self.cfg, f);
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_scale() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            sample_time: Duration::from_millis(2),
+            samples: 3,
+        };
+        let r = bench("spin", &cfg, || {
+            // ~micro-scale busy work; black_box the seed so the optimizer
+            // cannot constant-fold the loop away.
+            let mut acc = black_box(1u64);
+            for i in 0..1000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 10.0, "mean {}", r.mean_ns);
+        assert!(r.mean_ns < 1e7);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2.5e9).contains("s"));
+    }
+}

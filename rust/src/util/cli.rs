@@ -1,0 +1,147 @@
+//! Tiny command-line parser (the offline vendor set has no `clap`).
+//!
+//! Supports the shapes the `thermos` binary and the bench/example binaries
+//! need: a subcommand followed by `--flag`, `--key value`, and positional
+//! arguments, plus generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.values.contains_key(key)
+    }
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+    pub fn parse_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected a number, got `{v}`")),
+        }
+    }
+    pub fn parse_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected an integer, got `{v}`")),
+        }
+    }
+    pub fn parse_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected an integer, got `{v}`")),
+        }
+    }
+    /// Comma-separated list, e.g. `--rates 1.5,2,2.5`.
+    pub fn parse_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| format!("--{key}: bad list item `{s}`")))
+                .collect(),
+        }
+    }
+}
+
+/// Parse `argv[1..]`. `value_opts` lists option names that consume the next
+/// token; everything else starting with `--` is a boolean flag.
+pub fn parse(argv: &[String], value_opts: &[&str]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    if let Some(first) = it.peek() {
+        if !first.starts_with("--") {
+            args.cmd = it.next().unwrap().clone();
+        }
+    }
+    while let Some(tok) = it.next() {
+        if let Some(name) = tok.strip_prefix("--") {
+            // --key=value form
+            if let Some((k, v)) = name.split_once('=') {
+                args.values.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            if value_opts.contains(&name) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("--{name} expects a value"))?;
+                args.values.insert(name.to_string(), v.clone());
+            } else {
+                args.flags.push(name.to_string());
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+    }
+    Ok(args)
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nOptions:\n");
+    for o in opts {
+        let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+        let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  {arg:<28} {}{def}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_values_and_flags() {
+        let a = parse(
+            &v(&["train", "--steps", "1000", "--verbose", "--rate=2.5", "pos1"]),
+            &["steps"],
+        )
+        .unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("steps"), Some("1000"));
+        assert_eq!(a.get("rate"), Some("2.5"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&v(&["run", "--steps"]), &["steps"]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&v(&["x", "--n", "5", "--r", "1.5", "--list", "1,2,3"]), &["n", "r", "list"])
+            .unwrap();
+        assert_eq!(a.parse_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.parse_f64("r", 0.0).unwrap(), 1.5);
+        assert_eq!(a.parse_f64("missing", 7.5).unwrap(), 7.5);
+        assert_eq!(a.parse_f64_list("list", &[]).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(a.parse_usize("r", 0).is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! Dense linear algebra needed by the thermal DSS model and the native
+//! policy evaluator: row-major matrices, matmul/matvec, LU solve, and a
+//! scaling-and-squaring Padé matrix exponential (used once at thermal-model
+//! construction to discretize the continuous RC system).
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order: streams `other` rows, decent cache behaviour for
+        // the few-hundred-node thermal matrices.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(self.cols, x.len());
+        assert_eq!(self.rows, out.len());
+        for i in 0..self.rows {
+            let row = self.row(i);
+            // Four independent accumulators break the FP add dependency
+            // chain so the loop can saturate the FMA pipes
+            // (EXPERIMENTS.md §Perf).
+            let mut acc = [0.0f64; 4];
+            let chunks = self.cols / 4;
+            for c in 0..chunks {
+                let b = 4 * c;
+                acc[0] += row[b] * x[b];
+                acc[1] += row[b + 1] * x[b + 1];
+                acc[2] += row[b + 2] * x[b + 2];
+                acc[3] += row[b + 3] * x[b + 3];
+            }
+            let mut tail = 0.0;
+            for j in 4 * chunks..self.cols {
+                tail += row[j] * x[j];
+            }
+            out[i] = acc[0] + acc[1] + acc[2] + acc[3] + tail;
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut m = self.clone();
+        for v in &mut m.data {
+            *v *= s;
+        }
+        m
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut m = self.clone();
+        for (a, b) in m.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        m
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut m = self.clone();
+        for (a, b) in m.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        m
+    }
+
+    /// 1-norm (max column sum) — used to pick the expm scaling factor.
+    pub fn norm1(&self) -> f64 {
+        let mut best = 0.0f64;
+        for j in 0..self.cols {
+            let mut s = 0.0;
+            for i in 0..self.rows {
+                s += self.data[i * self.cols + j].abs();
+            }
+            best = best.max(s);
+        }
+        best
+    }
+
+    /// LU decomposition with partial pivoting; returns (LU, perm) or None
+    /// if singular.
+    pub fn lu(&self) -> Option<(Mat, Vec<usize>)> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut lu = self.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Pivot.
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax < 1e-300 {
+                return None;
+            }
+            if p != k {
+                perm.swap(p, k);
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let f = lu[(i, k)] / pivot;
+                lu[(i, k)] = f;
+                for j in (k + 1)..n {
+                    lu[(i, j)] -= f * lu[(k, j)];
+                }
+            }
+        }
+        Some((lu, perm))
+    }
+
+    /// Solve A X = B for X (A = self, square). Panics on singular A.
+    pub fn solve(&self, b: &Mat) -> Mat {
+        let (lu, perm) = self.lu().expect("solve: singular matrix");
+        let n = self.rows;
+        let mut x = Mat::zeros(n, b.cols);
+        let mut col = vec![0.0; n];
+        for c in 0..b.cols {
+            // Apply permutation.
+            for i in 0..n {
+                col[i] = b[(perm[i], c)];
+            }
+            // Forward substitution (L has unit diagonal).
+            for i in 1..n {
+                let mut acc = col[i];
+                for j in 0..i {
+                    acc -= lu[(i, j)] * col[j];
+                }
+                col[i] = acc;
+            }
+            // Back substitution.
+            for i in (0..n).rev() {
+                let mut acc = col[i];
+                for j in (i + 1)..n {
+                    acc -= lu[(i, j)] * col[j];
+                }
+                col[i] = acc / lu[(i, i)];
+            }
+            for i in 0..n {
+                x[(i, c)] = col[i];
+            }
+        }
+        x
+    }
+
+    /// Matrix exponential via scaling-and-squaring with a [6/6] Padé
+    /// approximant. Accurate to ~1e-12 for the well-conditioned RC system
+    /// matrices we feed it (verified against series expansion in tests).
+    pub fn expm(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let norm = self.norm1();
+        // Scale so the norm is below 0.5.
+        let s = if norm > 0.5 { (norm / 0.5).log2().ceil() as i32 } else { 0 };
+        let a = self.scale(0.5f64.powi(s));
+
+        // Padé [6/6]: N(A) = sum c_k A^k, D(A) = N(-A); coefficients
+        // c_k = (2m-k)! m! / ((2m)! k! (m-k)!), m = 6.
+        let m = 6usize;
+        let mut c = vec![1.0f64; m + 1];
+        for k in 1..=m {
+            c[k] = c[k - 1] * ((m - k + 1) as f64) / ((k * (2 * m - k + 1)) as f64);
+        }
+        let mut num = Mat::eye(n).scale(c[0]);
+        let mut den = Mat::eye(n).scale(c[0]);
+        let mut pow = Mat::eye(n);
+        for (k, &ck) in c.iter().enumerate().skip(1) {
+            pow = pow.matmul(&a);
+            num = num.add(&pow.scale(ck));
+            let sign = if k % 2 == 0 { 1.0 } else { -1.0 };
+            den = den.add(&pow.scale(sign * ck));
+        }
+        let mut e = den.solve(&num);
+        for _ in 0..s {
+            e = e.matmul(&e);
+        }
+        e
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        approx(&c, &Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]), 1e-12);
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = Mat::from_rows(&[&[4.0, 1.0, 0.0], &[1.0, 3.0, 1.0], &[0.0, 1.0, 2.0]]);
+        let x_true = Mat::from_rows(&[&[1.0], &[-2.0], &[0.5]]);
+        let b = a.matmul(&x_true);
+        let x = a.solve(&b);
+        approx(&x, &x_true, 1e-10);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(a.lu().is_none());
+    }
+
+    #[test]
+    fn expm_of_zero_is_identity() {
+        let e = Mat::zeros(3, 3).expm();
+        approx(&e, &Mat::eye(3), 1e-14);
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let a = Mat::from_rows(&[&[-1.0, 0.0], &[0.0, 2.0]]);
+        let e = a.expm();
+        let expected =
+            Mat::from_rows(&[&[(-1.0f64).exp(), 0.0], &[0.0, (2.0f64).exp()]]);
+        approx(&e, &expected, 1e-10);
+    }
+
+    #[test]
+    fn expm_matches_series_for_rc_like_matrix() {
+        // A stiff-ish RC-style matrix (negative diagonal, positive coupling).
+        let a = Mat::from_rows(&[
+            &[-3.0, 1.0, 0.5],
+            &[1.0, -2.0, 0.5],
+            &[0.25, 0.5, -1.0],
+        ])
+        .scale(2.0);
+        // Taylor series with many terms as reference.
+        let mut series = Mat::eye(3);
+        let mut term = Mat::eye(3);
+        for k in 1..60 {
+            term = term.matmul(&a).scale(1.0 / k as f64);
+            series = series.add(&term);
+        }
+        approx(&a.expm(), &series, 1e-9);
+    }
+
+    #[test]
+    fn expm_semigroup_property() {
+        let a = Mat::from_rows(&[&[-1.0, 0.3], &[0.2, -0.8]]);
+        let e1 = a.expm();
+        let e2 = a.scale(2.0).expm();
+        approx(&e1.matmul(&e1), &e2, 1e-10);
+    }
+}

@@ -1,0 +1,94 @@
+//! Property-testing micro-framework (the offline vendor set has no
+//! `proptest`). Provides seeded random-input sweeps with failure reporting
+//! that includes the seed + case index so any failure is reproducible:
+//!
+//! ```ignore
+//! forall(100, |rng| {
+//!     let n = rng.range_usize(1, 20);
+//!     ...
+//!     check(cond, "message")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Helper for readable property bodies.
+pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn check_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of the property. The base seed is fixed (tests
+/// must be deterministic in CI) but can be overridden with the
+/// `THERMOS_PROP_SEED` environment variable to explore more of the space.
+/// Panics with seed + case index on the first failure.
+pub fn forall<F>(cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base_seed: u64 = std::env::var("THERMOS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add(case as u64));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case} (seed {base_seed}): {msg}\n\
+                 reproduce with THERMOS_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Generate a random vector of f32 in [lo, hi).
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| lo + (hi - lo) * rng.f32()).collect()
+}
+
+/// Generate a random vector of f64 in [lo, hi).
+pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall(50, |rng| {
+            let x = rng.f64();
+            check((0.0..1.0).contains(&x), "f64 out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(50, |rng| {
+            let x = rng.f64();
+            check(x < 0.5, "will fail for some case")
+        });
+    }
+
+    #[test]
+    fn check_close_tolerates_scale() {
+        assert!(check_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(check_close(1.0, 2.0, 1e-6, "off").is_err());
+    }
+}

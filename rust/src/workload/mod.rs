@@ -1,0 +1,91 @@
+//! DL workload characterization (paper §3.1, Definition 1).
+//!
+//! A workload is a DL Characterization Graph (DCG): vertices are neural
+//! layers with `(w_i, o_i)` — weight memory and MAC count — and arcs carry
+//! the activation volume `f_ij` between layers. Workloads stream into the
+//! system as `(DNN, #images)` jobs (§5.2).
+
+pub mod traffic;
+pub mod zoo;
+
+pub use traffic::{JobQueue, TrafficGen, WorkloadMix};
+pub use zoo::{DnnModel, ModelZoo};
+
+/// One neural layer: vertex of the DCG.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Weight memory in bits (`w_i`). INT8 weights throughout (§2: PIM
+    /// favours quantized DNNs).
+    pub weight_bits: u64,
+    /// Multiply-accumulate operations per input frame (`o_i`).
+    pub macs: u64,
+    /// Activation volume produced per input frame, bits — the DCG arc
+    /// `f_{i,i+1}` to the next layer. DCGs of the six evaluation CNNs are
+    /// chain-structured after fusing residual/branch structure (§4.4 notes
+    /// G_DCG is largely linear).
+    pub out_bits: u64,
+    /// Human-readable layer label for reports.
+    pub name: String,
+}
+
+/// DL Characterization Graph. Chain DCG: layer i feeds layer i+1; the
+/// input arc of layer 0 is the image itself.
+#[derive(Clone, Debug)]
+pub struct Dcg {
+    pub model: DnnModel,
+    pub layers: Vec<Layer>,
+    /// Input frame volume in bits (f_{0,1} into the first layer).
+    pub input_bits: u64,
+}
+
+impl Dcg {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+    /// Total weight memory of the model, bits (Σ w_i).
+    pub fn total_weight_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bits).sum()
+    }
+    /// Total MACs per image (Σ o_i).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+    /// Total inter-layer activation volume per image (Σ f_ij).
+    pub fn total_activation_bits(&self) -> u64 {
+        self.input_bits + self.layers.iter().map(|l| l.out_bits).sum::<u64>()
+    }
+    /// Activation volume flowing *into* layer `i` (Σ_k f_ki — chain DCG, so
+    /// a single arc).
+    pub fn in_bits(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.input_bits
+        } else {
+            self.layers[i - 1].out_bits
+        }
+    }
+}
+
+/// A job: run `images` inference frames through `dcg` (§3.3).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub dcg: Dcg,
+    pub images: u64,
+    /// Simulation time the host admitted the job into the FIFO queue (s).
+    pub arrival_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dcg_aggregates() {
+        let zoo = ModelZoo::new();
+        let dcg = zoo.dcg(DnnModel::AlexNet);
+        assert_eq!(dcg.total_weight_bits(), dcg.layers.iter().map(|l| l.weight_bits).sum());
+        assert!(dcg.total_macs() > 0);
+        assert_eq!(dcg.in_bits(0), dcg.input_bits);
+        assert_eq!(dcg.in_bits(1), dcg.layers[0].out_bits);
+    }
+}

@@ -1,0 +1,209 @@
+//! Workload streaming: the §5.2 evaluation mix (500 random
+//! `(DNN, #images)` tuples, up to 20 000 images each), Poisson arrivals
+//! from the host, and the FIFO job queue (depth 20, Table 4) the host
+//! stalls against.
+
+use super::zoo::{DnnModel, ModelZoo};
+use super::{Dcg, Job};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// A mix of `(model, images)` tuples sampled like the paper's evaluation
+/// workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadMix {
+    pub entries: Vec<(DnnModel, u64)>,
+}
+
+impl WorkloadMix {
+    /// The paper's mix: 500 tuples, model uniform over the zoo, image
+    /// count uniform up to `max_images` (paper: 20 000).
+    pub fn paper(rng: &mut Rng, max_images: u64) -> WorkloadMix {
+        Self::random(rng, 500, max_images)
+    }
+
+    pub fn random(rng: &mut Rng, count: usize, max_images: u64) -> WorkloadMix {
+        let models = DnnModel::all();
+        let entries = (0..count)
+            .map(|_| {
+                let m = *rng.choose(&models);
+                // At least 100 images so every job has a meaningful stream.
+                let images = rng.range_usize(100, max_images as usize) as u64;
+                (m, images)
+            })
+            .collect();
+        WorkloadMix { entries }
+    }
+}
+
+/// Poisson job source: exponential inter-arrival times at `rate_jobs_s`,
+/// drawing `(model, images)` round-robin from the mix.
+#[derive(Clone, Debug)]
+pub struct TrafficGen {
+    mix: WorkloadMix,
+    zoo: ModelZoo,
+    rate_jobs_s: f64,
+    next_arrival_s: f64,
+    next_index: usize,
+    next_id: u64,
+    rng: Rng,
+    /// Stop emitting after this many jobs (None = endless stream).
+    limit: Option<usize>,
+}
+
+impl TrafficGen {
+    pub fn new(mix: WorkloadMix, zoo: ModelZoo, rate_jobs_s: f64, mut rng: Rng) -> TrafficGen {
+        let first = rng.exp(rate_jobs_s);
+        TrafficGen {
+            mix,
+            zoo,
+            rate_jobs_s,
+            next_arrival_s: first,
+            next_index: 0,
+            next_id: 0,
+            rng,
+            limit: None,
+        }
+    }
+
+    pub fn with_limit(mut self, limit: usize) -> TrafficGen {
+        self.limit = Some(limit);
+        self
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate_jobs_s
+    }
+
+    /// Next arrival time, or None if the stream is exhausted.
+    pub fn peek_arrival(&self) -> Option<f64> {
+        match self.limit {
+            Some(l) if self.next_index >= l => None,
+            _ => Some(self.next_arrival_s),
+        }
+    }
+
+    /// Pop all jobs arriving up to (and including) `now`.
+    pub fn arrivals_until(&mut self, now: f64) -> Vec<Job> {
+        let mut out = Vec::new();
+        while let Some(t) = self.peek_arrival() {
+            if t > now {
+                break;
+            }
+            let (model, images) = self.mix.entries[self.next_index % self.mix.entries.len()];
+            let dcg: Dcg = self.zoo.dcg(model);
+            out.push(Job { id: self.next_id, dcg, images, arrival_s: t });
+            self.next_id += 1;
+            self.next_index += 1;
+            self.next_arrival_s = t + self.rng.exp(self.rate_jobs_s);
+        }
+        out
+    }
+}
+
+/// FIFO job queue with bounded depth (Table 4: 20). The host stalls when
+/// the queue is full; we track rejected-push counts as "host stall" events
+/// (the job is retried by the caller).
+#[derive(Clone, Debug)]
+pub struct JobQueue {
+    q: VecDeque<Job>,
+    capacity: usize,
+    pub total_enqueued: u64,
+    pub host_stalls: u64,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> JobQueue {
+        JobQueue { q: VecDeque::new(), capacity, total_enqueued: 0, host_stalls: 0 }
+    }
+
+    pub fn push(&mut self, job: Job) -> Result<(), Job> {
+        if self.q.len() >= self.capacity {
+            self.host_stalls += 1;
+            return Err(job);
+        }
+        self.total_enqueued += 1;
+        self.q.push_back(job);
+        Ok(())
+    }
+
+    pub fn front(&self) -> Option<&Job> {
+        self.q.front()
+    }
+    pub fn pop(&mut self) -> Option<Job> {
+        self.q.pop_front()
+    }
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_respects_bounds() {
+        let mut rng = Rng::new(1);
+        let mix = WorkloadMix::paper(&mut rng, 20_000);
+        assert_eq!(mix.entries.len(), 500);
+        for &(_, images) in &mix.entries {
+            assert!((100..=20_000).contains(&images));
+        }
+        // All six models should appear in 500 draws.
+        for m in DnnModel::all() {
+            assert!(mix.entries.iter().any(|&(x, _)| x == m), "{m:?} missing");
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_correct() {
+        let mut rng = Rng::new(2);
+        let mix = WorkloadMix::random(&mut rng, 50, 1000);
+        let zoo = ModelZoo::new();
+        let mut gen = TrafficGen::new(mix, zoo, 2.0, Rng::new(3));
+        let jobs = gen.arrivals_until(100.0);
+        // E[#arrivals in 100 s at 2/s] = 200, σ ≈ 14.
+        assert!((150..260).contains(&jobs.len()), "got {}", jobs.len());
+        // Arrival times strictly increasing.
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival_s < w[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn queue_capacity_enforced() {
+        let mut rng = Rng::new(4);
+        let mix = WorkloadMix::random(&mut rng, 10, 500);
+        let zoo = ModelZoo::new();
+        let mut gen = TrafficGen::new(mix, zoo, 100.0, Rng::new(5));
+        let jobs = gen.arrivals_until(1.0);
+        let mut q = JobQueue::new(3);
+        let mut rejected = 0;
+        for j in jobs {
+            if q.push(j).is_err() {
+                rejected += 1;
+            }
+        }
+        assert_eq!(q.len(), 3);
+        assert!(rejected > 0);
+        assert_eq!(q.host_stalls, rejected);
+    }
+
+    #[test]
+    fn limited_stream_ends() {
+        let mut rng = Rng::new(6);
+        let mix = WorkloadMix::random(&mut rng, 10, 500);
+        let zoo = ModelZoo::new();
+        let mut gen = TrafficGen::new(mix, zoo, 10.0, Rng::new(7)).with_limit(5);
+        let jobs = gen.arrivals_until(1e9);
+        assert_eq!(jobs.len(), 5);
+        assert!(gen.peek_arrival().is_none());
+    }
+}

@@ -1,0 +1,600 @@
+//! Model zoo: the six CNN evaluation workloads of §5.2 — AlexNet,
+//! ResNet18, ResNet50, EfficientNet-B3, MobileNetV3-Large, Inception-v3 —
+//! expressed as chain DCGs with per-layer weight bits, MACs, and
+//! activation volumes.
+//!
+//! Layer shapes are derived with a small builder that tracks the feature
+//! map (H, W, C) exactly as the reference architectures define them; all
+//! tensors are INT8 (PIM-friendly quantization, §2). Branchy topologies
+//! (ResNet residuals, Inception modules) are flattened to a chain — the
+//! paper notes G_DCG is "largely linear" and its scheduler (like ours)
+//! consumes the chain form; weights and MACs are preserved exactly,
+//! activation arcs carry each layer's produced volume.
+
+use super::{Dcg, Layer};
+
+/// The six evaluation DNNs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DnnModel {
+    AlexNet,
+    ResNet18,
+    ResNet50,
+    EfficientNetB3,
+    MobileNetV3Large,
+    InceptionV3,
+}
+
+impl DnnModel {
+    pub fn all() -> [DnnModel; 6] {
+        [
+            DnnModel::AlexNet,
+            DnnModel::ResNet18,
+            DnnModel::ResNet50,
+            DnnModel::EfficientNetB3,
+            DnnModel::MobileNetV3Large,
+            DnnModel::InceptionV3,
+        ]
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            DnnModel::AlexNet => "alexnet",
+            DnnModel::ResNet18 => "resnet18",
+            DnnModel::ResNet50 => "resnet50",
+            DnnModel::EfficientNetB3 => "efficientnet_b3",
+            DnnModel::MobileNetV3Large => "mobilenetv3_large",
+            DnnModel::InceptionV3 => "inception_v3",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<DnnModel> {
+        DnnModel::all().into_iter().find(|m| m.name() == s.to_ascii_lowercase())
+    }
+}
+
+const BITS: u64 = 8; // INT8 activations and weights
+
+/// Feature-map tracking layer builder.
+struct Builder {
+    h: u64,
+    w: u64,
+    c: u64,
+    layers: Vec<Layer>,
+    input_bits: u64,
+}
+
+impl Builder {
+    fn new(h: u64, w: u64, c: u64) -> Builder {
+        Builder { h, w, c, layers: Vec::new(), input_bits: h * w * c * BITS }
+    }
+
+    fn out_dim(dim: u64, k: u64, stride: u64, pad: u64) -> u64 {
+        (dim + 2 * pad - k) / stride + 1
+    }
+
+    /// Standard convolution; `pad` defaults to "same-ish" k/2.
+    fn conv(&mut self, name: &str, cout: u64, k: u64, stride: u64) {
+        self.conv_p(name, cout, k, stride, k / 2)
+    }
+
+    fn conv_p(&mut self, name: &str, cout: u64, k: u64, stride: u64, pad: u64) {
+        let ho = Self::out_dim(self.h, k, stride, pad);
+        let wo = Self::out_dim(self.w, k, stride, pad);
+        let macs = ho * wo * k * k * self.c * cout;
+        let weights = k * k * self.c * cout;
+        self.h = ho;
+        self.w = wo;
+        self.c = cout;
+        self.layers.push(Layer {
+            weight_bits: weights * BITS,
+            macs,
+            out_bits: ho * wo * cout * BITS,
+            name: name.to_string(),
+        });
+    }
+
+    /// Depthwise convolution (channel count unchanged).
+    fn dwconv(&mut self, name: &str, k: u64, stride: u64) {
+        let ho = Self::out_dim(self.h, k, stride, k / 2);
+        let wo = Self::out_dim(self.w, k, stride, k / 2);
+        let macs = ho * wo * k * k * self.c;
+        let weights = k * k * self.c;
+        self.h = ho;
+        self.w = wo;
+        self.layers.push(Layer {
+            weight_bits: weights * BITS,
+            macs,
+            out_bits: ho * wo * self.c * BITS,
+            name: name.to_string(),
+        });
+    }
+
+    /// Pointwise 1×1 convolution.
+    fn pwconv(&mut self, name: &str, cout: u64) {
+        self.conv_p(name, cout, 1, 1, 0)
+    }
+
+    /// Pooling: changes dimensions and shrinks the activation volume the
+    /// previous layer ships to its consumer (pools have no weights; their
+    /// negligible compute is folded into the producer).
+    fn pool(&mut self, k: u64, stride: u64, pad: u64) {
+        self.h = Self::out_dim(self.h, k, stride, pad);
+        self.w = Self::out_dim(self.w, k, stride, pad);
+        if let Some(last) = self.layers.last_mut() {
+            last.out_bits = self.h * self.w * self.c * BITS;
+        } else {
+            self.input_bits = self.h * self.w * self.c * BITS;
+        }
+    }
+
+    fn global_pool(&mut self) {
+        self.h = 1;
+        self.w = 1;
+        if let Some(last) = self.layers.last_mut() {
+            last.out_bits = self.c * BITS;
+        }
+    }
+
+    fn fc(&mut self, name: &str, out: u64) {
+        let inp = self.h * self.w * self.c;
+        self.h = 1;
+        self.w = 1;
+        self.c = out;
+        self.layers.push(Layer {
+            weight_bits: inp * out * BITS,
+            macs: inp * out,
+            out_bits: out * BITS,
+            name: name.to_string(),
+        });
+    }
+
+    /// Squeeze-and-excitation: two small FCs on globally pooled features.
+    /// Feature map dims are unchanged; weight/MAC contribution recorded as
+    /// one fused layer.
+    fn se(&mut self, name: &str, reduced: u64) {
+        let c = self.c;
+        let weights = c * reduced + reduced * c;
+        self.layers.push(Layer {
+            weight_bits: weights * BITS,
+            macs: weights, // one MAC per weight (1×1 spatial)
+            out_bits: self.h * self.w * c * BITS,
+            name: name.to_string(),
+        });
+    }
+
+    /// Used by Inception modules: set the channel count after a (virtual)
+    /// concat of parallel branches.
+    fn set_channels(&mut self, c: u64) {
+        self.c = c;
+        if let Some(last) = self.layers.last_mut() {
+            last.out_bits = self.h * self.w * c * BITS;
+        }
+    }
+
+    fn finish(self, model: DnnModel) -> Dcg {
+        Dcg { model, layers: self.layers, input_bits: self.input_bits }
+    }
+}
+
+/// Zoo with cached DCGs and normalization statistics used by the RL state
+/// encoder.
+#[derive(Clone, Debug)]
+pub struct ModelZoo {
+    dcgs: Vec<Dcg>,
+}
+
+impl Default for ModelZoo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelZoo {
+    pub fn new() -> ModelZoo {
+        ModelZoo { dcgs: DnnModel::all().iter().map(|&m| build_model(m)).collect() }
+    }
+
+    pub fn dcg(&self, m: DnnModel) -> Dcg {
+        self.dcgs[DnnModel::all().iter().position(|&x| x == m).unwrap()].clone()
+    }
+
+    pub fn all_dcgs(&self) -> &[Dcg] {
+        &self.dcgs
+    }
+
+    /// Normalization constants for RL state features (max over the zoo).
+    pub fn max_layer_weight_bits(&self) -> u64 {
+        self.dcgs.iter().flat_map(|d| &d.layers).map(|l| l.weight_bits).max().unwrap()
+    }
+    pub fn max_layer_macs(&self) -> u64 {
+        self.dcgs.iter().flat_map(|d| &d.layers).map(|l| l.macs).max().unwrap()
+    }
+    pub fn max_layer_act_bits(&self) -> u64 {
+        self.dcgs
+            .iter()
+            .flat_map(|d| (0..d.num_layers()).map(move |i| d.in_bits(i)))
+            .max()
+            .unwrap()
+    }
+    pub fn max_model_weight_bits(&self) -> u64 {
+        self.dcgs.iter().map(|d| d.total_weight_bits()).max().unwrap()
+    }
+    pub fn max_model_macs(&self) -> u64 {
+        self.dcgs.iter().map(|d| d.total_macs()).max().unwrap()
+    }
+    pub fn max_model_act_bits(&self) -> u64 {
+        self.dcgs.iter().map(|d| d.total_activation_bits()).max().unwrap()
+    }
+    pub fn max_layers(&self) -> usize {
+        self.dcgs.iter().map(|d| d.num_layers()).max().unwrap()
+    }
+}
+
+pub fn build_model(m: DnnModel) -> Dcg {
+    match m {
+        DnnModel::AlexNet => alexnet(),
+        DnnModel::ResNet18 => resnet18(),
+        DnnModel::ResNet50 => resnet50(),
+        DnnModel::EfficientNetB3 => efficientnet_b3(),
+        DnnModel::MobileNetV3Large => mobilenetv3_large(),
+        DnnModel::InceptionV3 => inception_v3(),
+    }
+}
+
+fn alexnet() -> Dcg {
+    let mut b = Builder::new(224, 224, 3);
+    b.conv_p("conv1", 64, 11, 4, 2);
+    b.pool(3, 2, 0);
+    b.conv_p("conv2", 192, 5, 1, 2);
+    b.pool(3, 2, 0);
+    b.conv("conv3", 384, 3, 1);
+    b.conv("conv4", 256, 3, 1);
+    b.conv("conv5", 256, 3, 1);
+    b.pool(3, 2, 0);
+    b.fc("fc6", 4096);
+    b.fc("fc7", 4096);
+    b.fc("fc8", 1000);
+    b.finish(DnnModel::AlexNet)
+}
+
+fn resnet18() -> Dcg {
+    let mut b = Builder::new(224, 224, 3);
+    b.conv_p("conv1", 64, 7, 2, 3);
+    b.pool(3, 2, 1);
+    let stages: [(u64, usize); 4] = [(64, 2), (128, 2), (256, 2), (512, 2)];
+    for (si, &(c, blocks)) in stages.iter().enumerate() {
+        for blk in 0..blocks {
+            let stride = if si > 0 && blk == 0 { 2 } else { 1 };
+            if stride == 2 {
+                // Projection shortcut 1×1 conv.
+                b.conv_p(&format!("s{si}b{blk}_down"), c, 1, 2, 0);
+                // Restore the pre-downsample input for the block's first conv
+                // is already reflected: shortcut consumed the map; the main
+                // path convs operate on the downsampled map (weight/MAC
+                // equivalent chainization).
+                b.conv(&format!("s{si}b{blk}_conv1"), c, 3, 1);
+            } else {
+                b.conv(&format!("s{si}b{blk}_conv1"), c, 3, stride);
+            }
+            b.conv(&format!("s{si}b{blk}_conv2"), c, 3, 1);
+        }
+    }
+    b.global_pool();
+    b.fc("fc", 1000);
+    b.finish(DnnModel::ResNet18)
+}
+
+fn resnet50() -> Dcg {
+    let mut b = Builder::new(224, 224, 3);
+    b.conv_p("conv1", 64, 7, 2, 3);
+    b.pool(3, 2, 1);
+    let stages: [(u64, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
+    for (si, &(c, blocks)) in stages.iter().enumerate() {
+        for blk in 0..blocks {
+            let stride = if si > 0 && blk == 0 { 2 } else { 1 };
+            if blk == 0 {
+                // Projection shortcut to 4c channels.
+                b.conv_p(&format!("s{si}b{blk}_down"), c * 4, 1, stride, 0);
+                // Bottleneck operates from the projected map's spatial dims;
+                // channel bookkeeping for the main path:
+                b.set_channels(c * 4);
+            }
+            b.pwconv(&format!("s{si}b{blk}_reduce"), c);
+            b.conv(&format!("s{si}b{blk}_conv3x3"), c, 3, 1);
+            b.pwconv(&format!("s{si}b{blk}_expand"), c * 4);
+        }
+    }
+    b.global_pool();
+    b.fc("fc", 1000);
+    b.finish(DnnModel::ResNet50)
+}
+
+/// EfficientNet-B3: B0 stage table scaled by width 1.2 / depth 1.4,
+/// 300×300 input.
+fn efficientnet_b3() -> Dcg {
+    fn wscale(c: u64) -> u64 {
+        // Round to nearest multiple of 8, standard EfficientNet rule.
+        let scaled = c as f64 * 1.2;
+        (((scaled / 8.0).round() as u64).max(1)) * 8
+    }
+    fn dscale(n: u64) -> u64 {
+        (n as f64 * 1.4).ceil() as u64
+    }
+    let mut b = Builder::new(300, 300, 3);
+    b.conv("stem", wscale(32), 3, 2);
+    // (expansion, channels, repeats, kernel, stride)
+    let table: [(u64, u64, u64, u64, u64); 7] = [
+        (1, 16, 1, 3, 1),
+        (6, 24, 2, 3, 2),
+        (6, 40, 2, 5, 2),
+        (6, 80, 3, 3, 2),
+        (6, 112, 3, 5, 1),
+        (6, 192, 4, 5, 2),
+        (6, 320, 1, 3, 1),
+    ];
+    for (bi, &(exp, c, n, k, s)) in table.iter().enumerate() {
+        let cout = wscale(c);
+        for r in 0..dscale(n) {
+            let stride = if r == 0 { s } else { 1 };
+            let cin = b.c;
+            let expanded = cin * exp;
+            if exp > 1 {
+                b.pwconv(&format!("mb{bi}_{r}_expand"), expanded);
+            }
+            b.dwconv(&format!("mb{bi}_{r}_dw"), k, stride);
+            b.se(&format!("mb{bi}_{r}_se"), (cin / 4).max(1));
+            b.pwconv(&format!("mb{bi}_{r}_project"), cout);
+        }
+    }
+    b.pwconv("head", 1536);
+    b.global_pool();
+    b.fc("fc", 1000);
+    b.finish(DnnModel::EfficientNetB3)
+}
+
+/// MobileNetV3-Large standard bneck table.
+fn mobilenetv3_large() -> Dcg {
+    let mut b = Builder::new(224, 224, 3);
+    b.conv("stem", 16, 3, 2);
+    // (kernel, expansion size, out channels, SE?, stride)
+    let rows: [(u64, u64, u64, bool, u64); 15] = [
+        (3, 16, 16, false, 1),
+        (3, 64, 24, false, 2),
+        (3, 72, 24, false, 1),
+        (5, 72, 40, true, 2),
+        (5, 120, 40, true, 1),
+        (5, 120, 40, true, 1),
+        (3, 240, 80, false, 2),
+        (3, 200, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 480, 112, true, 1),
+        (3, 672, 112, true, 1),
+        (5, 672, 160, true, 2),
+        (5, 960, 160, true, 1),
+        (5, 960, 160, true, 1),
+    ];
+    for (i, &(k, exp, cout, se, s)) in rows.iter().enumerate() {
+        if exp != b.c {
+            b.pwconv(&format!("bneck{i}_expand"), exp);
+        }
+        b.dwconv(&format!("bneck{i}_dw"), k, s);
+        if se {
+            b.se(&format!("bneck{i}_se"), exp / 4);
+        }
+        b.pwconv(&format!("bneck{i}_project"), cout);
+    }
+    b.pwconv("conv_last", 960);
+    b.global_pool();
+    b.fc("fc1", 1280);
+    b.fc("fc2", 1000);
+    b.finish(DnnModel::MobileNetV3Large)
+}
+
+/// Inception-v3 flattened to a chain: branch convs are emitted
+/// sequentially with correct input channels; the module output channel
+/// count is set by the (virtual) concat.
+fn inception_v3() -> Dcg {
+    let mut b = Builder::new(299, 299, 3);
+    // Stem.
+    b.conv_p("stem1", 32, 3, 2, 0);
+    b.conv_p("stem2", 32, 3, 1, 0);
+    b.conv("stem3", 64, 3, 1);
+    b.pool(3, 2, 0);
+    b.conv_p("stem4", 80, 1, 1, 0);
+    b.conv_p("stem5", 192, 3, 1, 0);
+    b.pool(3, 2, 0);
+
+    // Inception-A ×3 (output 256/288/288 channels).
+    for (i, pool_proj) in [32u64, 64, 64].iter().enumerate() {
+        let cin = b.c;
+        let emit = |b: &mut Builder, name: String, cin: u64, cout: u64, k: u64| {
+            b.c = cin;
+            b.conv(&name, cout, k, 1);
+        };
+        emit(&mut b, format!("iA{i}_b1_1x1"), cin, 64, 1);
+        emit(&mut b, format!("iA{i}_b2_1x1"), cin, 48, 1);
+        emit(&mut b, format!("iA{i}_b2_5x5"), 48, 64, 5);
+        emit(&mut b, format!("iA{i}_b3_1x1"), cin, 64, 1);
+        emit(&mut b, format!("iA{i}_b3_3x3a"), 64, 96, 3);
+        emit(&mut b, format!("iA{i}_b3_3x3b"), 96, 96, 3);
+        emit(&mut b, format!("iA{i}_pool_proj"), cin, *pool_proj, 1);
+        b.set_channels(64 + 64 + 96 + pool_proj);
+    }
+
+    // Reduction-A: 3x3 stride-2 convs; grid 35→17.
+    {
+        let cin = b.c;
+        b.conv_p("rA_b1_3x3", 384, 3, 2, 0);
+        let (h, w) = (b.h, b.w);
+        b.c = cin;
+        b.h = 35;
+        b.w = 35;
+        b.conv("rA_b2_1x1", 64, 1, 1);
+        b.conv("rA_b2_3x3", 96, 3, 1);
+        b.conv_p("rA_b2_3x3s2", 96, 3, 2, 0);
+        b.h = h;
+        b.w = w;
+        b.set_channels(384 + 96 + cin); // concat with pooled input branch
+    }
+
+    // Inception-B ×4 with 7×1/1×7 factorized convs (c7 = 128/160/160/192).
+    for (i, &c7) in [128u64, 160, 160, 192].iter().enumerate() {
+        let cin = b.c;
+        let emit = |b: &mut Builder, name: String, cin: u64, cout: u64, k: (u64, u64)| {
+            b.c = cin;
+            // Factorized kxl conv: model as conv with k*l footprint.
+            let ho = b.h;
+            let wo = b.w;
+            let macs = ho * wo * k.0 * k.1 * b.c * cout;
+            let weights = k.0 * k.1 * b.c * cout;
+            b.c = cout;
+            b.layers.push(Layer {
+                weight_bits: weights * BITS,
+                macs,
+                out_bits: ho * wo * cout * BITS,
+                name,
+            });
+        };
+        emit(&mut b, format!("iB{i}_b1_1x1"), cin, 192, (1, 1));
+        emit(&mut b, format!("iB{i}_b2_1x1"), cin, c7, (1, 1));
+        emit(&mut b, format!("iB{i}_b2_1x7"), c7, c7, (1, 7));
+        emit(&mut b, format!("iB{i}_b2_7x1"), c7, 192, (7, 1));
+        emit(&mut b, format!("iB{i}_b3_1x1"), cin, c7, (1, 1));
+        emit(&mut b, format!("iB{i}_b3_7x1a"), c7, c7, (7, 1));
+        emit(&mut b, format!("iB{i}_b3_1x7a"), c7, c7, (1, 7));
+        emit(&mut b, format!("iB{i}_b3_7x1b"), c7, c7, (7, 1));
+        emit(&mut b, format!("iB{i}_b3_1x7b"), c7, 192, (1, 7));
+        emit(&mut b, format!("iB{i}_pool_proj"), cin, 192, (1, 1));
+        b.set_channels(192 * 4);
+    }
+
+    // Reduction-B: grid 17→8.
+    {
+        let cin = b.c;
+        b.conv("rB_b1_1x1", 192, 1, 1);
+        b.conv_p("rB_b1_3x3s2", 320, 3, 2, 0);
+        let (h, w) = (b.h, b.w);
+        b.c = cin;
+        b.h = 17;
+        b.w = 17;
+        b.conv("rB_b2_1x1", 192, 1, 1);
+        b.conv("rB_b2_1x7", 192, 7, 1); // factorized pair approximated
+        b.conv_p("rB_b2_3x3s2", 192, 3, 2, 0);
+        b.h = h;
+        b.w = w;
+        b.set_channels(320 + 192 + cin);
+    }
+
+    // Inception-C ×2 (output 2048).
+    for i in 0..2 {
+        let cin = b.c;
+        let emit = |b: &mut Builder, name: String, cin: u64, cout: u64, k: u64| {
+            b.c = cin;
+            b.conv(&name, cout, k, 1);
+        };
+        emit(&mut b, format!("iC{i}_b1_1x1"), cin, 320, 1);
+        emit(&mut b, format!("iC{i}_b2_1x1"), cin, 384, 1);
+        emit(&mut b, format!("iC{i}_b2_1x3"), 384, 384, 3);
+        emit(&mut b, format!("iC{i}_b2_3x1"), 384, 384, 3);
+        emit(&mut b, format!("iC{i}_b3_1x1"), cin, 448, 1);
+        emit(&mut b, format!("iC{i}_b3_3x3"), 448, 384, 3);
+        emit(&mut b, format!("iC{i}_b3_1x3"), 384, 384, 3);
+        emit(&mut b, format!("iC{i}_pool_proj"), cin, 192, 1);
+        b.set_channels(320 + 768 + 768 + 192);
+    }
+    b.global_pool();
+    b.fc("fc", 1000);
+    b.finish(DnnModel::InceptionV3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Published parameter counts (millions, INT8 → bits/8e6) within
+    /// tolerance: the chain flattening must not distort model size.
+    #[test]
+    fn parameter_counts_near_published() {
+        let zoo = ModelZoo::new();
+        let expect: [(DnnModel, f64, f64); 6] = [
+            (DnnModel::AlexNet, 61.0, 0.1),
+            (DnnModel::ResNet18, 11.7, 0.15),
+            (DnnModel::ResNet50, 25.6, 0.15),
+            (DnnModel::EfficientNetB3, 12.0, 0.35),
+            (DnnModel::MobileNetV3Large, 5.4, 0.3),
+            (DnnModel::InceptionV3, 23.8, 0.25),
+        ];
+        for (m, millions, tol) in expect {
+            let got = zoo.dcg(m).total_weight_bits() as f64 / 8.0 / 1e6;
+            let rel = (got - millions).abs() / millions;
+            assert!(rel < tol, "{m:?}: got {got:.1}M params, expected ~{millions}M");
+        }
+    }
+
+    /// Published MAC counts per image (billions).
+    #[test]
+    fn mac_counts_near_published() {
+        let zoo = ModelZoo::new();
+        let expect: [(DnnModel, f64, f64); 6] = [
+            (DnnModel::AlexNet, 0.72, 0.3),
+            (DnnModel::ResNet18, 1.8, 0.25),
+            (DnnModel::ResNet50, 4.1, 0.25),
+            (DnnModel::EfficientNetB3, 1.8, 0.4),
+            (DnnModel::MobileNetV3Large, 0.22, 0.4),
+            (DnnModel::InceptionV3, 5.7, 0.35),
+        ];
+        for (m, giga, tol) in expect {
+            let got = zoo.dcg(m).total_macs() as f64 / 1e9;
+            let rel = (got - giga).abs() / giga;
+            assert!(rel < tol, "{m:?}: got {got:.2}G MACs, expected ~{giga}G");
+        }
+    }
+
+    #[test]
+    fn layer_counts_reasonable() {
+        let zoo = ModelZoo::new();
+        assert_eq!(zoo.dcg(DnnModel::AlexNet).num_layers(), 8);
+        let r18 = zoo.dcg(DnnModel::ResNet18).num_layers();
+        assert!((18..=22).contains(&r18), "resnet18 layers {r18}");
+        let r50 = zoo.dcg(DnnModel::ResNet50).num_layers();
+        assert!((50..=56).contains(&r50), "resnet50 layers {r50}");
+        let inc = zoo.dcg(DnnModel::InceptionV3).num_layers();
+        assert!((80..=110).contains(&inc), "inception layers {inc}");
+    }
+
+    #[test]
+    fn all_layers_positive() {
+        let zoo = ModelZoo::new();
+        for dcg in zoo.all_dcgs() {
+            for l in &dcg.layers {
+                assert!(l.weight_bits > 0, "{:?}/{}", dcg.model, l.name);
+                assert!(l.macs > 0, "{:?}/{}", dcg.model, l.name);
+                assert!(l.out_bits > 0, "{:?}/{}", dcg.model, l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn models_fit_in_paper_system_memory() {
+        // §4.1 feasibility: every single model must fit the 78-chiplet
+        // system's total crossbar memory (sum Table 3 capacities ≈ 87 MB).
+        let zoo = ModelZoo::new();
+        let total_bits: u64 = 25 * 9568 * 1024 + 28 * 9792 * 1024 + 10 * 19200 * 1024 + 15 * 2416 * 1024;
+        for dcg in zoo.all_dcgs() {
+            assert!(
+                dcg.total_weight_bits() < total_bits,
+                "{:?} does not fit: {} vs {}",
+                dcg.model,
+                dcg.total_weight_bits(),
+                total_bits
+            );
+        }
+    }
+
+    #[test]
+    fn zoo_normalization_stats() {
+        let zoo = ModelZoo::new();
+        assert!(zoo.max_layer_weight_bits() > 0);
+        assert!(zoo.max_model_weight_bits() >= zoo.max_layer_weight_bits());
+        assert!(zoo.max_layers() >= 80);
+    }
+}

@@ -1,0 +1,201 @@
+//! Cross-layer integration: the AOT HLO artifacts (L1 Pallas kernels +
+//! L2 jax graphs) executed through PJRT must agree bit-for-bit (to f32
+//! tolerance) with the native rust evaluators over the SAME flat
+//! parameter layout — closing the ref == pallas == artifact == native
+//! loop. Requires `make artifacts`.
+
+use thermos::runtime::{F32Tensor, Runtime};
+use thermos::sched::policy::{ddt_theta_len, mlp_param_len, NativeDdt, NativeMlp};
+use thermos::sched::state::{NUM_CLUSTERS, STATE_DIM};
+use thermos::util::rng::Rng;
+use thermos::util::testkit::vec_f32;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` before integration tests")
+}
+
+#[test]
+fn abi_matches_rust_constants() {
+    let rt = runtime();
+    assert_eq!(rt.abi.state_dim, STATE_DIM);
+    assert_eq!(rt.abi.num_clusters, NUM_CLUSTERS);
+    assert_eq!(rt.abi.theta_len, ddt_theta_len(STATE_DIM, NUM_CLUSTERS));
+    assert_eq!(rt.abi.phi_len, mlp_param_len(&rt.abi.critic_dims));
+    assert!(rt.abi.artifacts.len() >= 7, "artifacts: {:?}", rt.abi.artifacts);
+}
+
+#[test]
+fn ddt_artifact_matches_native_eval() {
+    let mut rt = runtime();
+    let mut rng = Rng::new(101);
+    for trial in 0..5 {
+        let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+        let x = vec_f32(&mut rng, STATE_DIM, -1.5, 1.5);
+        let native = ddt.forward(&x);
+        let art = rt.artifact("ddt_policy").unwrap();
+        let out = art
+            .run_f32(&[
+                F32Tensor::vec(ddt.theta.clone()),
+                F32Tensor::mat(x.clone(), 1, STATE_DIM),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), NUM_CLUSTERS);
+        for (a, b) in native.iter().zip(&out[0]) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "trial {trial}: native {a} vs artifact {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ddt_batch_artifact_matches_native() {
+    let mut rt = runtime();
+    let mut rng = Rng::new(202);
+    let batch = rt.abi.update_batch;
+    let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+    let xs: Vec<Vec<f32>> = (0..batch).map(|_| vec_f32(&mut rng, STATE_DIM, -2.0, 2.0)).collect();
+    let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+    let art = rt.artifact("ddt_policy_b256").unwrap();
+    let out = art
+        .run_f32(&[F32Tensor::vec(ddt.theta.clone()), F32Tensor::mat(flat, batch, STATE_DIM)])
+        .unwrap();
+    assert_eq!(out[0].len(), batch * NUM_CLUSTERS);
+    for (i, x) in xs.iter().enumerate() {
+        let native = ddt.forward(x);
+        for a in 0..NUM_CLUSTERS {
+            let got = out[0][i * NUM_CLUSTERS + a];
+            assert!(
+                (native[a] - got).abs() < 1e-4,
+                "row {i} action {a}: {} vs {got}",
+                native[a]
+            );
+        }
+    }
+}
+
+#[test]
+fn critic_artifact_matches_native_mlp() {
+    let mut rt = runtime();
+    let mut rng = Rng::new(303);
+    let batch = rt.abi.update_batch;
+    let dims = rt.abi.critic_dims.clone();
+    let mlp = NativeMlp::init(dims.clone(), &mut rng);
+    let xs: Vec<Vec<f32>> = (0..batch).map(|_| vec_f32(&mut rng, STATE_DIM, -1.0, 1.0)).collect();
+    let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+    let art = rt.artifact("critic_b256").unwrap();
+    let out = art
+        .run_f32(&[F32Tensor::vec(mlp.params.clone()), F32Tensor::mat(flat, batch, STATE_DIM)])
+        .unwrap();
+    assert_eq!(out[0].len(), batch * 2);
+    for (i, x) in xs.iter().enumerate().step_by(17) {
+        let native = mlp.forward(x);
+        for k in 0..2 {
+            let got = out[0][i * 2 + k];
+            // MLP accumulations tolerate slightly looser f32 error.
+            assert!(
+                (native[k] - got).abs() < 2e-3 * (1.0 + native[k].abs()),
+                "row {i} out {k}: {} vs {got}",
+                native[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn relmas_artifact_matches_native() {
+    let mut rt = runtime();
+    let mut rng = Rng::new(404);
+    let dims = rt.abi.relmas_actor_dims.clone();
+    let obs = rt.abi.relmas_obs;
+    let n = rt.abi.num_chiplets;
+    let mlp = NativeMlp::init(dims, &mut rng);
+    let x = vec_f32(&mut rng, obs, 0.0, 1.0);
+    let native = mlp.forward(&x);
+    let art = rt.artifact("relmas_policy").unwrap();
+    let out = art
+        .run_f32(&[F32Tensor::vec(mlp.params.clone()), F32Tensor::mat(x, 1, obs)])
+        .unwrap();
+    assert_eq!(out[0].len(), n);
+    for (a, b) in native.iter().zip(&out[0]) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn ppo_update_artifact_steps_and_learns() {
+    let mut rt = runtime();
+    let mut rng = Rng::new(505);
+    let batch = rt.abi.update_batch;
+    let plen = rt.abi.params_len();
+    let theta_len = rt.abi.theta_len;
+
+    // Init params exactly like the trainer.
+    let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+    let critic = NativeMlp::init(rt.abi.critic_dims.clone(), &mut rng);
+    let mut params: Vec<f32> = ddt.theta.clone();
+    params.extend_from_slice(&critic.params);
+    assert_eq!(params.len(), plen);
+
+    // Fixed synthetic batch: always action 1 with positive advantage.
+    let xs: Vec<f32> = (0..batch * STATE_DIM).map(|i| ((i as f32) * 0.137).sin()).collect();
+    let mut a_onehot = vec![0.0f32; batch * NUM_CLUSTERS];
+    for row in 0..batch {
+        a_onehot[row * NUM_CLUSTERS + 1] = 1.0;
+    }
+    let mask = vec![1.0f32; batch * NUM_CLUSTERS];
+    // logp_old from the native policy (masked softmax, all valid).
+    let mut logp_old = Vec::with_capacity(batch);
+    for row in 0..batch {
+        let x = &xs[row * STATE_DIM..(row + 1) * STATE_DIM];
+        let logits = ddt.forward(x);
+        let probs =
+            thermos::sched::policy::masked_softmax(&logits, &[true; NUM_CLUSTERS]);
+        logp_old.push(probs[1].max(1e-12).ln());
+    }
+    let adv = vec![1.0f32; batch];
+    let ret = vec![0.0f32; batch * 2];
+
+    let prob1 = |theta: &[f32]| -> f32 {
+        let d = NativeDdt::new(STATE_DIM, NUM_CLUSTERS, theta.to_vec());
+        let logits = d.forward(&xs[..STATE_DIM]);
+        thermos::sched::policy::masked_softmax(&logits, &[true; NUM_CLUSTERS])[1]
+    };
+    let p_before = prob1(&params[..theta_len]);
+
+    let mut m = vec![0.0f32; plen];
+    let mut v = vec![0.0f32; plen];
+    let mut t = 0.0f32;
+    for step in 0..10 {
+        let art = rt.artifact("ppo_update_thermos").unwrap();
+        let out = art
+            .run_f32(&[
+                F32Tensor::vec(params.clone()),
+                F32Tensor::vec(m.clone()),
+                F32Tensor::vec(v.clone()),
+                F32Tensor::scalar1(t),
+                F32Tensor::mat(xs.clone(), batch, STATE_DIM),
+                F32Tensor::mat(a_onehot.clone(), batch, NUM_CLUSTERS),
+                F32Tensor::mat(mask.clone(), batch, NUM_CLUSTERS),
+                F32Tensor::vec(logp_old.clone()),
+                F32Tensor::vec(adv.clone()),
+                F32Tensor::mat(ret.clone(), batch, 2),
+            ])
+            .unwrap();
+        params = out[0].clone();
+        m = out[1].clone();
+        v = out[2].clone();
+        t = out[3][0];
+        for o in &out[4..7] {
+            assert!(o[0].is_finite(), "non-finite loss at step {step}");
+        }
+    }
+    assert_eq!(t, 10.0);
+    let p_after = prob1(&params[..theta_len]);
+    assert!(
+        p_after > p_before,
+        "positive advantage must raise π(a=1): {p_before} → {p_after}"
+    );
+}

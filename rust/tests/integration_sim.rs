@@ -1,0 +1,146 @@
+//! Whole-stack simulation integration: every scheduler drives the
+//! streaming simulator end-to-end on the paper system; the THERMOS
+//! scheduler additionally runs with the policy evaluated through the
+//! PJRT artifact (the canonical request path).
+
+use thermos::arch::Arch;
+use thermos::experiments::{run_one, SchedKind};
+use thermos::noi::NoiTopology;
+use thermos::runtime::Runtime;
+use thermos::sched::policy::NativeDdt;
+use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::thermos::ThermosSched;
+use thermos::sim::{SimConfig, Simulator};
+use thermos::util::rng::Rng;
+use thermos::workload::ModelZoo;
+
+fn quick_cfg(rate: f64) -> SimConfig {
+    SimConfig {
+        admit_rate: rate,
+        warmup_s: 5.0,
+        duration_s: 40.0,
+        max_images: 600,
+        mix_jobs: 60,
+        seed: 77,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn all_schedulers_complete_jobs() {
+    let mut rng = Rng::new(9);
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let theta = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng).theta;
+    let actor = thermos::sched::policy::NativeMlp::init(
+        vec![
+            thermos::sched::state::relmas_obs_dim(arch.num_chiplets()),
+            128,
+            128,
+            arch.num_chiplets(),
+        ],
+        &mut rng,
+    )
+    .params;
+    let kinds = vec![
+        SchedKind::Simba,
+        SchedKind::BigLittle,
+        SchedKind::Relmas { actor },
+        SchedKind::Thermos { theta, pref: [0.5, 0.5], label: "balanced" },
+    ];
+    for kind in kinds {
+        let r = run_one(NoiTopology::Mesh, &kind, quick_cfg(1.5));
+        assert!(
+            !r.jobs.is_empty(),
+            "{} completed no jobs in the window",
+            kind.label()
+        );
+        assert!(r.mean_exec_s > 0.0);
+        assert!(r.mean_energy_j > 0.0);
+        assert!(r.max_temp_k >= 300.0 && r.max_temp_k < 400.0);
+    }
+}
+
+#[test]
+fn thermos_via_pjrt_policy_matches_native_schedule() {
+    // The PJRT-backed policy and the native evaluator must produce the
+    // SAME mappings (identical argmax decisions) on a deterministic run.
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(&arch, &zoo, 600);
+    let mut rng = Rng::new(5);
+    let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+
+    let cfg = SimConfig {
+        admit_rate: 1.0,
+        warmup_s: 0.0,
+        duration_s: 30.0,
+        max_images: 400,
+        mix_jobs: 20,
+        seed: 3,
+        ..SimConfig::default()
+    };
+
+    // Native run.
+    let sched_n = ThermosSched::new(arch.clone(), encoder.clone(), ddt.clone(), [0.5, 0.5]);
+    let (rn, _) = Simulator::new(&arch, sched_n, cfg.clone()).run();
+
+    // PJRT run (same seed → same traffic → decisions must agree).
+    let runtime = Runtime::open_default().expect("make artifacts first");
+    let policy = thermos::runtime::PjrtPolicy::new(
+        runtime,
+        "ddt_policy",
+        STATE_DIM,
+        NUM_CLUSTERS,
+        ddt.theta.clone(),
+    )
+    .unwrap();
+    let sched_p = ThermosSched::new(arch.clone(), encoder, policy, [0.5, 0.5]);
+    let (rp, _) = Simulator::new(&arch, sched_p, cfg).run();
+
+    assert_eq!(rn.jobs.len(), rp.jobs.len(), "same completions");
+    for (a, b) in rn.jobs.iter().zip(rp.jobs.iter()) {
+        assert_eq!(a.id, b.id);
+        assert!(
+            (a.exec_s - b.exec_s).abs() < 1e-6,
+            "job {}: exec {} vs {}",
+            a.id,
+            a.exec_s,
+            b.exec_s
+        );
+        assert!((a.energy_j - b.energy_j).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn higher_admit_rate_never_reduces_energy_use() {
+    // System-level sanity across rates.
+    let r1 = run_one(NoiTopology::Mesh, &SchedKind::Simba, quick_cfg(0.5));
+    let r2 = run_one(NoiTopology::Mesh, &SchedKind::Simba, quick_cfg(3.0));
+    assert!(r2.system_energy_j > r1.system_energy_j * 0.8);
+    assert!(r2.throughput_jobs_s >= r1.throughput_jobs_s * 0.9);
+}
+
+#[test]
+fn thermal_constraint_caps_violations() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let mut uncon = quick_cfg(5.0);
+    uncon.thermal_constraint = false;
+    uncon.duration_s = 60.0;
+    let mut con = uncon.clone();
+    con.thermal_constraint = true;
+    let (ru, _) =
+        Simulator::new(&arch, thermos::sched::SimbaSched::new(arch.clone()), uncon).run();
+    let (rc, _) = Simulator::new(&arch, thermos::sched::SimbaSched::new(arch.clone()), con).run();
+    // Constrained max temperature must not exceed unconstrained.
+    assert!(rc.max_temp_k <= ru.max_temp_k + 1.0);
+    // If the unconstrained system violated, the constrained one must
+    // violate strictly less.
+    if ru.violation_chiplet_s > 1.0 {
+        assert!(
+            rc.violation_chiplet_s < ru.violation_chiplet_s,
+            "constrained {} vs unconstrained {}",
+            rc.violation_chiplet_s,
+            ru.violation_chiplet_s
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Training-loop integration: a short MORL-PPO run through the AOT update
+//! artifact must execute end-to-end, log sane losses, and produce a
+//! parameter vector that still drives the scheduler.
+
+use thermos::noi::NoiTopology;
+use thermos::rl::trainer::{TrainConfig, Trainer};
+use thermos::runtime::Runtime;
+use thermos::sched::policy::{ddt_theta_len, NativeDdt};
+use thermos::sched::state::{NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::thermos::ThermosSched;
+use thermos::sched::{Scheduler, SysSnapshot};
+use thermos::workload::{DnnModel, Job, ModelZoo};
+
+#[test]
+fn short_training_run_end_to_end() {
+    let mut runtime = Runtime::open_default().expect("make artifacts first");
+    let cfg = TrainConfig {
+        noi: NoiTopology::Mesh,
+        episodes: 2,
+        jobs_per_episode: 8,
+        max_images: 400,
+        episode_max_s: 120.0,
+        epochs: 2,
+        seed: 13,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg);
+    let before = trainer.params.clone();
+    let params = trainer.train(&mut runtime).expect("training failed");
+    assert_eq!(params.len(), runtime.abi.params_len());
+    assert!(trainer.total_env_steps > 50, "steps {}", trainer.total_env_steps);
+    assert_eq!(trainer.log.len(), 2);
+    for e in &trainer.log {
+        assert!(e.value_loss.is_finite());
+        assert!(e.entropy.is_finite());
+        for r in e.episode_reward {
+            assert!(r <= 0.0, "rewards are negative costs: {r}");
+        }
+    }
+    // Parameters moved.
+    let delta: f32 =
+        params.iter().zip(&before).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+    assert!(delta > 0.0, "params did not move");
+
+    // Trained theta still schedules.
+    let arch = thermos::arch::Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = thermos::sched::state::StateEncoder::new(&arch, &zoo, 400);
+    let theta = params[..ddt_theta_len(STATE_DIM, NUM_CLUSTERS)].to_vec();
+    let mut sched = ThermosSched::new(
+        arch.clone(),
+        encoder,
+        NativeDdt::new(STATE_DIM, NUM_CLUSTERS, theta),
+        [0.5, 0.5],
+    );
+    let job = Job { id: 0, dcg: zoo.dcg(DnnModel::ResNet18), images: 10, arrival_s: 0.0 };
+    let snap = SysSnapshot::fresh(&arch);
+    let mapping = sched.schedule(&job, &snap).expect("trained policy must map");
+    assert_eq!(mapping.layers.len(), job.dcg.num_layers());
+
+    // Log CSV round-trips.
+    let path = std::env::temp_dir().join("thermos_train_log_test.csv");
+    trainer.write_log_csv(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() >= 3);
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,203 @@
+//! Property-based integration tests: cross-module invariants checked over
+//! randomized inputs (own testkit; seeds reproducible via
+//! THERMOS_PROP_SEED).
+
+use thermos::arch::Arch;
+use thermos::noi::NoiTopology;
+use thermos::pim::ComputeModel;
+use thermos::sched::policy::{masked_softmax, NativeDdt, NativeMlp};
+use thermos::sched::state::{relmas_obs_dim, StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::thermos::ThermosSched;
+use thermos::sched::{Scheduler, SysSnapshot};
+use thermos::sim::{ExecProfile, Mapping};
+use thermos::util::rng::Rng;
+use thermos::util::testkit::{check, forall, vec_f32};
+use thermos::workload::{DnnModel, Job, ModelZoo};
+
+fn random_snapshot(arch: &Arch, rng: &mut Rng) -> SysSnapshot {
+    let mut snap = SysSnapshot::fresh(arch);
+    for c in 0..arch.num_chiplets() {
+        // Random partial occupancy and throttle state.
+        let cap = arch.spec(c).mem_bits;
+        snap.free_bits[c] = (cap as f64 * rng.f64()) as u64;
+        snap.temps[c] = 300.0 + 40.0 * rng.f64();
+        snap.throttled[c] = rng.f64() < 0.15;
+    }
+    snap
+}
+
+/// Every scheduler, on any system state, either declines or produces a
+/// complete, memory-feasible, unthrottled mapping.
+#[test]
+fn prop_schedulers_never_overcommit() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(&arch, &zoo, 20_000);
+    forall(40, |rng| {
+        let snap = random_snapshot(&arch, rng);
+        let model = *rng.choose(&DnnModel::all());
+        let job = Job {
+            id: rng.next_u64(),
+            dcg: zoo.dcg(model),
+            images: rng.range_usize(10, 5000) as u64,
+            arrival_s: 0.0,
+        };
+        let policy = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, rng);
+        let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(thermos::sched::SimbaSched::new(arch.clone())),
+            Box::new(thermos::sched::BigLittleSched::new(arch.clone())),
+            Box::new(ThermosSched::new(arch.clone(), encoder.clone(), policy, [0.5, 0.5])),
+        ];
+        for s in schedulers.iter_mut() {
+            if let Some(m) = s.schedule(&job, &snap) {
+                check(m.layers.len() == job.dcg.num_layers(), format!("{}: layer count", s.name()))?;
+                for (i, la) in m.layers.iter().enumerate() {
+                    check(
+                        la.total_bits() == job.dcg.layers[i].weight_bits,
+                        format!("{}: layer {i} incomplete", s.name()),
+                    )?;
+                }
+                let per = m.bits_per_chiplet(arch.num_chiplets());
+                for (c, &b) in per.iter().enumerate() {
+                    check(b <= snap.free_bits[c], format!("{}: chiplet {c} overcommit", s.name()))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// THERMOS never places weights on throttled chiplets (§4.1).
+#[test]
+fn prop_thermos_avoids_throttled_chiplets() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(&arch, &zoo, 20_000);
+    forall(30, |rng| {
+        let snap = random_snapshot(&arch, rng);
+        let policy = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, rng);
+        let mut sched = ThermosSched::new(arch.clone(), encoder.clone(), policy, [1.0, 0.0]);
+        let job = Job {
+            id: 1,
+            dcg: zoo.dcg(*rng.choose(&DnnModel::all())),
+            images: 100,
+            arrival_s: 0.0,
+        };
+        if let Some(m) = sched.schedule(&job, &snap) {
+            for la in &m.layers {
+                for &(c, _) in &la.parts {
+                    check(!snap.throttled[c], format!("throttled chiplet {c} used"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The execution profile respects basic physics on any feasible mapping:
+/// times/energies positive, more images never cheaper or faster.
+#[test]
+fn prop_exec_profile_monotone_in_images() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let cm = ComputeModel::default();
+    let encoder = StateEncoder::new(&arch, &zoo, 20_000);
+    forall(25, |rng| {
+        let snap = SysSnapshot::fresh(&arch);
+        let policy = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, rng);
+        let mut sched = ThermosSched::new(arch.clone(), encoder.clone(), policy, [0.5, 0.5]);
+        let job = Job {
+            id: 1,
+            dcg: zoo.dcg(*rng.choose(&DnnModel::all())),
+            images: 100,
+            arrival_s: 0.0,
+        };
+        let m: Mapping = sched.schedule(&job, &snap).expect("empty system fits");
+        let p = ExecProfile::compute(&arch, &cm, &job.dcg, &m);
+        check(p.bottleneck_s > 0.0, "bottleneck positive")?;
+        check(p.frame_latency_s >= p.bottleneck_s - 1e-12, "fill ≥ bottleneck")?;
+        check(p.frame_energy_j > 0.0, "energy positive")?;
+        let (a, b) = (rng.range_usize(1, 10_000) as u64, rng.range_usize(1, 10_000) as u64);
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        check(p.ideal_exec_s(lo) <= p.ideal_exec_s(hi) + 1e-12, "time monotone in images")?;
+        check(p.ideal_dynamic_j(lo) <= p.ideal_dynamic_j(hi) + 1e-12, "energy monotone")
+    });
+}
+
+/// Masked softmax over random logits: probabilities sum to 1, invalid
+/// actions get ~0 mass, and sampling only ever returns valid actions.
+#[test]
+fn prop_masked_softmax_and_sampling() {
+    forall(200, |rng| {
+        let n = rng.range_usize(2, 80);
+        let logits = vec_f32(rng, n, -5.0, 5.0);
+        let mut valid: Vec<bool> = (0..n).map(|_| rng.f64() < 0.6).collect();
+        if !valid.iter().any(|&v| v) {
+            valid[rng.below(n)] = true;
+        }
+        let probs = masked_softmax(&logits, &valid);
+        let sum: f32 = probs.iter().sum();
+        check((sum - 1.0).abs() < 1e-4, format!("sum {sum}"))?;
+        for (i, &p) in probs.iter().enumerate() {
+            if !valid[i] {
+                check(p < 1e-6, format!("invalid action {i} has mass {p}"))?;
+            }
+        }
+        for _ in 0..20 {
+            let (a, _) = thermos::sched::policy::sample_action(&probs, rng);
+            check(valid[a], format!("sampled invalid action {a}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Native MLP forward is Lipschitz-continuous in its input (sanity on the
+/// evaluator used for RELMAS and the critic): small input perturbations
+/// yield bounded output changes.
+#[test]
+fn prop_mlp_continuity() {
+    forall(30, |rng| {
+        let dims = vec![relmas_obs_dim(78), 128, 128, 78];
+        let mlp = NativeMlp::init(dims.clone(), rng);
+        let x = vec_f32(rng, dims[0], 0.0, 1.0);
+        let y1 = mlp.forward(&x);
+        let mut x2 = x.clone();
+        let idx = rng.below(x.len());
+        x2[idx] += 1e-4;
+        let y2 = mlp.forward(&x2);
+        let max_delta = y1
+            .iter()
+            .zip(&y2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        check(max_delta < 1.0, format!("output jumped {max_delta} for 1e-4 input step"))
+    });
+}
+
+/// The state encoder is deterministic and scale-bounded for arbitrary
+/// system states.
+#[test]
+fn prop_state_encoder_bounded() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(&arch, &zoo, 20_000);
+    forall(60, |rng| {
+        let snap = random_snapshot(&arch, rng);
+        let job = Job {
+            id: 0,
+            dcg: zoo.dcg(*rng.choose(&DnnModel::all())),
+            images: rng.range_usize(1, 20_000) as u64,
+            arrival_s: 0.0,
+        };
+        let li = rng.below(job.dcg.num_layers());
+        let need = rng.range_usize(1, job.dcg.layers[li].weight_bits as usize) as u64;
+        let w = rng.f32();
+        let s1 = encoder.encode(&arch, &snap, &job, li, need, &[], [w, 1.0 - w]);
+        let s2 = encoder.encode(&arch, &snap, &job, li, need, &[], [w, 1.0 - w]);
+        check(s1 == s2, "encoder must be deterministic")?;
+        for (i, &v) in s1.iter().enumerate() {
+            check(v.is_finite() && (-2.0..=2.0).contains(&v), format!("feature {i} = {v}"))?;
+        }
+        Ok(())
+    });
+}
