@@ -26,6 +26,7 @@ fn read_log(noi: NoiTopology) -> Option<Vec<(usize, f64)>> {
     Some(out)
 }
 
+#[cfg(feature = "pjrt")]
 fn train_quick(noi: NoiTopology) -> Option<Vec<(usize, f64)>> {
     let mut runtime = thermos::runtime::Runtime::open_default().ok()?;
     let cfg = thermos::rl::trainer::TrainConfig {
@@ -40,6 +41,15 @@ fn train_quick(noi: NoiTopology) -> Option<Vec<(usize, f64)>> {
     tr.train(&mut runtime).ok()?;
     tr.write_log_csv(&format!("results/train_{}.csv", noi.name())).ok()?;
     Some(tr.log.iter().map(|e| (e.env_steps, e.value_loss as f64)).collect())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn train_quick(noi: NoiTopology) -> Option<Vec<(usize, f64)>> {
+    eprintln!(
+        "(cannot train a log for {} without the `pjrt` feature — run `thermos train`)",
+        noi.name()
+    );
+    None
 }
 
 fn main() {

@@ -29,6 +29,34 @@ use thermos::workload::{DnnModel, Job, ModelZoo};
 /// in DESIGN.md §2 (platform substitution): energy/call = time × P_PROXY.
 const P_PROXY_W: f64 = 12.0;
 
+#[cfg(feature = "pjrt")]
+fn bench_pjrt_policy(g: &mut Group, ddt: &NativeDdt, state: &[f32]) -> Option<f64> {
+    match thermos::runtime::Runtime::open_default() {
+        Ok(runtime) => {
+            let mut pol = thermos::runtime::PjrtPolicy::new(
+                runtime,
+                "ddt_policy",
+                STATE_DIM,
+                NUM_CLUSTERS,
+                ddt.theta.clone(),
+            )
+            .expect("compile ddt_policy");
+            let r = g.bench("rl_policy_pjrt_artifact", || pol.logits(black_box(state)));
+            Some(r.mean_ns)
+        }
+        Err(e) => {
+            eprintln!("(pjrt path skipped: {e})");
+            None
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt_policy(_g: &mut Group, _ddt: &NativeDdt, _state: &[f32]) -> Option<f64> {
+    eprintln!("(pjrt path skipped: built without the `pjrt` feature)");
+    None
+}
+
 fn main() {
     let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
     let zoo = ModelZoo::new();
@@ -46,20 +74,7 @@ fn main() {
     let policy_ns = policy.mean_ns;
 
     // -- RL policy through the PJRT artifact (canonical runtime path).
-    let pjrt_ns = match thermos::runtime::Runtime::open_default() {
-        Ok(runtime) => {
-            let mut pol = thermos::runtime::PjrtPolicy::new(
-                runtime, "ddt_policy", STATE_DIM, NUM_CLUSTERS, ddt.theta.clone(),
-            )
-            .expect("compile ddt_policy");
-            let r = g.bench("rl_policy_pjrt_artifact", || pol.logits(black_box(&state)));
-            Some(r.mean_ns)
-        }
-        Err(e) => {
-            eprintln!("(pjrt path skipped: {e})");
-            None
-        }
-    };
+    let pjrt_ns = bench_pjrt_policy(&mut g, &ddt, &state);
 
     // -- proximity-driven algorithm (one cluster assignment).
     let prev: Vec<(usize, u64)> = vec![(0, 500_000), (5, 500_000)];

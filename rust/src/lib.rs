@@ -28,5 +28,6 @@ pub mod runtime;
 pub mod thermal;
 pub mod util;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod workload;

@@ -1,19 +1,30 @@
-//! `thermos` — leader binary: train policies, run simulations, sweep
-//! experiments, and print system info. All heavy lifting lives in the
-//! library; this is the CLI entrypoint.
+//! `thermos` — leader binary: train policies, run simulations, serve an
+//! online request stream, sweep experiments, and print system info. All
+//! heavy lifting lives in the library; this is the CLI entrypoint.
 
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
 use thermos::arch::Arch;
 use thermos::noi::NoiTopology;
+#[cfg(feature = "pjrt")]
 use thermos::rl::relmas_trainer::RelmasTrainer;
+#[cfg(feature = "pjrt")]
 use thermos::rl::trainer::{TrainConfig, Trainer};
-use thermos::runtime::{params_io, Runtime};
+use thermos::runtime::params_io;
+#[cfg(feature = "pjrt")]
+use thermos::runtime::Runtime;
 use thermos::sched::policy::NativeDdt;
 use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
 use thermos::sched::thermos::{Preference, ThermosSched};
 use thermos::sched::{BigLittleSched, SimbaSched};
+use thermos::serve::{
+    MmppSource, PoissonSource, ReplayWriter, ServeConfig, ServeReport, ServeSched, Server,
+    TenantRouter, TraceSource, TrafficSource,
+};
 use thermos::sim::{SimConfig, SimResult, Simulator};
 use thermos::util::cli;
+use thermos::util::json::Json;
 use thermos::workload::ModelZoo;
 
 const HELP: &str = "\
@@ -24,11 +35,13 @@ USAGE: thermos <command> [options]
 
 COMMANDS:
   info                      Print the Table 3 system + Table 4 parameters
-  train                     Train the THERMOS MORL policy (AOT PPO updates)
-  train-relmas              Train the RELMAS baseline policy
+  train                     Train the THERMOS MORL policy (needs `pjrt` feature)
+  train-relmas              Train the RELMAS baseline policy (needs `pjrt`)
   sim                       Run one streaming simulation and print metrics
+  serve                     Run the online scheduling service (admission
+                            control, multi-tenant queues, live telemetry)
   explain                   Render a trained DDT policy human-readably (4.3.1)
-  smoke                     Load artifacts, run one policy call end-to-end
+  smoke                     Load artifacts, run one policy call (needs `pjrt`)
 
 Common options:
   --noi <mesh|kite|floret|hexamesh>   NoI topology [mesh]
@@ -47,7 +60,24 @@ sim options:
   --rate <jobs/s>           [2.0]     --duration <s> [240]
   --warmup <s>              [60]      --max-images <n> [20000]
   --pjrt                    evaluate the policy through the PJRT artifact
-                            (default uses the bit-checked native evaluator)
+                            (needs the `pjrt` feature; default uses the
+                            bit-checked native evaluator)
+
+serve options:
+  --source <poisson|mmpp|replay>      traffic source [poisson]
+  --trace <file>            JSONL request log (required for --source replay)
+  --record <file>           record every offered request + mapping decision
+  --out <file>              write the final report JSON here (else stdout)
+  --sched <thermos|simba|biglittle>   [thermos] (thermos = per-tenant ω router)
+  --params <file>           trained params (thermos)
+  --rate <jobs/s>           [2.0]     --duration <s> [120]
+  --max-images <n>          [4000]    --mix-jobs <n> [500]
+  --tenants <we,wb,wn>      tenant mix weights exec,balanced,energy [1,1,1]
+  --queue-cap <n>           per-tenant queue bound [64]
+  --max-wait <s>            shed deadline, 0 = never shed [30]
+  --snapshot-every <s>      live telemetry period, 0 = off [10]
+  --rate-on/--rate-off <jobs/s>, --on-s/--off-s <s>   MMPP burst shape
+  --quiet                   suppress live snapshot lines on stderr
 ";
 
 fn main() {
@@ -56,7 +86,9 @@ fn main() {
         &argv,
         &[
             "noi", "seed", "artifacts", "episodes", "jobs", "max-images", "out", "log-csv",
-            "sched", "params", "pref", "rate", "duration", "warmup", "epochs",
+            "sched", "params", "pref", "rate", "duration", "warmup", "epochs", "source", "trace",
+            "record", "mix-jobs", "tenants", "queue-cap", "max-wait", "snapshot-every", "rate-on",
+            "rate-off", "on-s", "off-s",
         ],
     ) {
         Ok(a) => a,
@@ -74,6 +106,7 @@ fn main() {
         "train" => cmd_train(&args),
         "train-relmas" => cmd_train_relmas(&args),
         "sim" => cmd_sim(&args),
+        "serve" => cmd_serve(&args),
         "explain" => cmd_explain(&args),
         "smoke" => cmd_smoke(&args),
         other => {
@@ -92,6 +125,7 @@ fn noi_of(args: &cli::Args) -> Result<NoiTopology> {
     NoiTopology::from_name(name).with_context(|| format!("unknown NoI `{name}`"))
 }
 
+#[cfg(feature = "pjrt")]
 fn runtime_of(args: &cli::Args) -> Result<Runtime> {
     Runtime::open(args.get_or("artifacts", "artifacts"))
 }
@@ -103,6 +137,22 @@ fn pref_of(args: &cli::Args) -> Result<Preference> {
         "energy" => Ok([0.0, 1.0]),
         other => bail!("unknown preference `{other}`"),
     }
+}
+
+/// Build the native DDT policy from `--params`, or an untrained one.
+fn native_ddt(args: &cli::Args, seed: u64) -> Result<NativeDdt> {
+    let theta = match args.get("params") {
+        Some(p) => {
+            let params = params_io::load(p)?;
+            params[..thermos::sched::policy::ddt_theta_len(STATE_DIM, NUM_CLUSTERS)].to_vec()
+        }
+        None => {
+            eprintln!("note: no --params given; using untrained policy");
+            let mut rng = thermos::util::rng::Rng::new(seed);
+            NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng).theta
+        }
+    };
+    Ok(NativeDdt::new(STATE_DIM, NUM_CLUSTERS, theta))
 }
 
 fn cmd_info(args: &cli::Args) -> Result<()> {
@@ -152,6 +202,7 @@ fn cmd_info(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &cli::Args) -> Result<()> {
     let noi = noi_of(args)?;
     let cfg = TrainConfig {
@@ -182,6 +233,12 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &cli::Args) -> Result<()> {
+    bail!("`train` needs the PJRT runtime: rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_relmas(args: &cli::Args) -> Result<()> {
     let noi = noi_of(args)?;
     let cfg = TrainConfig {
@@ -203,6 +260,11 @@ fn cmd_train_relmas(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_relmas(_args: &cli::Args) -> Result<()> {
+    bail!("`train-relmas` needs the PJRT runtime: rebuild with `--features pjrt`")
+}
+
 fn print_result(r: &SimResult) {
     println!(
         "{:<22} throughput {:>5.2} DNN/s | exec {:>7.2} s | e2e {:>7.2} s | energy {:>7.3} J | EDP {:>8.2} | maxT {:>5.1} K | throttles {} | jobs {}",
@@ -216,6 +278,34 @@ fn print_result(r: &SimResult) {
         r.throttle_events,
         r.jobs.len()
     );
+}
+
+#[cfg(feature = "pjrt")]
+fn run_sim_pjrt(
+    args: &cli::Args,
+    arch: &Arch,
+    encoder: StateEncoder,
+    omega: Preference,
+    theta: Vec<f32>,
+    cfg: SimConfig,
+) -> Result<SimResult> {
+    let runtime = runtime_of(args)?;
+    let policy =
+        thermos::runtime::PjrtPolicy::new(runtime, "ddt_policy", STATE_DIM, NUM_CLUSTERS, theta)?;
+    let sched = ThermosSched::new(arch.clone(), encoder, policy, omega);
+    Ok(Simulator::new(arch, sched, cfg).run().0)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_sim_pjrt(
+    _args: &cli::Args,
+    _arch: &Arch,
+    _encoder: StateEncoder,
+    _omega: Preference,
+    _theta: Vec<f32>,
+    _cfg: SimConfig,
+) -> Result<SimResult> {
+    bail!("--pjrt needs the PJRT runtime: rebuild with `--features pjrt`")
 }
 
 fn cmd_sim(args: &cli::Args) -> Result<()> {
@@ -239,34 +329,119 @@ fn cmd_sim(args: &cli::Args) -> Result<()> {
             let zoo = ModelZoo::new();
             let encoder = StateEncoder::new(&arch, &zoo, cfg.max_images);
             let omega = pref_of(args)?;
-            let theta = match args.get("params") {
-                Some(p) => {
-                    let params = params_io::load(p)?;
-                    params[..thermos::sched::policy::ddt_theta_len(STATE_DIM, NUM_CLUSTERS)]
-                        .to_vec()
-                }
-                None => {
-                    eprintln!("note: no --params given; using untrained policy");
-                    let mut rng = thermos::util::rng::Rng::new(cfg.seed);
-                    NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng).theta
-                }
-            };
+            let ddt = native_ddt(args, cfg.seed)?;
             if args.has("pjrt") {
-                let runtime = runtime_of(args)?;
-                let policy = thermos::runtime::PjrtPolicy::new(
-                    runtime, "ddt_policy", STATE_DIM, NUM_CLUSTERS, theta,
-                )?;
-                let sched = ThermosSched::new(arch.clone(), encoder, policy, omega);
-                Simulator::new(&arch, sched, cfg).run().0
+                run_sim_pjrt(args, &arch, encoder, omega, ddt.theta, cfg)?
             } else {
-                let policy = NativeDdt::new(STATE_DIM, NUM_CLUSTERS, theta);
-                let sched = ThermosSched::new(arch.clone(), encoder, policy, omega);
+                let sched = ThermosSched::new(arch.clone(), encoder, ddt, omega);
                 Simulator::new(&arch, sched, cfg).run().0
             }
         }
         other => bail!("unknown scheduler `{other}`"),
     };
     print_result(&result);
+    Ok(())
+}
+
+fn run_server<S: ServeSched>(
+    arch: &Arch,
+    sched: S,
+    source: Box<dyn TrafficSource>,
+    cfg: ServeConfig,
+    replay: Option<Rc<RefCell<ReplayWriter>>>,
+    live: bool,
+) -> ServeReport {
+    let mut server = Server::new(arch, sched, source, cfg);
+    if let Some(w) = replay {
+        server = server.with_replay(w);
+    }
+    if live {
+        server.on_snapshot =
+            Some(Box::new(|snap: &Json| eprintln!("{}", snap.to_string_compact())));
+    }
+    server.run()
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let noi = noi_of(args)?;
+    let arch = Arch::paper_heterogeneous(noi);
+    let seed = args.parse_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let rate = args.parse_f64("rate", 2.0).map_err(anyhow::Error::msg)?;
+    let mix_jobs = args.parse_usize("mix-jobs", 500).map_err(anyhow::Error::msg)?;
+    let max_images = args.parse_u64("max-images", 4000).map_err(anyhow::Error::msg)?;
+    let tenants = args.parse_f64_list("tenants", &[1.0, 1.0, 1.0]).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        tenants.len() == 3,
+        "--tenants expects three weights: exec,balanced,energy"
+    );
+    let weights = [tenants[0], tenants[1], tenants[2]];
+
+    let source: Box<dyn TrafficSource> = match args.get_or("source", "poisson") {
+        "poisson" => Box::new(PoissonSource::new(rate, mix_jobs, max_images, weights, seed)),
+        "mmpp" => Box::new(MmppSource::new(
+            args.parse_f64("rate-on", rate * 4.0).map_err(anyhow::Error::msg)?,
+            args.parse_f64("rate-off", 0.0).map_err(anyhow::Error::msg)?,
+            args.parse_f64("on-s", 10.0).map_err(anyhow::Error::msg)?,
+            args.parse_f64("off-s", 30.0).map_err(anyhow::Error::msg)?,
+            mix_jobs,
+            max_images,
+            weights,
+            seed,
+        )),
+        "replay" => {
+            let path = args.get("trace").context("--source replay needs --trace <file>")?;
+            Box::new(TraceSource::from_path(path).map_err(anyhow::Error::msg)?)
+        }
+        other => bail!("unknown source `{other}`"),
+    };
+
+    let cfg = ServeConfig {
+        duration_s: args.parse_f64("duration", 120.0).map_err(anyhow::Error::msg)?,
+        tenant_queue_cap: args.parse_usize("queue-cap", 64).map_err(anyhow::Error::msg)?,
+        max_wait_s: args.parse_f64("max-wait", 30.0).map_err(anyhow::Error::msg)?,
+        snapshot_every_s: args.parse_f64("snapshot-every", 10.0).map_err(anyhow::Error::msg)?,
+        sim: SimConfig { warmup_s: 0.0, max_images, seed, ..SimConfig::default() },
+    };
+
+    let replay = match args.get("record") {
+        Some(p) => Some(Rc::new(RefCell::new(
+            ReplayWriter::create(p).with_context(|| format!("create replay log {p}"))?,
+        ))),
+        None => None,
+    };
+    let live = !args.has("quiet");
+
+    let report = match args.get_or("sched", "thermos") {
+        "simba" => run_server(&arch, SimbaSched::new(arch.clone()), source, cfg, replay, live),
+        "biglittle" | "big_little" => {
+            run_server(&arch, BigLittleSched::new(arch.clone()), source, cfg, replay, live)
+        }
+        "thermos" | "thermos-mt" | "thermos_mt" => {
+            // Per-tenant ω routing through the single MORL policy; --pref
+            // only sets the fallback for jobs with no registered tenant.
+            let zoo = ModelZoo::new();
+            let encoder = StateEncoder::new(&arch, &zoo, max_images);
+            let inner =
+                ThermosSched::new(arch.clone(), encoder, native_ddt(args, seed)?, pref_of(args)?);
+            run_server(&arch, TenantRouter::new(inner), source, cfg, replay, live)
+        }
+        other => bail!("unknown scheduler `{other}`"),
+    };
+
+    eprintln!("telemetry digest: {}", report.digest);
+    let pretty = report.json.to_string_pretty();
+    match args.get("out") {
+        Some(p) => {
+            if let Some(parent) = std::path::Path::new(p).parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            std::fs::write(p, pretty + "\n")?;
+            eprintln!("wrote report to {p}");
+        }
+        None => println!("{pretty}"),
+    }
     Ok(())
 }
 
@@ -284,6 +459,7 @@ fn cmd_explain(args: &cli::Args) -> Result<()> {
 }
 
 /// End-to-end smoke test: artifacts load, PJRT runs, native matches.
+#[cfg(feature = "pjrt")]
 fn cmd_smoke(args: &cli::Args) -> Result<()> {
     let mut runtime = runtime_of(args)?;
     println!("platform: {}", runtime.platform());
@@ -305,4 +481,9 @@ fn cmd_smoke(args: &cli::Args) -> Result<()> {
     }
     println!("smoke OK — native == artifact");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_smoke(_args: &cli::Args) -> Result<()> {
+    bail!("`smoke` needs the PJRT runtime: rebuild with `--features pjrt`")
 }

@@ -3,8 +3,11 @@
 //! objective — RELMAS is single-objective, so its reward is the balanced
 //! scalarization. Trained through the AOT `ppo_update_relmas` artifact.
 
-use super::{gae, minibatch_indices, normalize, primary_reward, secondary_reward, Transition};
+#[cfg(feature = "pjrt")]
+use super::{gae, minibatch_indices, normalize};
+use super::{primary_reward, secondary_reward, Transition};
 use crate::arch::Arch;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{F32Tensor, Runtime};
 use crate::sched::policy::{mlp_param_len, NativeMlp};
 use crate::sched::relmas::RelmasSched;
@@ -12,11 +15,13 @@ use crate::sched::state::{relmas_obs_dim, StateEncoder};
 use crate::sim::{SimConfig, Simulator};
 use crate::util::rng::Rng;
 use crate::workload::ModelZoo;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 pub struct RelmasTrainer {
     pub cfg: super::trainer::TrainConfig,
     pub arch: Arch,
@@ -72,6 +77,7 @@ impl RelmasTrainer {
         NativeMlp::new(self.actor_dims.clone(), self.params[..self.theta_len()].to_vec())
     }
 
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     fn native_critic(&self) -> NativeMlp {
         NativeMlp::new(self.critic_dims.clone(), self.params[self.theta_len()..].to_vec())
     }
@@ -148,6 +154,7 @@ impl RelmasTrainer {
         (transitions, if rjobs > 0 { rsum / rjobs as f32 } else { 0.0 })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn train(&mut self, runtime: &mut Runtime) -> Result<Vec<f32>> {
         let n_chiplets = self.arch.num_chiplets();
         let obs_dim = relmas_obs_dim(n_chiplets);

@@ -4,9 +4,12 @@
 //! preference-conditioned actor-critic is updated through the AOT
 //! `ppo_update_thermos` artifact (§4.3.2, Fig. 3b).
 
-use super::{gae, minibatch_indices, normalize, primary_reward, secondary_reward, Transition};
+#[cfg(feature = "pjrt")]
+use super::{gae, minibatch_indices, normalize};
+use super::{primary_reward, secondary_reward, Transition};
 use crate::arch::Arch;
 use crate::noi::NoiTopology;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{F32Tensor, Runtime};
 use crate::sched::policy::{NativeDdt, NativeMlp};
 use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
@@ -14,6 +17,7 @@ use crate::sched::thermos::{Preference, ThermosSched, PREF_BALANCED, PREF_ENERGY
 use crate::sim::{SimConfig, Simulator};
 use crate::util::rng::Rng;
 use crate::workload::ModelZoo;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -68,6 +72,7 @@ pub struct TrainLogEntry {
     pub episode_reward: [f32; 3],
 }
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub arch: Arch,
@@ -120,6 +125,7 @@ impl Trainer {
         NativeDdt::new(STATE_DIM, NUM_CLUSTERS, self.params[..self.theta_len()].to_vec())
     }
 
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     fn native_critic(&self) -> NativeMlp {
         NativeMlp::new(vec![STATE_DIM, 64, 64, 64, 2], self.params[self.theta_len()..].to_vec())
     }
@@ -215,6 +221,7 @@ impl Trainer {
     /// One episode: the three preference environments in parallel threads
     /// (§4.3.2 "multi-threading to run all three preferences in parallel"),
     /// then PPO epochs through the AOT update artifact.
+    #[cfg(feature = "pjrt")]
     pub fn episode(&mut self, runtime: &mut Runtime, ep: usize) -> Result<()> {
         let admit_rate = self.rng.range_f64(self.cfg.rate_range.0, self.cfg.rate_range.1);
         let base_seed = self.rng.next_u64();
@@ -324,6 +331,7 @@ impl Trainer {
     }
 
     /// Full training run; returns the trained flat parameters.
+    #[cfg(feature = "pjrt")]
     pub fn train(&mut self, runtime: &mut Runtime) -> Result<Vec<f32>> {
         for ep in 0..self.cfg.episodes {
             self.episode(runtime, ep)?;

@@ -1,9 +1,13 @@
 //! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
 //! them on the CPU PJRT client via the `xla` crate.
 //!
-//! This is the only place the coordinator touches XLA. Python never runs
-//! here — `make artifacts` produced the `.hlo.txt` files once at build
-//! time; after that the rust binary is self-contained.
+//! This is the only place the coordinator touches XLA, and the whole
+//! XLA-facing surface is gated behind the `pjrt` cargo feature: default
+//! builds use the bit-compatible native evaluators
+//! ([`crate::sched::policy::NativeDdt`] / `NativeMlp`) and need neither
+//! the `xla` crate nor any HLO artifacts. The feature-independent pieces
+//! — the artifact ABI ([`abi`]) and the params file format
+//! ([`params_io`]) — stay available everywhere.
 //!
 //! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`, with
@@ -14,16 +18,21 @@ pub mod abi;
 
 pub use abi::Abi;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifact {
     /// Execute with f32 tensor inputs; returns the flattened f32 outputs
     /// (one Vec per tuple element).
@@ -64,6 +73,7 @@ impl F32Tensor {
     pub fn scalar1(v: f32) -> F32Tensor {
         F32Tensor { data: vec![v], dims: vec![1] }
     }
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         Ok(lit.reshape(&self.dims)?)
@@ -71,6 +81,7 @@ impl F32Tensor {
 }
 
 /// The runtime: a PJRT CPU client plus lazily compiled artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -78,6 +89,7 @@ pub struct Runtime {
     cache: HashMap<String, Artifact>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open `artifacts/` (validating abi.json against the rust constants)
     /// and create the PJRT CPU client.
@@ -193,6 +205,7 @@ pub mod params_io {
 /// A [`crate::sched::policy::PolicyEval`] backed by a PJRT artifact —
 /// the canonical runtime integration for the B=1 scheduling hot path.
 /// Owns its own `Runtime` to keep lifetimes simple at call sites.
+#[cfg(feature = "pjrt")]
 pub struct PjrtPolicy {
     runtime: Runtime,
     name: String,
@@ -201,6 +214,7 @@ pub struct PjrtPolicy {
     pub theta: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtPolicy {
     pub fn new(
         mut runtime: Runtime,
@@ -229,6 +243,7 @@ impl PjrtPolicy {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl crate::sched::policy::PolicyEval for PjrtPolicy {
     fn num_actions(&self) -> usize {
         self.out_dim

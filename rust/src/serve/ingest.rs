@@ -1,0 +1,337 @@
+//! Pluggable traffic sources for the serving loop.
+//!
+//! All sources are deterministic given their seed (or trace file), which
+//! is what makes the replay regression harness possible: the server never
+//! draws randomness of its own, so the source fully determines the offered
+//! request stream.
+
+use super::{ServeRequest, TenantClass};
+use crate::util::rng::Rng;
+use crate::workload::WorkloadMix;
+
+/// A stream of timestamped requests, consumed step-by-step by the server.
+pub trait TrafficSource {
+    fn name(&self) -> &'static str;
+
+    /// Time of the next arrival, or `None` if the stream is exhausted.
+    fn peek(&self) -> Option<f64>;
+
+    /// Pop all requests arriving up to (and including) `now`, in
+    /// non-decreasing time order.
+    fn arrivals_until(&mut self, now: f64) -> Vec<ServeRequest>;
+}
+
+/// Sample a tenant class from unnormalized weights (exec, balanced,
+/// energy).
+fn sample_tenant(rng: &mut Rng, weights: &[f64; 3]) -> TenantClass {
+    TenantClass::ALL[rng.categorical(weights)]
+}
+
+/// Poisson arrivals at a fixed rate — the same process the batch
+/// simulator's `TrafficGen` uses, lifted to the service boundary with a
+/// tenant class sampled per request.
+pub struct PoissonSource {
+    mix: WorkloadMix,
+    rate_jobs_s: f64,
+    tenant_weights: [f64; 3],
+    next_t: f64,
+    idx: usize,
+    rng: Rng,
+}
+
+impl PoissonSource {
+    pub fn new(
+        rate_jobs_s: f64,
+        mix_jobs: usize,
+        max_images: u64,
+        tenant_weights: [f64; 3],
+        seed: u64,
+    ) -> PoissonSource {
+        assert!(rate_jobs_s > 0.0, "Poisson rate must be positive");
+        let mut rng = Rng::new(seed);
+        let mix = WorkloadMix::random(&mut rng, mix_jobs, max_images);
+        let first = rng.exp(rate_jobs_s);
+        PoissonSource { mix, rate_jobs_s, tenant_weights, next_t: first, idx: 0, rng }
+    }
+}
+
+impl TrafficSource for PoissonSource {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn peek(&self) -> Option<f64> {
+        Some(self.next_t)
+    }
+
+    fn arrivals_until(&mut self, now: f64) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        while self.next_t <= now {
+            let (model, images) = self.mix.entries[self.idx % self.mix.entries.len()];
+            let tenant = sample_tenant(&mut self.rng, &self.tenant_weights);
+            out.push(ServeRequest { t_s: self.next_t, tenant, model, images });
+            self.idx += 1;
+            self.next_t += self.rng.exp(self.rate_jobs_s);
+        }
+        out
+    }
+}
+
+/// Bursty traffic: a two-state Markov-modulated Poisson process. The
+/// source alternates between an *on* state (rate `rate_on`) and an *off*
+/// state (rate `rate_off`, may be 0) with exponentially distributed dwell
+/// times — the standard model for bursty request arrivals.
+pub struct MmppSource {
+    mix: WorkloadMix,
+    rate_on: f64,
+    rate_off: f64,
+    mean_on_s: f64,
+    mean_off_s: f64,
+    tenant_weights: [f64; 3],
+    /// Internal clock of the generating process.
+    t: f64,
+    on: bool,
+    state_until: f64,
+    next_t: f64,
+    idx: usize,
+    rng: Rng,
+}
+
+impl MmppSource {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rate_on: f64,
+        rate_off: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+        mix_jobs: usize,
+        max_images: u64,
+        tenant_weights: [f64; 3],
+        seed: u64,
+    ) -> MmppSource {
+        assert!(rate_on > 0.0, "MMPP on-state rate must be positive");
+        assert!(rate_off >= 0.0);
+        assert!(mean_on_s > 0.0 && mean_off_s > 0.0, "dwell times must be positive");
+        let mut rng = Rng::new(seed);
+        let mix = WorkloadMix::random(&mut rng, mix_jobs, max_images);
+        let state_until = rng.exp(1.0 / mean_on_s);
+        let mut src = MmppSource {
+            mix,
+            rate_on,
+            rate_off,
+            mean_on_s,
+            mean_off_s,
+            t: 0.0,
+            on: true, // start in a burst
+            state_until,
+            next_t: 0.0,
+            idx: 0,
+            rng,
+        };
+        src.next_t = src.gen_next();
+        src
+    }
+
+    /// Advance the modulated process to its next arrival. Exponential
+    /// dwell/inter-arrival times are memoryless, so discarding a candidate
+    /// that overshoots the state boundary and redrawing in the next state
+    /// is exact.
+    fn gen_next(&mut self) -> f64 {
+        loop {
+            let rate = if self.on { self.rate_on } else { self.rate_off };
+            if rate > 1e-12 {
+                let cand = self.t + self.rng.exp(rate);
+                if cand <= self.state_until {
+                    self.t = cand;
+                    return cand;
+                }
+            }
+            // No arrival before the state switch: jump to it.
+            self.t = self.state_until;
+            self.on = !self.on;
+            let mean = if self.on { self.mean_on_s } else { self.mean_off_s };
+            self.state_until = self.t + self.rng.exp(1.0 / mean);
+        }
+    }
+}
+
+impl TrafficSource for MmppSource {
+    fn name(&self) -> &'static str {
+        "mmpp"
+    }
+
+    fn peek(&self) -> Option<f64> {
+        Some(self.next_t)
+    }
+
+    fn arrivals_until(&mut self, now: f64) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        while self.next_t <= now {
+            let arrival = self.next_t;
+            let (model, images) = self.mix.entries[self.idx % self.mix.entries.len()];
+            let tenant = sample_tenant(&mut self.rng, &self.tenant_weights);
+            out.push(ServeRequest { t_s: arrival, tenant, model, images });
+            self.idx += 1;
+            self.next_t = self.gen_next();
+        }
+        out
+    }
+}
+
+/// Replays a recorded JSONL request log (see [`super::replay`] for the
+/// format). The stream is finite; `peek` returns `None` once drained.
+pub struct TraceSource {
+    reqs: Vec<ServeRequest>,
+    idx: usize,
+}
+
+impl TraceSource {
+    pub fn new(reqs: Vec<ServeRequest>) -> TraceSource {
+        for w in reqs.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s, "trace requests must be time-ordered");
+        }
+        TraceSource { reqs, idx: 0 }
+    }
+
+    pub fn from_text(text: &str) -> Result<TraceSource, String> {
+        Ok(TraceSource::new(super::replay::parse_trace(text)?))
+    }
+
+    pub fn from_path(path: &str) -> Result<TraceSource, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_text(&text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+}
+
+impl TrafficSource for TraceSource {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn peek(&self) -> Option<f64> {
+        self.reqs.get(self.idx).map(|r| r.t_s)
+    }
+
+    fn arrivals_until(&mut self, now: f64) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        while let Some(r) = self.reqs.get(self.idx) {
+            if r.t_s > now {
+                break;
+            }
+            out.push(r.clone());
+            self.idx += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_source_rate_and_order() {
+        let mut src = PoissonSource::new(2.0, 50, 1000, [1.0, 1.0, 1.0], 11);
+        let reqs = src.arrivals_until(100.0);
+        // E[#arrivals in 100 s at 2/s] = 200, σ ≈ 14.
+        assert!((150..260).contains(&reqs.len()), "got {}", reqs.len());
+        for w in reqs.windows(2) {
+            assert!(w[0].t_s < w[1].t_s);
+        }
+        // All three tenants appear under uniform weights.
+        for t in TenantClass::ALL {
+            assert!(reqs.iter().any(|r| r.tenant == t), "{} missing", t.name());
+        }
+    }
+
+    #[test]
+    fn poisson_source_is_deterministic() {
+        let a: Vec<_> = PoissonSource::new(3.0, 20, 500, [1.0, 2.0, 1.0], 5)
+            .arrivals_until(50.0);
+        let b: Vec<_> = PoissonSource::new(3.0, 20, 500, [1.0, 2.0, 1.0], 5)
+            .arrivals_until(50.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.t_s, y.t_s);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.images, y.images);
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson_at_equal_mean_rate() {
+        // MMPP with rate 8 on / 0 off and equal dwell means ⇒ mean rate 4.
+        let mut mmpp = MmppSource::new(8.0, 0.0, 5.0, 5.0, 50, 500, [1.0, 1.0, 1.0], 21);
+        let mut pois = PoissonSource::new(4.0, 50, 500, [1.0, 1.0, 1.0], 21);
+        let horizon = 2000.0;
+        let m = mmpp.arrivals_until(horizon);
+        let p = pois.arrivals_until(horizon);
+        // Comparable totals…
+        assert!((m.len() as f64) > 0.5 * p.len() as f64, "{} vs {}", m.len(), p.len());
+        // …but a much higher per-second count variance for the MMPP.
+        let var = |reqs: &[ServeRequest]| {
+            let mut counts = vec![0.0f64; horizon as usize];
+            for r in reqs {
+                let b = (r.t_s as usize).min(counts.len() - 1);
+                counts[b] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+            counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / counts.len() as f64
+        };
+        assert!(
+            var(&m) > 1.5 * var(&p),
+            "MMPP variance {} should exceed Poisson {}",
+            var(&m),
+            var(&p)
+        );
+    }
+
+    #[test]
+    fn mmpp_off_state_produces_gaps() {
+        let mut src = MmppSource::new(20.0, 0.0, 1.0, 10.0, 20, 500, [1.0, 1.0, 1.0], 3);
+        let reqs = src.arrivals_until(500.0);
+        assert!(!reqs.is_empty());
+        let max_gap = reqs
+            .windows(2)
+            .map(|w| w[1].t_s - w[0].t_s)
+            .fold(0.0f64, f64::max);
+        assert!(max_gap > 3.0, "expected off-state silence, max gap {max_gap}");
+    }
+
+    #[test]
+    fn trace_source_replays_in_order_and_drains() {
+        let reqs = vec![
+            ServeRequest {
+                t_s: 0.5,
+                tenant: TenantClass::Exec,
+                model: crate::workload::DnnModel::ResNet18,
+                images: 100,
+            },
+            ServeRequest {
+                t_s: 1.5,
+                tenant: TenantClass::Energy,
+                model: crate::workload::DnnModel::AlexNet,
+                images: 200,
+            },
+        ];
+        let mut src = TraceSource::new(reqs);
+        assert_eq!(src.len(), 2);
+        assert_eq!(src.peek(), Some(0.5));
+        let first = src.arrivals_until(1.0);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].images, 100);
+        assert_eq!(src.peek(), Some(1.5));
+        let rest = src.arrivals_until(10.0);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(src.peek(), None);
+    }
+}

@@ -1,0 +1,118 @@
+//! Online serving subsystem: a long-running, externally-driven service
+//! loop around the batch [`crate::sim::Simulator`] core.
+//!
+//! THERMOS is pitched as a *runtime* scheduler, but the batch simulator
+//! only exercises it through fixed-window runs with an internal Poisson
+//! source. This module turns the engine into a service:
+//!
+//! * [`ingest`] — pluggable traffic sources: Poisson, bursty MMPP
+//!   (on/off), and deterministic JSONL trace replay.
+//! * [`server`] — multi-tenant admission control: per-preference tenant
+//!   classes (`exec` / `balanced` / `energy`) routed through the single
+//!   MORL policy, bounded per-tenant queues with backpressure, and
+//!   explicit shed/reject accounting (no silent host-stall backlog).
+//! * [`telemetry`] — counters, gauges, and streaming latency/energy
+//!   histograms (p50/p95/p99), emitted as periodic JSON snapshots and a
+//!   final report with a FNV-1a digest.
+//! * [`replay`] — records every offered request (and each mapping
+//!   decision) to a JSONL log that can be re-fed bit-for-bit: same seed →
+//!   identical telemetry digest. The repo's deterministic regression
+//!   harness for the scheduler hot path.
+
+pub mod ingest;
+pub mod replay;
+pub mod server;
+pub mod telemetry;
+
+pub use ingest::{MmppSource, PoissonSource, TraceSource, TrafficSource};
+pub use replay::ReplayWriter;
+pub use server::{ServeConfig, ServeReport, ServeSched, Server, TenantRouter};
+pub use telemetry::{digest64, Histogram, TelemetryHub};
+
+use crate::sched::thermos::{
+    Preference, PREF_BALANCED, PREF_ENERGY, PREF_EXEC_TIME,
+};
+use crate::workload::DnnModel;
+
+/// Tenant service classes: each maps to one runtime preference vector ω
+/// of the single preference-conditioned MORL policy (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantClass {
+    /// Latency-sensitive: ω = [1, 0].
+    Exec = 0,
+    /// Balanced: ω = [0.5, 0.5].
+    Balanced = 1,
+    /// Energy-sensitive: ω = [0, 1].
+    Energy = 2,
+}
+
+impl TenantClass {
+    pub const ALL: [TenantClass; 3] =
+        [TenantClass::Exec, TenantClass::Balanced, TenantClass::Energy];
+
+    pub const COUNT: usize = 3;
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TenantClass::Exec => "exec",
+            TenantClass::Balanced => "balanced",
+            TenantClass::Energy => "energy",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TenantClass> {
+        match s {
+            "exec" | "exec_time" | "time" => Some(TenantClass::Exec),
+            "balanced" => Some(TenantClass::Balanced),
+            "energy" => Some(TenantClass::Energy),
+            _ => None,
+        }
+    }
+
+    /// The preference vector this tenant's jobs are scheduled under.
+    pub fn pref(self) -> Preference {
+        match self {
+            TenantClass::Exec => PREF_EXEC_TIME,
+            TenantClass::Balanced => PREF_BALANCED,
+            TenantClass::Energy => PREF_ENERGY,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One inference request as seen at the service boundary (before it
+/// becomes an engine [`crate::workload::Job`]).
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    /// Offered-arrival time (s).
+    pub t_s: f64,
+    pub tenant: TenantClass,
+    pub model: DnnModel,
+    /// Stream length (frames).
+    pub images: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_names_round_trip() {
+        for t in TenantClass::ALL {
+            assert_eq!(TenantClass::from_name(t.name()), Some(t));
+            assert_eq!(TenantClass::ALL[t.index()], t);
+        }
+        assert_eq!(TenantClass::from_name("nope"), None);
+    }
+
+    #[test]
+    fn tenant_prefs_sum_to_one() {
+        for t in TenantClass::ALL {
+            let p = t.pref();
+            assert!((p[0] + p[1] - 1.0).abs() < 1e-6);
+        }
+    }
+}

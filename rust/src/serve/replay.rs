@@ -1,0 +1,209 @@
+//! Request/decision logging and deterministic replay.
+//!
+//! The log is JSONL: one compact JSON object per line. Two event kinds:
+//!
+//! ```text
+//! {"ev":"req","t_s":1.234,"tenant":"exec","model":"resnet18","images":500}
+//! {"ev":"map","id":12,"model":"resnet18","images":500,"ideal_exec_s":0.42,"load_s":0.01}
+//! ```
+//!
+//! * `req` — every request the source offered (admitted or not), in
+//!   arrival order. Re-feeding these through
+//!   [`super::ingest::TraceSource`] reproduces the exact offered stream.
+//! * `map` — every mapping decision the scheduler committed, with its
+//!   deterministic execution profile; a fingerprint for diffing scheduler
+//!   behavior between runs.
+//!
+//! Lines starting with `#` and blank lines are ignored on parse, and
+//! non-`req` events are skipped, so a recorded log replays as-is.
+
+use super::{ServeRequest, TenantClass};
+use crate::sim::ExecProfile;
+use crate::util::json::Json;
+use crate::workload::{DnnModel, Job};
+use std::io::Write;
+
+enum Sink {
+    File(std::io::BufWriter<std::fs::File>),
+    Mem(Vec<u8>),
+}
+
+/// Writes the JSONL replay log, either to a file or to memory (tests).
+pub struct ReplayWriter {
+    sink: Sink,
+}
+
+impl ReplayWriter {
+    pub fn create(path: &str) -> std::io::Result<ReplayWriter> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let f = std::fs::File::create(path)?;
+        Ok(ReplayWriter { sink: Sink::File(std::io::BufWriter::new(f)) })
+    }
+
+    pub fn in_memory() -> ReplayWriter {
+        ReplayWriter { sink: Sink::Mem(Vec::new()) }
+    }
+
+    fn write_line(&mut self, j: &Json) -> std::io::Result<()> {
+        let line = j.to_string_compact();
+        match &mut self.sink {
+            Sink::File(w) => {
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")
+            }
+            Sink::Mem(buf) => {
+                buf.extend_from_slice(line.as_bytes());
+                buf.push(b'\n');
+                Ok(())
+            }
+        }
+    }
+
+    /// Log one offered request.
+    pub fn request(&mut self, req: &ServeRequest) -> std::io::Result<()> {
+        self.write_line(&Json::obj(vec![
+            ("ev", Json::Str("req".to_string())),
+            ("t_s", Json::Num(req.t_s)),
+            ("tenant", Json::Str(req.tenant.name().to_string())),
+            ("model", Json::Str(req.model.name().to_string())),
+            ("images", Json::Num(req.images as f64)),
+        ]))
+    }
+
+    /// Log one committed mapping decision.
+    pub fn decision(&mut self, job: &Job, profile: &ExecProfile) -> std::io::Result<()> {
+        self.write_line(&Json::obj(vec![
+            ("ev", Json::Str("map".to_string())),
+            ("id", Json::Num(job.id as f64)),
+            ("model", Json::Str(job.dcg.model.name().to_string())),
+            ("images", Json::Num(job.images as f64)),
+            ("ideal_exec_s", Json::Num(profile.ideal_exec_s(job.images))),
+            ("load_s", Json::Num(profile.load_time_s)),
+        ]))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        match &mut self.sink {
+            Sink::File(w) => w.flush(),
+            Sink::Mem(_) => Ok(()),
+        }
+    }
+
+    /// The recorded log, for in-memory writers (`None` for file sinks).
+    pub fn into_string(self) -> Option<String> {
+        match self.sink {
+            Sink::Mem(buf) => Some(String::from_utf8(buf).expect("json is utf-8")),
+            Sink::File(_) => None,
+        }
+    }
+}
+
+/// Parse a JSONL request log into a time-ordered request stream. Skips
+/// blank lines, `#` comments, and non-`req` events.
+pub fn parse_trace(text: &str) -> Result<Vec<ServeRequest>, String> {
+    let mut reqs = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("trace line {}: {e:?}", ln + 1))?;
+        if j.get("ev").as_str() != Some("req") {
+            continue;
+        }
+        let t_s = j
+            .get("t_s")
+            .as_f64()
+            .ok_or_else(|| format!("trace line {}: missing t_s", ln + 1))?;
+        let tenant_name = j
+            .get("tenant")
+            .as_str()
+            .ok_or_else(|| format!("trace line {}: missing tenant", ln + 1))?;
+        let tenant = TenantClass::from_name(tenant_name)
+            .ok_or_else(|| format!("trace line {}: unknown tenant `{tenant_name}`", ln + 1))?;
+        let model_name = j
+            .get("model")
+            .as_str()
+            .ok_or_else(|| format!("trace line {}: missing model", ln + 1))?;
+        let model = DnnModel::from_name(model_name)
+            .ok_or_else(|| format!("trace line {}: unknown model `{model_name}`", ln + 1))?;
+        let images = j
+            .get("images")
+            .as_f64()
+            .ok_or_else(|| format!("trace line {}: missing images", ln + 1))? as u64;
+        if let Some(prev) = reqs.last() {
+            if t_s < prev.t_s {
+                return Err(format!("trace line {}: requests not time-ordered", ln + 1));
+            }
+        }
+        reqs.push(ServeRequest { t_s, tenant, model, images });
+    }
+    Ok(reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_through_writer_and_parser() {
+        let reqs = vec![
+            ServeRequest {
+                t_s: 0.25,
+                tenant: TenantClass::Exec,
+                model: DnnModel::ResNet18,
+                images: 150,
+            },
+            ServeRequest {
+                t_s: 1.75,
+                tenant: TenantClass::Balanced,
+                model: DnnModel::InceptionV3,
+                images: 4000,
+            },
+        ];
+        let mut w = ReplayWriter::in_memory();
+        for r in &reqs {
+            w.request(r).unwrap();
+        }
+        let text = w.into_string().unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let back = parse_trace(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.t_s, b.t_s);
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.images, b.images);
+        }
+    }
+
+    #[test]
+    fn parser_skips_comments_and_map_events() {
+        let text = "\
+# recorded by thermos serve
+{\"ev\":\"req\",\"t_s\":1,\"tenant\":\"energy\",\"model\":\"alexnet\",\"images\":100}
+
+{\"ev\":\"map\",\"id\":0,\"model\":\"alexnet\",\"images\":100,\"ideal_exec_s\":0.1,\"load_s\":0.01}
+{\"ev\":\"req\",\"t_s\":2,\"tenant\":\"exec\",\"model\":\"resnet50\",\"images\":300}
+";
+        let reqs = parse_trace(text).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].tenant, TenantClass::Energy);
+        assert_eq!(reqs[1].model, DnnModel::ResNet50);
+    }
+
+    #[test]
+    fn parser_rejects_bad_input() {
+        assert!(parse_trace("{\"ev\":\"req\"}").is_err(), "missing fields");
+        assert!(parse_trace("not json").is_err());
+        let unordered = "\
+{\"ev\":\"req\",\"t_s\":2,\"tenant\":\"exec\",\"model\":\"alexnet\",\"images\":100}
+{\"ev\":\"req\",\"t_s\":1,\"tenant\":\"exec\",\"model\":\"alexnet\",\"images\":100}
+";
+        assert!(parse_trace(unordered).is_err(), "unordered trace must fail");
+    }
+}

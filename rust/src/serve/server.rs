@@ -1,0 +1,432 @@
+//! The serving loop: multi-tenant admission control in front of the
+//! open-loop simulation engine.
+//!
+//! Requests flow `source → per-tenant bounded queues → weighted-fair
+//! dispatch → engine FIFO → scheduler → PIM execution`. Backpressure is
+//! explicit at every stage: a full tenant queue *rejects* new requests, a
+//! request that waits past its dispatch deadline is *shed*, and the
+//! engine FIFO is only ever filled up to its free room — the batch
+//! engine's silent host-stall backlog never grows in serve mode.
+
+use super::ingest::TrafficSource;
+use super::replay::ReplayWriter;
+use super::telemetry::{digest64, TelemetryHub};
+use super::{ServeRequest, TenantClass};
+use crate::arch::Arch;
+use crate::sched::policy::PolicyEval;
+use crate::sched::thermos::{Preference, ThermosSched};
+use crate::sched::{BigLittleSched, RelmasSched, Scheduler, SimbaSched, SysSnapshot};
+use crate::sim::{Mapping, SimConfig, Simulator};
+use crate::util::json::Json;
+use crate::workload::{Job, ModelZoo};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// A scheduler usable by the server. The single extra hook lets
+/// preference-aware schedulers learn each job's tenant preference at
+/// dispatch time; baselines ignore it.
+pub trait ServeSched: Scheduler {
+    fn register_pref(&mut self, _job_id: u64, _pref: Preference) {}
+}
+
+impl ServeSched for SimbaSched {}
+impl ServeSched for BigLittleSched {}
+impl<P: PolicyEval> ServeSched for RelmasSched<P> {}
+/// A plain `ThermosSched` serves every tenant under its fixed ω.
+impl<P: PolicyEval> ServeSched for ThermosSched<P> {}
+
+/// Routes each job through the single preference-conditioned MORL policy
+/// with the ω of the job's tenant class — one set of weights serving all
+/// three service classes (§4.1's runtime-preference knob, applied
+/// per-request).
+pub struct TenantRouter<P: PolicyEval> {
+    inner: ThermosSched<P>,
+    prefs: std::collections::HashMap<u64, Preference>,
+}
+
+impl<P: PolicyEval> TenantRouter<P> {
+    pub fn new(inner: ThermosSched<P>) -> TenantRouter<P> {
+        TenantRouter { inner, prefs: std::collections::HashMap::new() }
+    }
+}
+
+impl<P: PolicyEval> Scheduler for TenantRouter<P> {
+    fn name(&self) -> &'static str {
+        "thermos_mt"
+    }
+
+    fn schedule(&mut self, job: &Job, snap: &SysSnapshot) -> Option<Mapping> {
+        if let Some(&pref) = self.prefs.get(&job.id) {
+            self.inner.omega = pref;
+        }
+        self.inner.schedule(job, snap)
+    }
+
+    fn on_job_completed(&mut self, job_id: u64) {
+        self.prefs.remove(&job_id);
+        self.inner.on_job_completed(job_id);
+    }
+}
+
+impl<P: PolicyEval> ServeSched for TenantRouter<P> {
+    fn register_pref(&mut self, job_id: u64, pref: Preference) {
+        self.prefs.insert(job_id, pref);
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Service horizon (s). The loop also ends early once a finite source
+    /// drains and all work completes.
+    pub duration_s: f64,
+    /// Bound of each tenant queue; arrivals beyond it are rejected.
+    pub tenant_queue_cap: usize,
+    /// Shed a queued request once it has waited this long without being
+    /// dispatched (0 disables shedding).
+    pub max_wait_s: f64,
+    /// Emit a telemetry snapshot every this many seconds (0 disables).
+    pub snapshot_every_s: f64,
+    /// Engine knobs (FIFO depth, thermal constraint, seed, …).
+    /// `admit_rate`, `warmup_s`, and `mix_jobs` are unused in serve mode —
+    /// the traffic source owns the workload.
+    pub sim: SimConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            duration_s: 120.0,
+            tenant_queue_cap: 64,
+            max_wait_s: 30.0,
+            snapshot_every_s: 10.0,
+            sim: SimConfig { warmup_s: 0.0, ..SimConfig::default() },
+        }
+    }
+}
+
+/// Final output of a server run: the report JSON, its FNV-1a digest (the
+/// regression fingerprint), and any periodic snapshots.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub json: Json,
+    pub digest: String,
+    pub snapshots: Vec<Json>,
+}
+
+struct Pending {
+    id: u64,
+    req: ServeRequest,
+}
+
+/// The online scheduling service.
+pub struct Server<'a, S: ServeSched> {
+    arch: &'a Arch,
+    sim: Simulator<'a, S>,
+    source: Box<dyn TrafficSource>,
+    cfg: ServeConfig,
+    zoo: ModelZoo,
+    queues: [VecDeque<Pending>; TenantClass::COUNT],
+    hub: Rc<RefCell<TelemetryHub>>,
+    replay: Option<Rc<RefCell<ReplayWriter>>>,
+    snapshots: Vec<Json>,
+    next_snapshot_s: f64,
+    next_id: u64,
+    /// Round-robin cursor for weighted-fair dispatch.
+    rr: usize,
+    cluster_max_temp_k: Vec<f64>,
+    /// Live-telemetry hook: called with each periodic snapshot.
+    pub on_snapshot: Option<Box<dyn FnMut(&Json) + 'a>>,
+}
+
+impl<'a, S: ServeSched> Server<'a, S> {
+    pub fn new(
+        arch: &'a Arch,
+        sched: S,
+        source: Box<dyn TrafficSource>,
+        cfg: ServeConfig,
+    ) -> Server<'a, S> {
+        let mut sim = Simulator::open_loop(arch, sched, cfg.sim.clone());
+        let hub = Rc::new(RefCell::new(TelemetryHub::new()));
+        let hub_cb = hub.clone();
+        sim.on_completed = Some(Box::new(move |stats| {
+            hub_cb.borrow_mut().on_completed(stats);
+        }));
+        let n_clusters = arch.clusters.len();
+        let snapshot_every = cfg.snapshot_every_s;
+        Server {
+            arch,
+            sim,
+            source,
+            cfg,
+            zoo: ModelZoo::new(),
+            queues: Default::default(),
+            hub,
+            replay: None,
+            snapshots: Vec::new(),
+            next_snapshot_s: snapshot_every,
+            next_id: 0,
+            rr: 0,
+            cluster_max_temp_k: vec![arch.t_ambient; n_clusters],
+            on_snapshot: None,
+        }
+    }
+
+    /// Record every offered request and every mapping decision to `w`.
+    pub fn with_replay(mut self, w: Rc<RefCell<ReplayWriter>>) -> Self {
+        let w_cb = w.clone();
+        self.sim.on_mapped = Some(Box::new(move |job, profile| {
+            let _ = w_cb.borrow_mut().decision(job, profile);
+        }));
+        self.replay = Some(w);
+        self
+    }
+
+    fn offer(&mut self, req: ServeRequest) {
+        if let Some(w) = &self.replay {
+            let _ = w.borrow_mut().request(&req);
+        }
+        let ti = req.tenant.index();
+        let mut hub = self.hub.borrow_mut();
+        hub.on_offered(req.tenant);
+        if self.queues[ti].len() >= self.cfg.tenant_queue_cap {
+            hub.on_reject(req.tenant);
+            return;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        hub.on_admit(req.tenant, id);
+        drop(hub);
+        self.queues[ti].push_back(Pending { id, req });
+    }
+
+    fn dispatch(&mut self, now: f64) {
+        // Shed queue heads that waited past the dispatch deadline.
+        if self.cfg.max_wait_s > 0.0 {
+            for q in self.queues.iter_mut() {
+                while let Some(p) = q.front() {
+                    if now - p.req.t_s > self.cfg.max_wait_s {
+                        let p = q.pop_front().unwrap();
+                        self.hub.borrow_mut().on_shed(p.req.tenant, p.id);
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        // Round-robin over tenants into the engine FIFO, bounded by its
+        // free room — explicit backpressure instead of a hidden backlog.
+        let mut room = self.sim.queue_room();
+        while room > 0 {
+            let mut dispatched = false;
+            for k in 0..TenantClass::COUNT {
+                let ti = (self.rr + k) % TenantClass::COUNT;
+                if let Some(p) = self.queues[ti].pop_front() {
+                    self.rr = (ti + 1) % TenantClass::COUNT;
+                    self.sim.sched.register_pref(p.id, p.req.tenant.pref());
+                    self.sim.inject_job(Job {
+                        id: p.id,
+                        dcg: self.zoo.dcg(p.req.model),
+                        images: p.req.images,
+                        arrival_s: p.req.t_s,
+                    });
+                    room -= 1;
+                    dispatched = true;
+                    break;
+                }
+            }
+            if !dispatched {
+                break;
+            }
+        }
+    }
+
+    fn service_depth(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    fn post_step(&mut self) {
+        self.hub.borrow_mut().sample_depths(self.service_depth(), self.sim.queue_len());
+        for (c, &t) in self.sim.temps().iter().enumerate() {
+            let cl = self.arch.chiplets[c].pim as usize;
+            self.cluster_max_temp_k[cl] = self.cluster_max_temp_k[cl].max(t);
+        }
+        if self.cfg.snapshot_every_s > 0.0 && self.sim.now() + 1e-9 >= self.next_snapshot_s {
+            let snap = self.snapshot_json();
+            if let Some(cb) = self.on_snapshot.as_mut() {
+                cb(&snap);
+            }
+            self.snapshots.push(snap);
+            self.next_snapshot_s += self.cfg.snapshot_every_s;
+        }
+    }
+
+    fn snapshot_json(&self) -> Json {
+        let hub = self.hub.borrow();
+        let (offered, admitted, rejected, shed, completed) = hub.totals();
+        Json::obj(vec![
+            ("t_s", Json::Num(self.sim.now())),
+            ("offered", Json::Num(offered as f64)),
+            ("admitted", Json::Num(admitted as f64)),
+            ("rejected", Json::Num(rejected as f64)),
+            ("shed", Json::Num(shed as f64)),
+            ("completed", Json::Num(completed as f64)),
+            ("queue_depth", Json::Num(self.service_depth() as f64)),
+            ("fifo_depth", Json::Num(self.sim.queue_len() as f64)),
+            ("active_jobs", Json::Num(self.sim.active_count() as f64)),
+            ("throttle_events", Json::Num(self.sim.throttle_events() as f64)),
+            ("max_temp_k", Json::Num(self.sim.max_temp_k())),
+            ("p50_e2e_s", Json::Num(hub.e2e_all.quantile(0.50))),
+            ("p99_e2e_s", Json::Num(hub.e2e_all.quantile(0.99))),
+        ])
+    }
+
+    /// Drive the service to its horizon (or until a finite source drains
+    /// and all admitted work completes) and produce the final report.
+    pub fn run(mut self) -> ServeReport {
+        let dt = self.sim.dt_s();
+        let steps = (self.cfg.duration_s / dt).ceil() as usize;
+        for _ in 0..steps {
+            let step_end = self.sim.now() + dt;
+            for req in self.source.arrivals_until(step_end) {
+                self.offer(req);
+            }
+            self.dispatch(step_end);
+            self.sim.step();
+            self.post_step();
+            if self.source.peek().is_none()
+                && self.service_depth() == 0
+                && self.sim.is_idle()
+            {
+                break;
+            }
+        }
+        self.finish()
+    }
+
+    fn finish(mut self) -> ServeReport {
+        if let Some(w) = &self.replay {
+            let _ = w.borrow_mut().flush();
+        }
+        let (json, digest) = {
+            let hub = self.hub.borrow();
+            let (offered, admitted, rejected, shed, completed) = hub.totals();
+            let now = self.sim.now();
+            let json = Json::obj(vec![
+                ("scheduler", Json::Str(self.sim.sched.name().to_string())),
+                ("source", Json::Str(self.source.name().to_string())),
+                ("seed", Json::Num(self.cfg.sim.seed as f64)),
+                ("duration_s", Json::Num(now)),
+                ("offered", Json::Num(offered as f64)),
+                ("admitted", Json::Num(admitted as f64)),
+                ("rejected", Json::Num(rejected as f64)),
+                ("shed", Json::Num(shed as f64)),
+                ("completed", Json::Num(completed as f64)),
+                ("throughput_jobs_s", Json::Num(completed as f64 / now.max(1e-9))),
+                ("latency_e2e_s", hub.e2e_all.to_json()),
+                ("latency_exec_s", hub.exec_all.to_json()),
+                ("energy_j", hub.energy_all.to_json()),
+                ("queue_depth_max", Json::Num(hub.queue_depth_max as f64)),
+                ("fifo_depth_max", Json::Num(hub.fifo_depth_max as f64)),
+                ("host_stalls", Json::Num(self.sim.host_stalls() as f64)),
+                ("throttle_events", Json::Num(self.sim.throttle_events() as f64)),
+                ("max_temp_k", Json::Num(self.sim.max_temp_k())),
+                ("cluster_max_temp_k", Json::arr_f64(&self.cluster_max_temp_k)),
+                ("system_energy_j", Json::Num(self.sim.system_energy_j())),
+                ("tenants", hub.tenants_json()),
+            ]);
+            let digest = digest64(&json.to_string_compact());
+            (json, digest)
+        };
+        ServeReport { json, digest, snapshots: std::mem::take(&mut self.snapshots) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+    use crate::serve::ingest::PoissonSource;
+
+    fn quick_serve_cfg(seed: u64) -> ServeConfig {
+        ServeConfig {
+            duration_s: 40.0,
+            tenant_queue_cap: 16,
+            max_wait_s: 20.0,
+            snapshot_every_s: 10.0,
+            sim: SimConfig {
+                warmup_s: 0.0,
+                max_images: 500,
+                seed,
+                ..SimConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn server_completes_jobs_and_reports() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let source = Box::new(PoissonSource::new(1.0, 50, 500, [1.0, 1.0, 1.0], 17));
+        let server = Server::new(&arch, sched, source, quick_serve_cfg(17));
+        let report = server.run();
+        let completed = report.json.get("completed").as_f64().unwrap();
+        assert!(completed > 0.0, "no jobs completed");
+        assert!(!report.snapshots.is_empty(), "expected periodic snapshots");
+        // Required report fields exist.
+        for key in [
+            "latency_e2e_s",
+            "rejected",
+            "shed",
+            "throttle_events",
+            "cluster_max_temp_k",
+            "tenants",
+        ] {
+            assert!(!matches!(report.json.get(key), Json::Null), "missing {key}");
+        }
+        let p99 = report.json.get("latency_e2e_s").get("p99").as_f64().unwrap();
+        let p50 = report.json.get("latency_e2e_s").get("p50").as_f64().unwrap();
+        assert!(p99 >= p50 && p50 > 0.0);
+    }
+
+    #[test]
+    fn overload_rejects_or_sheds_instead_of_stalling() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        // Far beyond service capacity: ~20 jobs/s with a small queue cap.
+        let source = Box::new(PoissonSource::new(20.0, 50, 500, [1.0, 1.0, 1.0], 23));
+        let mut cfg = quick_serve_cfg(23);
+        cfg.tenant_queue_cap = 4;
+        cfg.max_wait_s = 5.0;
+        let report = Server::new(&arch, sched, source, cfg).run();
+        let rejected = report.json.get("rejected").as_f64().unwrap();
+        let shed = report.json.get("shed").as_f64().unwrap();
+        assert!(rejected + shed > 0.0, "overload must surface as rejects/sheds");
+        // The engine's silent backlog must stay silent — serve never
+        // overfills the FIFO.
+        assert_eq!(report.json.get("host_stalls").as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn tenant_router_uses_per_tenant_preferences() {
+        use crate::sched::policy::NativeDdt;
+        use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+        use crate::util::rng::Rng;
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let zoo = ModelZoo::new();
+        let encoder = StateEncoder::new(&arch, &zoo, 500);
+        let mut rng = Rng::new(9);
+        let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+        let inner = ThermosSched::new(arch.clone(), encoder, ddt, [0.5, 0.5]);
+        let sched = TenantRouter::new(inner);
+        let source = Box::new(PoissonSource::new(1.0, 50, 500, [1.0, 1.0, 1.0], 31));
+        let report = Server::new(&arch, sched, source, quick_serve_cfg(31)).run();
+        assert_eq!(report.json.get("scheduler").as_str().unwrap(), "thermos_mt");
+        // All three tenant classes completed work.
+        let tenants = report.json.get("tenants");
+        for t in TenantClass::ALL {
+            let done = tenants.get(t.name()).get("completed").as_f64().unwrap();
+            assert!(done > 0.0, "tenant {} completed nothing", t.name());
+        }
+    }
+}

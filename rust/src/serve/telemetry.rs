@@ -1,0 +1,327 @@
+//! Serving telemetry: counters, gauges, and streaming histograms.
+//!
+//! Everything here is deterministic given the same event stream — reports
+//! are built from fixed-order arrays (never from hash-map iteration), and
+//! the final JSON is digested with FNV-1a so two identical runs can be
+//! compared byte-for-byte.
+
+use super::TenantClass;
+use crate::sim::JobStats;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Streaming log-bucketed histogram for positive values (latency seconds,
+/// energy joules). Constant memory, O(1) insert, ~7.5% quantile
+/// resolution over 8 decades — plenty for p50/p95/p99 reporting.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Lowest bucket edge; values below land in the underflow bucket.
+const LO: f64 = 1e-4;
+/// Highest bucket edge; values above land in the overflow bucket.
+const HI: f64 = 1e4;
+/// Log-spaced buckets between LO and HI.
+const NB: usize = 256;
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            // [underflow, NB log buckets, overflow]
+            counts: vec![0; NB + 2],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(x: f64) -> usize {
+        if x.is_nan() || x < LO {
+            return 0; // underflow (NaN lands here defensively)
+        }
+        if x >= HI {
+            return NB + 1;
+        }
+        let step = (HI / LO).ln() / NB as f64;
+        let i = ((x / LO).ln() / step).floor() as usize;
+        (i + 1).min(NB)
+    }
+
+    /// Upper edge of bucket `i` (1-based log buckets).
+    fn upper_edge(i: usize) -> f64 {
+        let step = (HI / LO).ln() / NB as f64;
+        LO * (step * i as f64).exp()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket(x)] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile (q in [0, 1]): the upper edge of the bucket
+    /// containing the target rank, clamped to the observed min/max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let edge = if i == 0 {
+                    LO
+                } else if i == NB + 1 {
+                    self.max
+                } else {
+                    Self::upper_edge(i)
+                };
+                return edge.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.total as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("min", Json::Num(if self.total == 0 { 0.0 } else { self.min })),
+            ("max", Json::Num(if self.total == 0 { 0.0 } else { self.max })),
+            ("p50", Json::Num(self.quantile(0.50))),
+            ("p95", Json::Num(self.quantile(0.95))),
+            ("p99", Json::Num(self.quantile(0.99))),
+        ])
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-tenant serving counters and distributions.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    /// Requests the source offered for this tenant.
+    pub offered: u64,
+    /// Admitted into the tenant queue.
+    pub admitted: u64,
+    /// Rejected at admission (tenant queue full — backpressure).
+    pub rejected: u64,
+    /// Admitted but dropped before dispatch (waited past the deadline).
+    pub shed: u64,
+    pub completed: u64,
+    pub images_done: u64,
+    pub e2e_s: Histogram,
+    pub exec_s: Histogram,
+    pub energy_j: Histogram,
+}
+
+/// The telemetry hub: one per server run. Shared with the engine's
+/// completion callback via `Rc<RefCell<…>>`.
+#[derive(Debug, Default)]
+pub struct TelemetryHub {
+    pub tenants: [TenantStats; TenantClass::COUNT],
+    pub e2e_all: Histogram,
+    pub exec_all: Histogram,
+    pub energy_all: Histogram,
+    /// Peak service-side queue depth (sum over tenant queues).
+    pub queue_depth_max: usize,
+    /// Peak engine FIFO depth.
+    pub fifo_depth_max: usize,
+    /// Lookup only — never iterated, so determinism is preserved.
+    tenant_of: HashMap<u64, usize>,
+}
+
+impl TelemetryHub {
+    pub fn new() -> TelemetryHub {
+        TelemetryHub::default()
+    }
+
+    pub fn on_offered(&mut self, tenant: TenantClass) {
+        self.tenants[tenant.index()].offered += 1;
+    }
+
+    pub fn on_admit(&mut self, tenant: TenantClass, job_id: u64) {
+        self.tenants[tenant.index()].admitted += 1;
+        self.tenant_of.insert(job_id, tenant.index());
+    }
+
+    pub fn on_reject(&mut self, tenant: TenantClass) {
+        self.tenants[tenant.index()].rejected += 1;
+    }
+
+    pub fn on_shed(&mut self, tenant: TenantClass, job_id: u64) {
+        self.tenants[tenant.index()].shed += 1;
+        self.tenant_of.remove(&job_id);
+    }
+
+    pub fn on_completed(&mut self, stats: &JobStats) {
+        self.e2e_all.record(stats.e2e_s);
+        self.exec_all.record(stats.exec_s);
+        self.energy_all.record(stats.energy_j);
+        if let Some(ti) = self.tenant_of.remove(&stats.id) {
+            let t = &mut self.tenants[ti];
+            t.completed += 1;
+            t.images_done += stats.images;
+            t.e2e_s.record(stats.e2e_s);
+            t.exec_s.record(stats.exec_s);
+            t.energy_j.record(stats.energy_j);
+        }
+    }
+
+    pub fn sample_depths(&mut self, service_depth: usize, fifo_depth: usize) {
+        self.queue_depth_max = self.queue_depth_max.max(service_depth);
+        self.fifo_depth_max = self.fifo_depth_max.max(fifo_depth);
+    }
+
+    pub fn totals(&self) -> (u64, u64, u64, u64, u64) {
+        let mut o = 0;
+        let mut a = 0;
+        let mut r = 0;
+        let mut s = 0;
+        let mut c = 0;
+        for t in &self.tenants {
+            o += t.offered;
+            a += t.admitted;
+            r += t.rejected;
+            s += t.shed;
+            c += t.completed;
+        }
+        (o, a, r, s, c)
+    }
+
+    /// Per-tenant JSON, in fixed `TenantClass::ALL` order.
+    pub fn tenants_json(&self) -> Json {
+        Json::obj(
+            TenantClass::ALL
+                .iter()
+                .map(|&tc| {
+                    let t = &self.tenants[tc.index()];
+                    (
+                        tc.name(),
+                        Json::obj(vec![
+                            ("offered", Json::Num(t.offered as f64)),
+                            ("admitted", Json::Num(t.admitted as f64)),
+                            ("rejected", Json::Num(t.rejected as f64)),
+                            ("shed", Json::Num(t.shed as f64)),
+                            ("completed", Json::Num(t.completed as f64)),
+                            ("images_done", Json::Num(t.images_done as f64)),
+                            ("latency_e2e_s", t.e2e_s.to_json()),
+                            ("latency_exec_s", t.exec_s.to_json()),
+                            ("energy_j", t.energy_j.to_json()),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// FNV-1a 64-bit digest of a string, rendered as 16 hex chars. Used to
+/// compare two runs' final telemetry byte-for-byte.
+pub fn digest64(s: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_the_data() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // 1 ms … 1 s uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!((0.45..0.60).contains(&p50), "p50 {p50}");
+        assert!((0.88..1.05).contains(&p95), "p95 {p95}");
+        assert!((0.93..1.05).contains(&p99), "p99 {p99}");
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_handles_extremes_and_empty() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(1e-9); // underflow
+        h.record(1e9); // overflow
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+        assert_eq!(h.quantile(1.0), 1e9);
+    }
+
+    #[test]
+    fn hub_attributes_completions_to_tenants() {
+        let mut hub = TelemetryHub::new();
+        hub.on_offered(TenantClass::Exec);
+        hub.on_admit(TenantClass::Exec, 1);
+        hub.on_offered(TenantClass::Energy);
+        hub.on_admit(TenantClass::Energy, 2);
+        hub.on_offered(TenantClass::Balanced);
+        hub.on_reject(TenantClass::Balanced);
+        let stats = JobStats {
+            id: 1,
+            model: crate::workload::DnnModel::ResNet18,
+            images: 100,
+            arrival_s: 0.0,
+            mapped_s: 0.1,
+            completed_s: 0.6,
+            exec_s: 0.5,
+            e2e_s: 0.6,
+            energy_j: 2.0,
+            ideal_exec_s: 0.5,
+            ideal_energy_j: 1.9,
+            stall_s: 0.0,
+            stall_leak_j: 0.0,
+        };
+        hub.on_completed(&stats);
+        assert_eq!(hub.tenants[0].completed, 1);
+        assert_eq!(hub.tenants[2].completed, 0);
+        assert_eq!(hub.tenants[1].rejected, 1);
+        let (offered, admitted, rejected, shed, completed) = hub.totals();
+        assert_eq!((offered, admitted, rejected, shed, completed), (3, 2, 1, 0, 1));
+        assert_eq!(hub.e2e_all.count(), 1);
+    }
+
+    #[test]
+    fn digest_is_stable_and_input_sensitive() {
+        let a = digest64("hello");
+        assert_eq!(a, digest64("hello"));
+        assert_ne!(a, digest64("hellp"));
+        assert_eq!(a.len(), 16);
+    }
+}

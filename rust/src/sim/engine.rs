@@ -73,6 +73,20 @@ impl SimConfig {
     }
 }
 
+/// Eq. 2 throttle latch with hysteresis: a chiplet throttles when its
+/// temperature crosses `t_max`, stays throttled inside the hysteresis band,
+/// and releases only below `t_max − hysteresis_k`. Returns the new latch
+/// state and whether this update produced a *new* throttle event.
+pub fn throttle_latch(latched: bool, t: f64, t_max: f64, hysteresis_k: f64) -> (bool, bool) {
+    if !latched && t > t_max {
+        (true, true)
+    } else if latched && t < t_max - hysteresis_k {
+        (false, false)
+    } else {
+        (latched, false)
+    }
+}
+
 /// Execution phases of a mapped job.
 struct ActiveJob {
     job: Job,
@@ -104,7 +118,9 @@ pub struct Simulator<'a, S: Scheduler> {
     temps: Vec<f64>,
     queue: JobQueue,
     backlog: std::collections::VecDeque<Job>,
-    traffic: TrafficGen,
+    /// Internal Poisson source; `None` when the simulator is driven
+    /// open-loop by an external ingest source via [`Simulator::inject_job`].
+    traffic: Option<TrafficGen>,
     active: Vec<ActiveJob>,
     now: f64,
     completed: Vec<JobStats>,
@@ -125,6 +141,22 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         let zoo = ModelZoo::new();
         let mix = WorkloadMix::random(&mut rng, cfg.mix_jobs, cfg.max_images);
         let traffic = TrafficGen::new(mix, zoo, cfg.admit_rate, rng.split());
+        Self::build(arch, sched, cfg, Some(traffic))
+    }
+
+    /// An open-loop simulator: no internal traffic source — arrivals are
+    /// injected per step by the caller (the `serve` subsystem) through
+    /// [`Simulator::inject_job`].
+    pub fn open_loop(arch: &'a Arch, sched: S, cfg: SimConfig) -> Simulator<'a, S> {
+        Self::build(arch, sched, cfg, None)
+    }
+
+    fn build(
+        arch: &'a Arch,
+        sched: S,
+        cfg: SimConfig,
+        traffic: Option<TrafficGen>,
+    ) -> Simulator<'a, S> {
         let thermal = DssModel::from_arch(arch);
         Simulator {
             arch,
@@ -159,6 +191,62 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         self.now
     }
 
+    /// Thermal sampling interval — the step size of [`Simulator::step`].
+    pub fn dt_s(&self) -> f64 {
+        self.thermal.params.dt_s
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Remaining FIFO slots an external driver can fill without pushing
+    /// jobs into the (silent) backlog.
+    pub fn queue_room(&self) -> usize {
+        self.cfg.queue_capacity.saturating_sub(self.queue.len() + self.backlog.len())
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// No queued, backlogged, or running work.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.backlog.is_empty() && self.active.is_empty()
+    }
+
+    pub fn temps(&self) -> &[f64] {
+        &self.temps
+    }
+
+    pub fn throttled(&self) -> &[bool] {
+        &self.throttled
+    }
+
+    pub fn throttle_events(&self) -> u64 {
+        self.throttle_events
+    }
+
+    pub fn max_temp_k(&self) -> f64 {
+        self.max_temp_k
+    }
+
+    pub fn system_energy_j(&self) -> f64 {
+        self.system_energy_j
+    }
+
+    pub fn host_stalls(&self) -> u64 {
+        self.queue.host_stalls
+    }
+
+    /// Inject an externally-generated job (open-loop mode). The job lands
+    /// in the backlog and is admitted to the FIFO on the next step; callers
+    /// that want explicit backpressure should check [`Simulator::queue_room`]
+    /// first.
+    pub fn inject_job(&mut self, job: Job) {
+        self.backlog.push_back(job);
+    }
+
     fn snapshot(&self) -> SysSnapshot {
         SysSnapshot {
             free_bits: self.free_bits.clone(),
@@ -169,8 +257,10 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
 
     /// Admit host arrivals; host stalls (backlog) when the FIFO is full.
     fn admit(&mut self) {
-        for job in self.traffic.arrivals_until(self.now) {
-            self.backlog.push_back(job);
+        if let Some(traffic) = self.traffic.as_mut() {
+            for job in traffic.arrivals_until(self.now) {
+                self.backlog.push_back(job);
+            }
         }
         while let Some(job) = self.backlog.pop_front() {
             match self.queue.push(job) {
@@ -316,11 +406,12 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         // Complete finished jobs (reverse order keeps indices valid).
         for &ai in finished.iter().rev() {
             let a = self.active.swap_remove(ai);
-            // Exact completion time within the step: remaining run time was
-            // consumed somewhere inside [now, now+dt]; approximate with the
-            // step end minus the unused remainder (sub-dt accuracy is
-            // dominated by dt = 100 ms anyway).
-            let completed_s = self.now + dt;
+            // Exact sub-step completion time: the job occupied the system
+            // for exactly its weight-load time, its deterministic run time,
+            // and whatever throttle stalls it accumulated — stamping the
+            // step boundary instead would bias latency percentiles by up
+            // to dt (100 ms).
+            let completed_s = a.mapped_s + a.profile.load_time_s + a.run_total_s + a.stall_s;
             for (c, &b) in a.bits_per_chiplet.iter().enumerate() {
                 self.free_bits[c] += b;
             }
@@ -359,11 +450,11 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
                 self.violation_chiplet_s += dt;
             }
             if self.cfg.thermal_constraint {
-                if !self.throttled[c] && t > tmax {
-                    self.throttled[c] = true;
+                let (latched, new_event) =
+                    throttle_latch(self.throttled[c], t, tmax, self.cfg.hysteresis_k);
+                self.throttled[c] = latched;
+                if new_event {
                     self.throttle_events += 1;
-                } else if self.throttled[c] && t < tmax - self.cfg.hysteresis_k {
-                    self.throttled[c] = false;
                 }
             }
         }
@@ -398,10 +489,8 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
     pub fn run_drain(mut self, max_s: f64) -> (SimResult, S) {
         loop {
             self.step();
-            let drained = self.traffic.peek_arrival().is_none()
-                && self.queue.is_empty()
-                && self.backlog.is_empty()
-                && self.active.is_empty();
+            let drained =
+                self.traffic.as_ref().and_then(|t| t.peek_arrival()).is_none() && self.is_idle();
             if drained || self.now >= max_s {
                 break;
             }
@@ -419,10 +508,12 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         (result, self.sched)
     }
 
-    /// Cap the traffic stream at `n` jobs (training episodes).
+    /// Cap the traffic stream at `n` jobs (training episodes). No-op in
+    /// open-loop mode.
     pub fn limit_jobs(&mut self, n: usize) {
-        let t = self.traffic.clone().with_limit(n);
-        self.traffic = t;
+        if let Some(traffic) = self.traffic.as_mut() {
+            traffic.set_limit(n);
+        }
     }
 
     /// Run warm-up + measurement; aggregate stats over the window.
@@ -544,6 +635,85 @@ mod tests {
             r.jobs.iter().any(|j| j.e2e_s > j.exec_s + 0.2),
             "expected queueing delay at high load"
         );
+    }
+
+    #[test]
+    fn throttle_latch_engages_on_crossing_t_max() {
+        let (latched, event) = throttle_latch(false, 358.2, 358.0, 2.0);
+        assert!(latched);
+        assert!(event, "crossing t_max must count as a throttle event");
+    }
+
+    #[test]
+    fn throttle_latch_holds_inside_hysteresis_band() {
+        // Anywhere in [t_max − k, t_max] the latch must not release …
+        for &t in &[356.0, 356.5, 357.9, 358.0] {
+            let (latched, event) = throttle_latch(true, t, 358.0, 2.0);
+            assert!(latched, "must stay throttled at {t} K");
+            assert!(!event, "no new event while already latched");
+        }
+        // … and an unlatched chiplet in the band must stay unlatched.
+        let (latched, event) = throttle_latch(false, 357.0, 358.0, 2.0);
+        assert!(!latched);
+        assert!(!event);
+    }
+
+    #[test]
+    fn throttle_latch_releases_below_band() {
+        let (latched, event) = throttle_latch(true, 355.9, 358.0, 2.0);
+        assert!(!latched, "must release below t_max − hysteresis");
+        assert!(!event);
+        // Steady state when cool and unlatched.
+        let (latched, event) = throttle_latch(false, 320.0, 358.0, 2.0);
+        assert!(!latched);
+        assert!(!event);
+    }
+
+    #[test]
+    fn completion_times_are_not_step_quantized() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let (r, _) = Simulator::new(&arch, sched, quick_cfg(1.0)).run();
+        assert!(!r.jobs.is_empty());
+        let dt = 0.1;
+        // Without throttling, exec time equals the deterministic profile
+        // exactly (load + pipeline) rather than a step-boundary stamp.
+        for j in r.jobs.iter().filter(|j| j.stall_s == 0.0) {
+            assert!(
+                (j.exec_s - j.ideal_exec_s).abs() < 1e-9,
+                "job {}: exec {} vs ideal {}",
+                j.id,
+                j.exec_s,
+                j.ideal_exec_s
+            );
+        }
+        // And at least some completions land strictly inside a step.
+        let off_grid = r.jobs.iter().any(|j| {
+            let frac = (j.completed_s / dt).fract();
+            frac > 0.01 && frac < 0.99
+        });
+        assert!(off_grid, "all completion times sit on the 100 ms grid");
+    }
+
+    #[test]
+    fn open_loop_injection_drives_jobs_to_completion() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let cfg = quick_cfg(1.0);
+        let mut sim = Simulator::open_loop(&arch, sched, cfg);
+        let zoo = ModelZoo::new();
+        assert!(sim.is_idle());
+        sim.inject_job(Job {
+            id: 7,
+            dcg: zoo.dcg(crate::workload::DnnModel::ResNet18),
+            images: 200,
+            arrival_s: 0.0,
+        });
+        assert_eq!(sim.queue_room(), 19, "injected job occupies one slot");
+        let (r, _) = sim.run_drain(60.0);
+        assert_eq!(r.jobs.len(), 1, "injected job must complete");
+        assert_eq!(r.jobs[0].id, 7);
+        assert!(r.jobs[0].exec_s > 0.0);
     }
 
     #[test]

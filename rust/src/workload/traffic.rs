@@ -67,8 +67,14 @@ impl TrafficGen {
     }
 
     pub fn with_limit(mut self, limit: usize) -> TrafficGen {
-        self.limit = Some(limit);
+        self.set_limit(limit);
         self
+    }
+
+    /// Cap the stream in place — no clone of the generator (or its
+    /// workload mix) required.
+    pub fn set_limit(&mut self, limit: usize) {
+        self.limit = Some(limit);
     }
 
     pub fn rate(&self) -> f64 {

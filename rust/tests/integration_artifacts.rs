@@ -2,7 +2,8 @@
 //! L2 jax graphs) executed through PJRT must agree bit-for-bit (to f32
 //! tolerance) with the native rust evaluators over the SAME flat
 //! parameter layout — closing the ref == pallas == artifact == native
-//! loop. Requires `make artifacts`.
+//! loop. Requires `make artifacts` and the `pjrt` feature.
+#![cfg(feature = "pjrt")]
 
 use thermos::runtime::{F32Tensor, Runtime};
 use thermos::sched::policy::{ddt_theta_len, mlp_param_len, NativeDdt, NativeMlp};

@@ -1,0 +1,136 @@
+//! Serve-subsystem integration: record a Poisson-driven run to an
+//! in-memory replay log, then replay it twice — same seed must give a
+//! byte-identical final telemetry report (asserted via its digest). Also
+//! checks the report carries every field the ops story needs.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use thermos::arch::Arch;
+use thermos::noi::NoiTopology;
+use thermos::sched::policy::NativeDdt;
+use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use thermos::sched::thermos::ThermosSched;
+use thermos::serve::{
+    PoissonSource, ReplayWriter, ServeConfig, ServeReport, Server, TenantRouter, TraceSource,
+};
+use thermos::sim::SimConfig;
+use thermos::util::json::Json;
+use thermos::util::rng::Rng;
+use thermos::workload::ModelZoo;
+
+fn serve_cfg(seed: u64) -> ServeConfig {
+    ServeConfig {
+        duration_s: 60.0,
+        tenant_queue_cap: 32,
+        max_wait_s: 25.0,
+        snapshot_every_s: 20.0,
+        sim: SimConfig { warmup_s: 0.0, max_images: 800, seed, ..SimConfig::default() },
+    }
+}
+
+fn router(arch: &Arch, seed: u64) -> TenantRouter<NativeDdt> {
+    let zoo = ModelZoo::new();
+    let encoder = StateEncoder::new(arch, &zoo, 800);
+    let mut rng = Rng::new(seed);
+    let ddt = NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng);
+    TenantRouter::new(ThermosSched::new(arch.clone(), encoder, ddt, [0.5, 0.5]))
+}
+
+fn replay_run(arch: &Arch, trace: &str, seed: u64) -> ServeReport {
+    let source = Box::new(TraceSource::from_text(trace).expect("parse recorded trace"));
+    Server::new(arch, router(arch, seed), source, serve_cfg(seed)).run()
+}
+
+#[test]
+fn recorded_trace_replays_to_identical_telemetry_digest() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+
+    // Live run: Poisson traffic, recorded to an in-memory replay log.
+    let writer = Rc::new(RefCell::new(ReplayWriter::in_memory()));
+    let source = Box::new(PoissonSource::new(1.5, 60, 800, [1.0, 1.0, 1.0], 42));
+    let live = Server::new(&arch, router(&arch, 42), source, serve_cfg(42))
+        .with_replay(writer.clone())
+        .run();
+    assert!(live.json.get("completed").as_f64().unwrap() > 0.0, "live run completed nothing");
+
+    let trace = Rc::try_unwrap(writer)
+        .ok()
+        .expect("server must release the replay writer")
+        .into_inner()
+        .into_string()
+        .unwrap();
+    assert!(trace.lines().any(|l| l.contains("\"ev\":\"req\"")), "log has requests");
+    assert!(trace.lines().any(|l| l.contains("\"ev\":\"map\"")), "log has decisions");
+
+    // Replay the recorded stream twice with the same seed.
+    let a = replay_run(&arch, &trace, 42);
+    let b = replay_run(&arch, &trace, 42);
+    assert_eq!(
+        a.json.to_string_compact(),
+        b.json.to_string_compact(),
+        "replay must be byte-identical"
+    );
+    assert_eq!(a.digest, b.digest);
+
+    // The replay offered exactly the recorded requests.
+    let offered_live = live.json.get("offered").as_f64().unwrap();
+    assert_eq!(a.json.get("offered").as_f64().unwrap(), offered_live);
+
+    // A different seed perturbs nothing on a trace-driven run with the
+    // same scheduler weights only if the policy init matches; changing the
+    // policy seed must change the digest (sanity that the digest bites).
+    let c = replay_run(&arch, &trace, 43);
+    assert_ne!(a.digest, c.digest, "digest should be sensitive to the run");
+}
+
+#[test]
+fn serve_report_carries_ops_fields() {
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let source = Box::new(PoissonSource::new(2.0, 60, 800, [2.0, 1.0, 1.0], 7));
+    let report = Server::new(&arch, router(&arch, 7), source, serve_cfg(7)).run();
+    let j = &report.json;
+
+    for key in [
+        "scheduler",
+        "source",
+        "offered",
+        "admitted",
+        "rejected",
+        "shed",
+        "completed",
+        "throughput_jobs_s",
+        "queue_depth_max",
+        "fifo_depth_max",
+        "host_stalls",
+        "throttle_events",
+        "max_temp_k",
+        "system_energy_j",
+    ] {
+        assert!(!matches!(j.get(key), Json::Null), "report missing `{key}`");
+    }
+    for q in ["p50", "p95", "p99"] {
+        let v = j.get("latency_e2e_s").get(q).as_f64();
+        assert!(v.is_some(), "latency_e2e_s missing {q}");
+    }
+    // One max-temperature entry per PIM cluster.
+    match j.get("cluster_max_temp_k") {
+        Json::Arr(xs) => {
+            assert_eq!(xs.len(), arch.clusters.len());
+            for x in xs {
+                let t = x.as_f64().unwrap();
+                assert!((250.0..450.0).contains(&t), "implausible cluster temp {t}");
+            }
+        }
+        other => panic!("cluster_max_temp_k not an array: {other:?}"),
+    }
+    // Tenant breakdown in fixed order with conserved counts.
+    let tenants = j.get("tenants");
+    let mut offered_sum = 0.0;
+    for name in ["exec", "balanced", "energy"] {
+        let t = tenants.get(name);
+        assert!(!matches!(t, Json::Null), "missing tenant `{name}`");
+        offered_sum += t.get("offered").as_f64().unwrap();
+    }
+    assert_eq!(offered_sum, j.get("offered").as_f64().unwrap());
+    assert_eq!(report.digest.len(), 16);
+}

@@ -6,12 +6,17 @@
 use thermos::arch::Arch;
 use thermos::experiments::{run_one, SchedKind};
 use thermos::noi::NoiTopology;
+#[cfg(feature = "pjrt")]
 use thermos::runtime::Runtime;
 use thermos::sched::policy::NativeDdt;
-use thermos::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+#[cfg(feature = "pjrt")]
+use thermos::sched::state::StateEncoder;
+use thermos::sched::state::{NUM_CLUSTERS, STATE_DIM};
+#[cfg(feature = "pjrt")]
 use thermos::sched::thermos::ThermosSched;
 use thermos::sim::{SimConfig, Simulator};
 use thermos::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use thermos::workload::ModelZoo;
 
 fn quick_cfg(rate: f64) -> SimConfig {
@@ -60,6 +65,7 @@ fn all_schedulers_complete_jobs() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn thermos_via_pjrt_policy_matches_native_schedule() {
     // The PJRT-backed policy and the native evaluator must produce the

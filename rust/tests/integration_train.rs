@@ -1,6 +1,7 @@
 //! Training-loop integration: a short MORL-PPO run through the AOT update
 //! artifact must execute end-to-end, log sane losses, and produce a
 //! parameter vector that still drives the scheduler.
+#![cfg(feature = "pjrt")]
 
 use thermos::noi::NoiTopology;
 use thermos::rl::trainer::{TrainConfig, Trainer};
