@@ -1,0 +1,89 @@
+//! Cluster scaling: drive the same saturating Poisson stream (8 jobs/s,
+//! well past one engine's knee) through 1..=4 shards and report fleet
+//! throughput, tail latency, coalescing, and arbiter activity. The
+//! acceptance property is throughput monotonicity: more shards, more
+//! completed images per second, while the global power budget scales with
+//! the shard count.
+//!
+//! Run: `cargo bench --bench cluster_scaling`
+
+use thermos::cluster::{run_cluster, ClusterConfig, ShardSchedSpec};
+use thermos::experiments::report::Table;
+use thermos::serve::{PoissonSource, ServeConfig};
+use thermos::sim::SimConfig;
+use thermos::util::json::Json;
+
+const SEED: u64 = 11;
+const MAX_IMAGES: u64 = 1_000;
+const RATE_JOBS_S: f64 = 8.0;
+const DURATION_S: f64 = 40.0;
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).as_f64().unwrap_or(0.0)
+}
+
+fn run_point(shards: usize) -> Json {
+    let cfg = ClusterConfig {
+        shards,
+        duration_s: DURATION_S,
+        drain_max_s: 20.0,
+        serve: ServeConfig {
+            duration_s: DURATION_S,
+            tenant_queue_cap: 32,
+            max_wait_s: 45.0,
+            snapshot_every_s: 0.0,
+            pressure_depth: 48,
+            sim: SimConfig {
+                warmup_s: 0.0,
+                max_images: MAX_IMAGES,
+                seed: SEED,
+                ..SimConfig::default()
+            },
+        },
+        sched: ShardSchedSpec::Simba,
+        ..ClusterConfig::default()
+    };
+    let source = Box::new(PoissonSource::new(RATE_JOBS_S, 80, MAX_IMAGES, [1.0, 1.0, 1.0], SEED));
+    run_cluster(cfg, source).json
+}
+
+fn main() {
+    let mut t = Table::new(&[
+        "shards", "offered", "coalesced", "completed", "images_s", "p50_s", "p99_s", "rebalances",
+        "maxT_K", "budget_W",
+    ]);
+    let mut images_s = Vec::new();
+    for shards in 1..=4usize {
+        let j = run_point(shards);
+        let lat = j.get("latency_e2e_s");
+        let rate = num(&j, "throughput_images_s");
+        images_s.push(rate);
+        t.row(vec![
+            format!("{shards}"),
+            format!("{:.0}", num(&j, "offered")),
+            format!("{:.0}", num(&j, "coalesced_requests")),
+            format!("{:.0}", num(&j, "completed")),
+            format!("{rate:.0}"),
+            format!("{:.3}", num(lat, "p50")),
+            format!("{:.3}", num(lat, "p99")),
+            format!("{:.0}", num(j.get("arbiter"), "rebalances")),
+            format!("{:.1}", num(&j, "max_temp_k")),
+            format!("{:.1}", num(&j, "power_budget_w")),
+        ]);
+    }
+    println!("\n{}", t.render());
+    let monotone = images_s.windows(2).all(|w| w[1] >= w[0] * 0.95);
+    println!(
+        "throughput 1→4 shards: {} ({})",
+        images_s.iter().map(|x| format!("{x:.0}")).collect::<Vec<_>>().join(" → "),
+        if monotone && images_s[3] > images_s[0] {
+            "monotone — sharding scales"
+        } else {
+            "NOT monotone — investigate"
+        }
+    );
+    match t.write_csv("cluster_scaling") {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -35,6 +35,7 @@ fn run_point(arch: &Arch, source: Box<dyn TrafficSource>) -> ServeReport {
         tenant_queue_cap: 32,
         max_wait_s: 45.0,
         snapshot_every_s: 0.0,
+        pressure_depth: 48,
         sim: SimConfig { warmup_s: 0.0, max_images: MAX_IMAGES, seed: SEED, ..SimConfig::default() },
     };
     Server::new(arch, sched, source, cfg).run()

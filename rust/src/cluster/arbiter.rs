@@ -1,0 +1,163 @@
+//! The global power/thermal arbiter: one thread owning the package power
+//! budget, redistributing per-shard caps every telemetry epoch.
+//!
+//! Each epoch every shard reports its peak chiplet temperature; the
+//! arbiter reslices the fixed total budget headroom-weighted — shards far
+//! below the reference temperature (coolest PIM `t_max`, 330 K) gain
+//! budget, shards at or above it fall to a floor share. The sum of caps
+//! always equals the budget (conservation), caps are enforced by the
+//! engine's mapping-time admission gate, and since reports are collected
+//! at a barrier and sorted by shard id, the redistribution is
+//! deterministic regardless of thread scheduling.
+
+use super::shard::EpochReport;
+use crate::arch::Arch;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Sum of every chiplet's peak power (full-rate MACs + leakage) — the
+/// package TDP the default budget is derived from.
+pub fn package_tdp_w(arch: &Arch) -> f64 {
+    arch.chiplets
+        .iter()
+        .map(|c| {
+            let spec = &arch.specs[c.pim as usize];
+            spec.rate_mac_s * spec.energy_per_mac_j + spec.leakage_w
+        })
+        .sum()
+}
+
+#[derive(Clone, Debug)]
+pub struct ArbiterConfig {
+    /// Total cluster power budget (W), shared across shards.
+    pub budget_w: f64,
+    /// Reference temperature (K): headroom is measured against this.
+    /// Default 330 K — the ReRAM clusters' Eq. 2 limit, the first wall a
+    /// heterogeneous package hits.
+    pub t_ref_k: f64,
+    /// Fraction of the fair share (`budget / n`) every shard keeps even
+    /// when hot, so a throttled shard can still drain in-flight work.
+    pub floor_frac: f64,
+}
+
+impl ArbiterConfig {
+    pub fn new(budget_w: f64) -> ArbiterConfig {
+        ArbiterConfig { budget_w, t_ref_k: 330.0, floor_frac: 0.25 }
+    }
+}
+
+/// Caps-and-reports message the arbiter sends back each epoch.
+pub type EpochOutcome = (Vec<f64>, Vec<EpochReport>);
+
+pub struct Arbiter {
+    cfg: ArbiterConfig,
+    n: usize,
+    caps_w: Vec<f64>,
+    /// Epochs on which the redistribution moved any cap by > 1 mW.
+    pub rebalances: u64,
+    pub epochs: u64,
+}
+
+impl Arbiter {
+    pub fn new(cfg: ArbiterConfig, n_shards: usize) -> Arbiter {
+        assert!(n_shards >= 1);
+        assert!(cfg.budget_w > 0.0, "power budget must be positive");
+        let fair = cfg.budget_w / n_shards as f64;
+        Arbiter { cfg, n: n_shards, caps_w: vec![fair; n_shards], rebalances: 0, epochs: 0 }
+    }
+
+    pub fn caps_w(&self) -> &[f64] {
+        &self.caps_w
+    }
+
+    /// Redistribute the budget from per-shard peak temperatures:
+    /// `cap_i = floor + pool · w_i / Σw` with `w_i = max(t_ref − T_i, ε)`.
+    /// Conserves the budget exactly (up to float rounding).
+    pub fn rebalance(&mut self, peak_temp_k: &[f64]) -> Vec<f64> {
+        assert_eq!(peak_temp_k.len(), self.n);
+        let fair = self.cfg.budget_w / self.n as f64;
+        let floor = fair * self.cfg.floor_frac.clamp(0.0, 1.0);
+        let pool = self.cfg.budget_w - floor * self.n as f64;
+        let weights: Vec<f64> =
+            peak_temp_k.iter().map(|&t| (self.cfg.t_ref_k - t).max(0.5)).collect();
+        let wsum: f64 = weights.iter().sum();
+        let new: Vec<f64> = weights.iter().map(|w| floor + pool * w / wsum).collect();
+        if new
+            .iter()
+            .zip(self.caps_w.iter())
+            .any(|(a, b)| (a - b).abs() > 1e-3)
+        {
+            self.rebalances += 1;
+        }
+        self.epochs += 1;
+        self.caps_w = new.clone();
+        new
+    }
+
+    /// Arbiter thread body: each epoch, collect exactly one report per
+    /// shard (a barrier), sort by shard id (determinism), rebalance, and
+    /// send the new caps plus the sorted reports to the coordinator.
+    /// Returns itself so the coordinator can read final caps/counters.
+    pub fn run(
+        mut self,
+        reports_rx: Receiver<EpochReport>,
+        outcome_tx: Sender<EpochOutcome>,
+        total_epochs: usize,
+    ) -> Arbiter {
+        for _ in 0..total_epochs {
+            let mut reports = Vec::with_capacity(self.n);
+            for _ in 0..self.n {
+                match reports_rx.recv() {
+                    Ok(r) => reports.push(r),
+                    Err(_) => return self, // a shard died; stop arbitrating
+                }
+            }
+            reports.sort_by_key(|r| r.shard);
+            let peaks: Vec<f64> = reports.iter().map(|r| r.peak_temp_k).collect();
+            let caps = self.rebalance(&peaks);
+            if outcome_tx.send((caps, reports)).is_err() {
+                return self;
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+
+    #[test]
+    fn package_tdp_is_plausible() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let tdp = package_tdp_w(&arch);
+        // 78 chiplets at 0.06–0.26 W each.
+        assert!((5.0..50.0).contains(&tdp), "tdp {tdp}");
+    }
+
+    #[test]
+    fn rebalance_conserves_budget_and_favors_cool_shards() {
+        let mut arb = Arbiter::new(ArbiterConfig::new(12.0), 4);
+        let caps = arb.rebalance(&[300.0, 310.0, 320.0, 329.0]);
+        let total: f64 = caps.iter().sum();
+        assert!((total - 12.0).abs() < 1e-9, "budget not conserved: {total}");
+        // Strictly decreasing caps with increasing temperature.
+        for w in caps.windows(2) {
+            assert!(w[0] > w[1], "hotter shard got more budget: {caps:?}");
+        }
+        assert_eq!(arb.rebalances, 1);
+    }
+
+    #[test]
+    fn equal_temps_get_equal_caps_and_hot_shards_hit_the_floor() {
+        let mut arb = Arbiter::new(ArbiterConfig::new(8.0), 2);
+        let caps = arb.rebalance(&[305.0, 305.0]);
+        assert!((caps[0] - caps[1]).abs() < 1e-12);
+        assert!((caps[0] - 4.0).abs() < 1e-9);
+        // One shard at/above t_ref keeps only ~the floor share.
+        let caps = arb.rebalance(&[360.0, 300.0]);
+        let floor = 4.0 * 0.25;
+        assert!(caps[0] < floor + 0.1, "hot shard cap {} ≫ floor {floor}", caps[0]);
+        assert!((caps[0] + caps[1] - 8.0).abs() < 1e-9);
+    }
+}

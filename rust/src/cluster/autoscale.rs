@@ -1,0 +1,122 @@
+//! Utilization-threshold autoscaler for the shard fleet.
+//!
+//! Each epoch the coordinator feeds the autoscaler the offered job rate;
+//! it compares utilization (offered / aggregate shard capacity) against
+//! hysteresis thresholds and grows or shrinks the *active* shard set by
+//! one, with a cooldown between decisions. Draining is graceful: a
+//! removed shard leaves the hash ring (no new requests) but its worker
+//! keeps stepping, finishing in-flight work, and still participates in
+//! the arbiter barrier — so scaling decisions, which depend only on the
+//! deterministic offered stream, never break run-to-run reproducibility.
+
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    pub min_shards: usize,
+    pub max_shards: usize,
+    /// Scale up when utilization exceeds this.
+    pub hi_util: f64,
+    /// Scale down when utilization falls below this.
+    pub lo_util: f64,
+    /// Nominal sustained capacity of one shard (jobs/s), the utilization
+    /// denominator. The paper-scale package saturates around ~2 jobs/s.
+    pub shard_capacity_jobs_s: f64,
+    /// Epochs to wait after a scaling decision before the next one.
+    pub cooldown_epochs: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            hi_util: 0.85,
+            lo_util: 0.30,
+            shard_capacity_jobs_s: 2.0,
+            cooldown_epochs: 5,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    cooldown: usize,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        Autoscaler { cfg, cooldown: 0, scale_ups: 0, scale_downs: 0 }
+    }
+
+    /// Decide the active-shard count for the next epoch given this
+    /// epoch's offered rate and the current active count.
+    pub fn target(&mut self, offered_jobs_s: f64, active: usize) -> usize {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return active;
+        }
+        let capacity = (active as f64 * self.cfg.shard_capacity_jobs_s).max(1e-9);
+        let util = offered_jobs_s / capacity;
+        if util > self.cfg.hi_util && active < self.cfg.max_shards {
+            self.cooldown = self.cfg.cooldown_epochs;
+            self.scale_ups += 1;
+            active + 1
+        } else if util < self.cfg.lo_util && active > self.cfg.min_shards {
+            self.cooldown = self.cfg.cooldown_epochs;
+            self.scale_downs += 1;
+            active - 1
+        } else {
+            active
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig { cooldown_epochs: 2, ..AutoscaleConfig::default() }
+    }
+
+    #[test]
+    fn scales_up_under_load_with_cooldown() {
+        let mut a = Autoscaler::new(cfg());
+        // 4 jobs/s on one 2 jobs/s shard → 200% utilization.
+        assert_eq!(a.target(4.0, 1), 2);
+        // Cooldown holds for the next 2 epochs.
+        assert_eq!(a.target(4.0, 2), 2);
+        assert_eq!(a.target(4.0, 2), 2);
+        // Still over 85% of 2 shards → up again.
+        assert_eq!(a.target(4.0, 2), 3);
+        assert_eq!(a.scale_ups, 2);
+    }
+
+    #[test]
+    fn scales_down_when_idle_and_respects_bounds() {
+        let mut a = Autoscaler::new(cfg());
+        // 0.5 jobs/s on 3 shards → 8% utilization.
+        assert_eq!(a.target(0.5, 3), 2);
+        a.cooldown = 0;
+        assert_eq!(a.target(0.5, 2), 1);
+        a.cooldown = 0;
+        // Never below min_shards.
+        assert_eq!(a.target(0.0, 1), 1);
+        // Never above max_shards.
+        let mut b = Autoscaler::new(cfg());
+        assert_eq!(b.target(100.0, 4), 4);
+        assert_eq!(a.scale_downs, 2);
+    }
+
+    #[test]
+    fn steady_load_holds_steady() {
+        let mut a = Autoscaler::new(cfg());
+        // 1.2 jobs/s on one shard → 60%, inside [30%, 85%].
+        for _ in 0..10 {
+            assert_eq!(a.target(1.2, 1), 1);
+        }
+        assert_eq!((a.scale_ups, a.scale_downs), (0, 0));
+    }
+}

@@ -1,0 +1,491 @@
+//! The cluster subsystem: sharded multi-engine serving with a global
+//! thermal/power arbiter.
+//!
+//! ```text
+//!                       ┌────────────────────────────┐
+//!   traffic source ──▶  │ coordinator (main thread)  │
+//!                       │  consistent-hash router +  │◀── caps, epoch
+//!                       │  coalescing + autoscaler   │    reports
+//!                       └──────┬──────┬──────┬───────┘        ▲
+//!                 EpochPacket  │      │      │ (bounded       │
+//!                 {reqs,cap}   ▼      ▼      ▼  mailboxes)    │
+//!                       ┌──────────┐ ┌───┐ ┌───┐              │
+//!                       │ shard 0  │ │ 1 │ │ N │  one engine +│
+//!                       │ (thread) │ │   │ │   │  sched each  │
+//!                       └────┬─────┘ └─┬─┘ └─┬─┘              │
+//!                            │ EpochReport {peak_temp, power} │
+//!                            ▼         ▼     ▼                │
+//!                       ┌────────────────────────────┐        │
+//!                       │ arbiter (thread): resplit  │────────┘
+//!                       │ power budget by headroom   │
+//!                       └────────────────────────────┘
+//! ```
+//!
+//! One serving [`Server`] (engine + scheduler) per shard — one shard per
+//! interposer — on its own worker thread. The coordinator routes each
+//! epoch's arrivals by model fingerprint (consistent hashing keeps a
+//! model's weights and cached profiles on one shard), coalesces
+//! same-model requests into batches, and pushes one [`EpochPacket`] per
+//! shard through a bounded mailbox. The arbiter owns the package power
+//! budget: every epoch it collects one [`EpochReport`] per shard
+//! (a barrier), reslices the budget headroom-weighted from reported peak
+//! temperatures — hot shards lose budget to cool ones — and returns
+//! per-shard caps that the engine enforces at mapping time.
+//!
+//! ## Determinism model
+//!
+//! Real threads, reproducible results: shards advance in *epoch
+//! lockstep*. Within an epoch a shard is a deterministic function of its
+//! seed and its packet sequence; the packet sequence is a deterministic
+//! function of the source seed and the (deterministic) cap/autoscale
+//! history; the arbiter sorts reports by shard id before rebalance.
+//! Thread interleaving can reorder report arrival but never their epoch
+//! content, so `thermos serve --shards 4 --seed S` twice produces
+//! byte-identical merged reports. The only interleaving-dependent values
+//! — profile-cache hit/miss splits — are deliberately kept out of the
+//! digested JSON.
+
+pub mod arbiter;
+pub mod autoscale;
+pub mod router;
+pub mod shard;
+
+pub use arbiter::{package_tdp_w, Arbiter, ArbiterConfig};
+pub use autoscale::{AutoscaleConfig, Autoscaler};
+pub use router::{ClusterRouter, HashRing, RouteStats};
+pub use shard::{EpochPacket, EpochReport, ShardParams, ShardResult, ShardSchedSpec};
+
+use crate::arch::Arch;
+use crate::noi::NoiTopology;
+use crate::sched::thermos::PREF_BALANCED;
+use crate::serve::ingest::TrafficSource;
+use crate::serve::server::{ServeConfig, Server};
+use crate::serve::telemetry::{digest64, TelemetryHub};
+use crate::sim::{ProfileCache, SimConfig};
+use crate::thermal::ThermalParams;
+use crate::util::json::Json;
+use std::sync::mpsc;
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Worker shards (engines). The autoscaler varies the *active* subset
+    /// of the ring; workers always step so drained shards stay warm.
+    pub shards: usize,
+    /// Telemetry epoch: router/arbiter barrier interval (s).
+    pub epoch_s: f64,
+    /// Serving horizon (s).
+    pub duration_s: f64,
+    /// Post-horizon drain bound per shard (s).
+    pub drain_max_s: f64,
+    /// Total package power budget (W); `None` derives
+    /// `budget_frac × TDP × shards` from the architecture.
+    pub power_budget_w: Option<f64>,
+    pub budget_frac: f64,
+    /// Bounded mailbox depth per shard.
+    pub mailbox_cap: usize,
+    /// Virtual nodes per shard on the hash ring.
+    pub vnodes: usize,
+    /// Coalesce same-(model, tenant) requests within an epoch batch.
+    pub coalesce: bool,
+    pub max_batch_images: u64,
+    pub noi: NoiTopology,
+    /// Per-shard serve/engine knobs. Shard `i` runs with
+    /// `seed + i · 0x9e37` (distinct workload state per shard,
+    /// deterministic overall); snapshots are cluster-level, so per-shard
+    /// snapshotting is forced off.
+    pub serve: ServeConfig,
+    pub sched: ShardSchedSpec,
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Per-shard replay logs: `<base>.shard<i>.jsonl`.
+    pub record_base: Option<String>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            shards: 2,
+            epoch_s: 1.0,
+            duration_s: 120.0,
+            drain_max_s: 30.0,
+            power_budget_w: None,
+            budget_frac: 0.75,
+            mailbox_cap: 2,
+            vnodes: 16,
+            coalesce: true,
+            max_batch_images: 8_000,
+            noi: NoiTopology::Mesh,
+            serve: ServeConfig::default(),
+            sched: ShardSchedSpec::Thermos { theta: None, fallback: PREF_BALANCED },
+            autoscale: None,
+            record_base: None,
+        }
+    }
+}
+
+/// Fleet-wide output: merged report JSON + digest, per-epoch snapshots,
+/// and profile-cache stats (observability only — interleaving-dependent,
+/// never part of the digested JSON).
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub json: Json,
+    pub digest: String,
+    pub snapshots: Vec<Json>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: usize,
+}
+
+fn epoch_snapshot_json(
+    epoch: usize,
+    t_s: f64,
+    reports: &[EpochReport],
+    caps_w: &[f64],
+    active: usize,
+) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Num(epoch as f64)),
+        ("t_s", Json::Num(t_s)),
+        ("active_shards", Json::Num(active as f64)),
+        ("completed", Json::Num(reports.iter().map(|r| r.completed).sum::<u64>() as f64)),
+        (
+            "queue_depth",
+            Json::Num(reports.iter().map(|r| r.queue_depth).sum::<usize>() as f64),
+        ),
+        (
+            "peak_temp_k",
+            Json::Num(reports.iter().map(|r| r.peak_temp_k).fold(0.0, f64::max)),
+        ),
+        ("power_w", Json::Num(reports.iter().map(|r| r.power_w).sum::<f64>())),
+        ("caps_w", Json::arr_f64(caps_w)),
+        (
+            "throttled_shards",
+            Json::Num(reports.iter().filter(|r| r.throttled).count() as f64),
+        ),
+        (
+            "cap_gated_shards",
+            Json::Num(reports.iter().filter(|r| r.cap_gated).count() as f64),
+        ),
+    ])
+}
+
+/// Run a sharded serving cluster to its horizon and merge the per-shard
+/// telemetry into one fleet-wide report. See the module docs for the
+/// architecture and determinism model.
+pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> ClusterReport {
+    assert!(cfg.shards >= 1, "cluster needs at least one shard");
+    let n = cfg.shards;
+    let ref_arch = Arch::paper_heterogeneous(cfg.noi);
+    let budget_w = cfg
+        .power_budget_w
+        .unwrap_or_else(|| package_tdp_w(&ref_arch) * cfg.budget_frac * n as f64);
+    let dt = ThermalParams::default().dt_s;
+    let epoch_steps = ((cfg.epoch_s / dt).round() as usize).max(1);
+    let total_epochs = ((cfg.duration_s / cfg.epoch_s).ceil() as usize).max(1);
+
+    let cache = ProfileCache::new();
+    let source_name = source.name().to_string();
+    let scheduler_name = cfg.sched.name();
+
+    // Channels: bounded per-shard mailboxes in, unbounded telemetry out.
+    let mut packet_txs: Vec<mpsc::SyncSender<EpochPacket>> = Vec::with_capacity(n);
+    let mut packet_rxs: Vec<mpsc::Receiver<EpochPacket>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::sync_channel(cfg.mailbox_cap.max(1));
+        packet_txs.push(tx);
+        packet_rxs.push(rx);
+    }
+    let (report_tx, report_rx) = mpsc::channel::<EpochReport>();
+    let (outcome_tx, outcome_rx) = mpsc::channel::<arbiter::EpochOutcome>();
+    let (result_tx, result_rx) = mpsc::channel::<ShardResult>();
+
+    let mut snapshots: Vec<Json> = Vec::new();
+    let mut stats = RouteStats { routed: vec![0; n], ..Default::default() };
+    let mut autoscaler = cfg.autoscale.clone().map(Autoscaler::new);
+    let initial_active = match &autoscaler {
+        Some(a) => a.cfg.min_shards.clamp(1, n),
+        None => n,
+    };
+    let mut router = ClusterRouter::new(
+        &(0..initial_active).collect::<Vec<usize>>(),
+        cfg.vnodes,
+        cfg.coalesce,
+        cfg.max_batch_images,
+    );
+
+    let (mut results, arbiter) = std::thread::scope(|scope| {
+        let arb = Arbiter::new(ArbiterConfig::new(budget_w), n);
+        let arb_handle = scope.spawn(move || arb.run(report_rx, outcome_tx, total_epochs));
+
+        for (id, rx) in packet_rxs.into_iter().enumerate() {
+            let params = ShardParams {
+                id,
+                noi: cfg.noi,
+                serve: ServeConfig {
+                    snapshot_every_s: 0.0,
+                    sim: SimConfig {
+                        seed: cfg.serve.sim.seed.wrapping_add(id as u64 * 0x9e37),
+                        ..cfg.serve.sim.clone()
+                    },
+                    ..cfg.serve.clone()
+                },
+                sched: cfg.sched.clone(),
+                epoch_steps,
+                drain_max_s: cfg.drain_max_s,
+                record_path: cfg.record_base.as_ref().map(|b| format!("{b}.shard{id}.jsonl")),
+            };
+            let cache = cache.clone();
+            let report_tx = report_tx.clone();
+            let result_tx = result_tx.clone();
+            scope.spawn(move || shard::run_shard(params, cache, rx, report_tx, result_tx));
+        }
+        drop(report_tx);
+        drop(result_tx);
+
+        // Coordinator: route arrivals, barrier with the arbiter, autoscale.
+        let mut caps_w = vec![budget_w / n as f64; n];
+        for epoch in 0..total_epochs {
+            let t_end = (epoch as f64 + 1.0) * cfg.epoch_s;
+            let arrivals = source.arrivals_until(t_end);
+            let offered_rate = arrivals.len() as f64 / cfg.epoch_s;
+            let mut batches = router.route_epoch(arrivals, n, &mut stats);
+            let last = epoch + 1 == total_epochs;
+            for (id, tx) in packet_txs.iter().enumerate() {
+                let pkt =
+                    EpochPacket { reqs: std::mem::take(&mut batches[id]), cap_w: caps_w[id], last };
+                match tx.try_send(pkt) {
+                    Ok(()) => {}
+                    // The lockstep protocol keeps at most one packet in
+                    // flight, but fall back to a blocking send for safety.
+                    Err(mpsc::TrySendError::Full(pkt)) => {
+                        let _ = tx.send(pkt);
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {}
+                }
+            }
+            let Ok((new_caps, reports)) = outcome_rx.recv() else { break };
+            caps_w = new_caps;
+            if let Some(a) = autoscaler.as_mut() {
+                let active = router.ring.num_shards();
+                let target = a.target(offered_rate, active).clamp(1, n);
+                while router.ring.num_shards() < target {
+                    match (0..n).find(|&i| !router.ring.contains(i)) {
+                        Some(i) => router.ring.add(i),
+                        None => break,
+                    }
+                }
+                while router.ring.num_shards() > target {
+                    let last_active = *router.ring.shards().last().unwrap();
+                    router.ring.remove(last_active);
+                }
+            }
+            snapshots.push(epoch_snapshot_json(
+                epoch,
+                t_end,
+                &reports,
+                &caps_w,
+                router.ring.num_shards(),
+            ));
+        }
+        drop(packet_txs);
+
+        let mut results: Vec<ShardResult> = Vec::with_capacity(n);
+        while let Ok(r) = result_rx.recv() {
+            results.push(r);
+        }
+        let arbiter = arb_handle.join().expect("arbiter thread panicked");
+        (results, arbiter)
+    });
+    results.sort_by_key(|r| r.id);
+
+    // Deterministic merge: fixed shard-id order.
+    let mut merged = TelemetryHub::new();
+    for r in &results {
+        merged.merge(&r.hub);
+    }
+    let (offered_batches, admitted, rejected, shed, completed) = merged.totals();
+    let num = |j: &Json, k: &str| j.get(k).as_f64().unwrap_or(0.0);
+    let duration_s =
+        results.iter().map(|r| num(&r.report.json, "duration_s")).fold(0.0, f64::max);
+    let shards_detail: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let j = &r.report.json;
+            Json::obj(vec![
+                ("id", Json::Num(r.id as f64)),
+                ("offered", j.get("offered").clone()),
+                ("rejected", j.get("rejected").clone()),
+                ("shed", j.get("shed").clone()),
+                ("shed_pressure", j.get("shed_pressure").clone()),
+                ("completed", j.get("completed").clone()),
+                ("images_done", j.get("images_done").clone()),
+                ("max_temp_k", j.get("max_temp_k").clone()),
+                ("throttle_events", j.get("throttle_events").clone()),
+                ("cap_gated_steps", j.get("cap_gated_steps").clone()),
+                ("system_energy_j", j.get("system_energy_j").clone()),
+                ("host_stalls", j.get("host_stalls").clone()),
+                ("duration_s", j.get("duration_s").clone()),
+            ])
+        })
+        .collect();
+    let autoscale_json = match &autoscaler {
+        Some(a) => Json::obj(vec![
+            ("scale_ups", Json::Num(a.scale_ups as f64)),
+            ("scale_downs", Json::Num(a.scale_downs as f64)),
+            ("active_final", Json::Num(router.ring.num_shards() as f64)),
+        ]),
+        None => Json::Null,
+    };
+    let json = Json::obj(vec![
+        ("scheduler", Json::Str(scheduler_name.to_string())),
+        ("source", Json::Str(source_name)),
+        ("seed", Json::Num(cfg.serve.sim.seed as f64)),
+        ("shards", Json::Num(n as f64)),
+        ("epochs", Json::Num(total_epochs as f64)),
+        ("epoch_s", Json::Num(cfg.epoch_s)),
+        ("duration_s", Json::Num(duration_s)),
+        ("offered", Json::Num(stats.offered as f64)),
+        ("coalesced_requests", Json::Num(stats.coalesced as f64)),
+        ("offered_batches", Json::Num(offered_batches as f64)),
+        (
+            "routed_per_shard",
+            Json::Arr(stats.routed.iter().map(|&x| Json::Num(x as f64)).collect()),
+        ),
+        ("admitted", Json::Num(admitted as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("shed_pressure", Json::Num(merged.shed_pressure_total() as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("images_done", Json::Num(merged.images_done_total() as f64)),
+        ("throughput_jobs_s", Json::Num(completed as f64 / duration_s.max(1e-9))),
+        (
+            "throughput_images_s",
+            Json::Num(merged.images_done_total() as f64 / duration_s.max(1e-9)),
+        ),
+        ("latency_e2e_s", merged.e2e_all.to_json()),
+        ("latency_exec_s", merged.exec_all.to_json()),
+        ("energy_j", merged.energy_all.to_json()),
+        ("tenants", merged.tenants_json()),
+        (
+            "max_temp_k",
+            Json::Num(
+                results.iter().map(|r| num(&r.report.json, "max_temp_k")).fold(0.0, f64::max),
+            ),
+        ),
+        (
+            "system_energy_j",
+            Json::Num(results.iter().map(|r| num(&r.report.json, "system_energy_j")).sum::<f64>()),
+        ),
+        (
+            "throttle_events",
+            Json::Num(results.iter().map(|r| num(&r.report.json, "throttle_events")).sum::<f64>()),
+        ),
+        (
+            "cap_gated_steps",
+            Json::Num(results.iter().map(|r| num(&r.report.json, "cap_gated_steps")).sum::<f64>()),
+        ),
+        ("power_budget_w", Json::Num(budget_w)),
+        (
+            "arbiter",
+            Json::obj(vec![
+                ("budget_w", Json::Num(budget_w)),
+                ("rebalances", Json::Num(arbiter.rebalances as f64)),
+                ("epochs", Json::Num(arbiter.epochs as f64)),
+                ("final_caps_w", Json::arr_f64(arbiter.caps_w())),
+            ]),
+        ),
+        ("autoscaler", autoscale_json),
+        ("shards_detail", Json::Arr(shards_detail)),
+    ]);
+    let digest = digest64(&json.to_string_compact());
+    let (cache_hits, cache_misses) = cache.stats();
+    ClusterReport {
+        json,
+        digest,
+        snapshots,
+        cache_hits,
+        cache_misses,
+        cache_entries: cache.len(),
+    }
+}
+
+/// Convenience: a single-shard "cluster" is just a [`Server`] run — used
+/// by tests comparing sharded and unsharded behavior.
+pub fn single_node_report(
+    cfg: &ClusterConfig,
+    source: Box<dyn TrafficSource>,
+) -> crate::serve::server::ServeReport {
+    let arch = Arch::paper_heterogeneous(cfg.noi);
+    match cfg.sched.clone() {
+        ShardSchedSpec::Simba => {
+            let sched = crate::sched::SimbaSched::new(arch.clone());
+            Server::new(&arch, sched, source, cfg.serve.clone()).run()
+        }
+        ShardSchedSpec::BigLittle => {
+            let sched = crate::sched::BigLittleSched::new(arch.clone());
+            Server::new(&arch, sched, source, cfg.serve.clone()).run()
+        }
+        ShardSchedSpec::Thermos { theta, fallback } => {
+            use crate::sched::policy::NativeDdt;
+            use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+            use crate::sched::thermos::ThermosSched;
+            use crate::serve::server::TenantRouter;
+            let zoo = crate::workload::ModelZoo::new();
+            let encoder = StateEncoder::new(&arch, &zoo, cfg.serve.sim.max_images);
+            let ddt = match theta {
+                Some(t) => NativeDdt::new(STATE_DIM, NUM_CLUSTERS, t),
+                None => {
+                    let mut rng = crate::util::rng::Rng::new(cfg.serve.sim.seed);
+                    NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng)
+                }
+            };
+            let sched = TenantRouter::new(ThermosSched::new(arch.clone(), encoder, ddt, fallback));
+            Server::new(&arch, sched, source, cfg.serve.clone()).run()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::PoissonSource;
+
+    #[test]
+    fn tiny_cluster_runs_and_reports() {
+        let cfg = ClusterConfig {
+            shards: 2,
+            duration_s: 8.0,
+            drain_max_s: 10.0,
+            serve: ServeConfig {
+                duration_s: 8.0,
+                tenant_queue_cap: 16,
+                max_wait_s: 10.0,
+                snapshot_every_s: 0.0,
+                pressure_depth: 24,
+                sim: SimConfig {
+                    warmup_s: 0.0,
+                    max_images: 200,
+                    seed: 3,
+                    ..SimConfig::default()
+                },
+            },
+            sched: ShardSchedSpec::Simba,
+            ..ClusterConfig::default()
+        };
+        let source = Box::new(PoissonSource::new(2.0, 30, 200, [1.0, 1.0, 1.0], 3));
+        let report = run_cluster(cfg, source);
+        assert_eq!(report.digest.len(), 16);
+        assert_eq!(report.snapshots.len(), 8);
+        assert!(report.json.get("offered").as_f64().unwrap() > 0.0);
+        assert!(report.json.get("completed").as_f64().unwrap() > 0.0);
+        assert_eq!(report.json.get("shards").as_f64().unwrap(), 2.0);
+        // Caps always sum to the budget.
+        let budget = report.json.get("power_budget_w").as_f64().unwrap();
+        let caps = match report.json.get("arbiter").get("final_caps_w") {
+            Json::Arr(xs) => xs.iter().map(|x| x.as_f64().unwrap()).sum::<f64>(),
+            other => panic!("final_caps_w not an array: {other:?}"),
+        };
+        assert!((caps - budget).abs() < 1e-6, "caps {caps} vs budget {budget}");
+        // The shared profile cache saw traffic.
+        assert!(report.cache_hits + report.cache_misses > 0);
+    }
+}

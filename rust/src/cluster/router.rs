@@ -1,0 +1,263 @@
+//! Consistent-hash request routing with same-model batch coalescing.
+//!
+//! Requests are keyed by model fingerprint, so every request for a given
+//! model lands on the same shard — that shard's chiplets keep the model's
+//! weights resident and its [`crate::sim::ProfileCache`] entries hot.
+//! The ring uses virtual nodes for balance; adding or removing one shard
+//! remaps only ~K/N of the key population (the property test below pins
+//! this down).
+//!
+//! Within one epoch's batch for a shard, requests for the same
+//! `(model, tenant)` pair are coalesced into a single engine job (image
+//! counts add, bounded by `max_batch_images`; the batch keeps the
+//! earliest member's arrival time) — the Sangam-style batching lever for
+//! chiplet-PIM serving throughput.
+
+use crate::serve::ServeRequest;
+use crate::util::stats::fnv1a64;
+
+/// Consistent-hash ring over shard ids with virtual nodes.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// Sorted `(point, shard)` pairs.
+    points: Vec<(u64, usize)>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    pub fn new(shards: &[usize], vnodes: usize) -> HashRing {
+        let mut ring = HashRing { points: Vec::new(), vnodes: vnodes.max(1) };
+        for &s in shards {
+            ring.add(s);
+        }
+        ring
+    }
+
+    fn point(shard: usize, vnode: usize) -> u64 {
+        fnv1a64(format!("shard-{shard}-vnode-{vnode}").as_bytes())
+    }
+
+    pub fn add(&mut self, shard: usize) {
+        if self.contains(shard) {
+            return;
+        }
+        for v in 0..self.vnodes {
+            self.points.push((Self::point(shard, v), shard));
+        }
+        self.points.sort_unstable();
+    }
+
+    pub fn remove(&mut self, shard: usize) {
+        self.points.retain(|&(_, s)| s != shard);
+    }
+
+    pub fn contains(&self, shard: usize) -> bool {
+        self.points.iter().any(|&(_, s)| s == shard)
+    }
+
+    /// Active shard ids, sorted.
+    pub fn shards(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.points.iter().map(|&(_, s)| s).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The shard owning `key`: the first ring point at or after the key,
+    /// wrapping around.
+    pub fn shard_for(&self, key: u64) -> usize {
+        assert!(!self.points.is_empty(), "routing on an empty ring");
+        let idx = self.points.partition_point(|&(p, _)| p < key);
+        let idx = if idx == self.points.len() { 0 } else { idx };
+        self.points[idx].1
+    }
+}
+
+/// Per-run routing counters.
+#[derive(Clone, Debug, Default)]
+pub struct RouteStats {
+    /// Raw requests offered to the router.
+    pub offered: u64,
+    /// Requests absorbed into an existing batch.
+    pub coalesced: u64,
+    /// Batches (engine jobs) actually emitted.
+    pub batches: u64,
+    /// Raw requests routed to each shard id.
+    pub routed: Vec<u64>,
+}
+
+/// The cluster-level request router: consistent-hash placement plus
+/// per-epoch same-model coalescing.
+pub struct ClusterRouter {
+    pub ring: HashRing,
+    coalesce: bool,
+    max_batch_images: u64,
+}
+
+impl ClusterRouter {
+    pub fn new(
+        active_shards: &[usize],
+        vnodes: usize,
+        coalesce: bool,
+        max_batch_images: u64,
+    ) -> ClusterRouter {
+        ClusterRouter {
+            ring: HashRing::new(active_shards, vnodes),
+            coalesce,
+            max_batch_images: max_batch_images.max(1),
+        }
+    }
+
+    /// Routing key: the model fingerprint, so same-model requests are
+    /// always co-located on one shard.
+    pub fn key_of(req: &ServeRequest) -> u64 {
+        fnv1a64(req.model.name().as_bytes())
+    }
+
+    /// Route one epoch of arrivals into per-shard batches (indexed by
+    /// shard id over `0..n_shards`; inactive shards get empty batches).
+    pub fn route_epoch(
+        &self,
+        arrivals: Vec<ServeRequest>,
+        n_shards: usize,
+        stats: &mut RouteStats,
+    ) -> Vec<Vec<ServeRequest>> {
+        let mut out: Vec<Vec<ServeRequest>> = vec![Vec::new(); n_shards];
+        for req in arrivals {
+            stats.offered += 1;
+            let shard = self.ring.shard_for(Self::key_of(&req));
+            stats.routed[shard] += 1;
+            let batch = &mut out[shard];
+            if self.coalesce {
+                if let Some(b) = batch.iter_mut().find(|b| {
+                    b.model == req.model
+                        && b.tenant == req.tenant
+                        && b.images + req.images <= self.max_batch_images
+                }) {
+                    // Absorb: images add, the batch keeps the earliest
+                    // member's arrival time (arrival order ⇒ b.t_s ≤ t_s).
+                    b.images += req.images;
+                    stats.coalesced += 1;
+                    continue;
+                }
+            }
+            batch.push(req);
+        }
+        stats.batches += out.iter().map(|b| b.len() as u64).sum::<u64>();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::TenantClass;
+    use crate::workload::DnnModel;
+
+    fn keys(n: usize) -> Vec<u64> {
+        (0..n).map(|i| fnv1a64(format!("key-{i}").as_bytes())).collect()
+    }
+
+    #[test]
+    fn adding_a_shard_remaps_at_most_about_k_over_n() {
+        let population = keys(10_000);
+        let before = HashRing::new(&[0, 1, 2, 3], 64);
+        let mut after = before.clone();
+        after.add(4);
+        let mut moved = 0usize;
+        for &k in &population {
+            let (a, b) = (before.shard_for(k), after.shard_for(k));
+            if a != b {
+                moved += 1;
+                // Consistency: a key only ever moves TO the new shard.
+                assert_eq!(b, 4, "key moved between surviving shards");
+            }
+        }
+        // Ideal is K/N = 2000; allow 2x for vnode placement variance.
+        assert!(moved > 0, "new shard must take some keys");
+        assert!(moved <= 2 * population.len() / 5, "moved {moved} of {}", population.len());
+    }
+
+    #[test]
+    fn removing_a_shard_only_remaps_its_own_keys() {
+        let population = keys(10_000);
+        let before = HashRing::new(&[0, 1, 2, 3], 64);
+        let mut after = before.clone();
+        after.remove(2);
+        for &k in &population {
+            let (a, b) = (before.shard_for(k), after.shard_for(k));
+            if a == 2 {
+                assert_ne!(b, 2, "removed shard still owns a key");
+            } else {
+                assert_eq!(a, b, "key on a surviving shard must not move");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_membership_round_trips() {
+        let mut ring = HashRing::new(&[0, 1], 16);
+        assert_eq!(ring.shards(), vec![0, 1]);
+        ring.add(1); // idempotent
+        assert_eq!(ring.num_shards(), 2);
+        ring.add(5);
+        assert_eq!(ring.shards(), vec![0, 1, 5]);
+        ring.remove(0);
+        assert_eq!(ring.shards(), vec![1, 5]);
+        assert!(!ring.contains(0));
+        assert!(!ring.is_empty());
+    }
+
+    fn req(model: DnnModel, tenant: TenantClass, t_s: f64, images: u64) -> ServeRequest {
+        ServeRequest { t_s, tenant, model, images }
+    }
+
+    #[test]
+    fn same_model_requests_stay_colocated() {
+        let router = ClusterRouter::new(&[0, 1, 2, 3], 64, false, u64::MAX);
+        let mut stats = RouteStats { routed: vec![0; 4], ..Default::default() };
+        for model in DnnModel::all() {
+            let arrivals: Vec<ServeRequest> = (0..20)
+                .map(|i| req(model, TenantClass::ALL[i % 3], i as f64 * 0.01, 100))
+                .collect();
+            let batches = router.route_epoch(arrivals, 4, &mut stats);
+            let owners: Vec<usize> =
+                (0..4).filter(|&s| !batches[s].is_empty()).collect();
+            assert_eq!(owners.len(), 1, "model {model:?} split across {owners:?}");
+            assert_eq!(owners[0], router.ring.shard_for(fnv1a64(model.name().as_bytes())));
+        }
+    }
+
+    #[test]
+    fn coalescing_merges_same_model_same_tenant_within_cap() {
+        let router = ClusterRouter::new(&[0], 8, true, 250);
+        let mut stats = RouteStats { routed: vec![0; 1], ..Default::default() };
+        let arrivals = vec![
+            req(DnnModel::ResNet18, TenantClass::Exec, 0.1, 100),
+            req(DnnModel::ResNet18, TenantClass::Exec, 0.2, 100), // merges
+            req(DnnModel::ResNet18, TenantClass::Energy, 0.3, 100), // other tenant
+            req(DnnModel::ResNet18, TenantClass::Exec, 0.4, 100), // over cap → new batch
+            req(DnnModel::AlexNet, TenantClass::Exec, 0.5, 100), // other model
+        ];
+        let batches = router.route_epoch(arrivals, 1, &mut stats);
+        assert_eq!(stats.offered, 5);
+        assert_eq!(stats.coalesced, 1);
+        assert_eq!(stats.batches, 4);
+        let exec_resnet: Vec<&ServeRequest> = batches[0]
+            .iter()
+            .filter(|b| b.model == DnnModel::ResNet18 && b.tenant == TenantClass::Exec)
+            .collect();
+        assert_eq!(exec_resnet.len(), 2);
+        assert_eq!(exec_resnet[0].images, 200, "first batch absorbed the second request");
+        assert_eq!(exec_resnet[0].t_s, 0.1, "batch keeps earliest arrival time");
+        assert_eq!(exec_resnet[1].images, 100, "cap forces a fresh batch");
+    }
+}

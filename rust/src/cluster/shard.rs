@@ -1,0 +1,194 @@
+//! Shard worker: one simulation engine + scheduler per interposer, driven
+//! epoch-by-epoch from the coordinator in lockstep.
+//!
+//! A shard blocks on its mailbox for an [`EpochPacket`], applies the
+//! arbiter-assigned power cap, offers the routed batch, advances exactly
+//! `epoch_steps` engine steps, and reports its epoch telemetry. After the
+//! final packet it drains in-flight work (no new arrivals, no barrier —
+//! drain is a deterministic function of shard-local state) and sends its
+//! telemetry hub + final report for the epoch-ordered merge.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::Arch;
+use crate::noi::NoiTopology;
+use crate::sched::policy::NativeDdt;
+use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+use crate::sched::thermos::{Preference, ThermosSched};
+use crate::sched::{BigLittleSched, SimbaSched};
+use crate::serve::ingest::NullSource;
+use crate::serve::replay::ReplayWriter;
+use crate::serve::server::{ServeConfig, ServeReport, ServeSched, Server, TenantRouter};
+use crate::serve::telemetry::TelemetryHub;
+use crate::serve::ServeRequest;
+use crate::sim::ProfileCache;
+use crate::util::rng::Rng;
+use crate::workload::ModelZoo;
+
+/// Which scheduler each shard instantiates (every shard gets its own
+/// instance — policy state is shard-local, only the power budget and the
+/// profile cache are shared).
+#[derive(Clone, Debug)]
+pub enum ShardSchedSpec {
+    /// Preference-conditioned MORL policy behind the tenant router;
+    /// `theta: None` initializes from the shard's seed.
+    Thermos { theta: Option<Vec<f32>>, fallback: Preference },
+    Simba,
+    BigLittle,
+}
+
+impl ShardSchedSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardSchedSpec::Thermos { .. } => "thermos_mt",
+            ShardSchedSpec::Simba => "simba",
+            ShardSchedSpec::BigLittle => "big_little",
+        }
+    }
+}
+
+/// One epoch of work for a shard.
+#[derive(Clone, Debug)]
+pub struct EpochPacket {
+    pub reqs: Vec<ServeRequest>,
+    /// Arbiter-assigned power cap for this epoch (W).
+    pub cap_w: f64,
+    /// Final epoch: drain and report after this one.
+    pub last: bool,
+}
+
+/// Per-epoch shard telemetry, consumed by the arbiter.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochReport {
+    pub shard: usize,
+    pub epoch: usize,
+    /// Peak chiplet temperature over the epoch (K).
+    pub peak_temp_k: f64,
+    /// Package power at the epoch boundary (W).
+    pub power_w: f64,
+    /// Cumulative completed jobs.
+    pub completed: u64,
+    pub queue_depth: usize,
+    pub fifo_depth: usize,
+    pub throttled: bool,
+    pub cap_gated: bool,
+}
+
+/// Final shard output: its telemetry hub (for the fleet-wide merge) and
+/// its own serve report.
+pub struct ShardResult {
+    pub id: usize,
+    pub hub: TelemetryHub,
+    pub report: ServeReport,
+}
+
+/// Everything a shard worker needs; all owned, so the thread closure is
+/// a plain `move`.
+#[derive(Clone, Debug)]
+pub struct ShardParams {
+    pub id: usize,
+    pub noi: NoiTopology,
+    pub serve: ServeConfig,
+    pub sched: ShardSchedSpec,
+    /// Engine steps per epoch.
+    pub epoch_steps: usize,
+    /// Post-horizon drain bound (s).
+    pub drain_max_s: f64,
+    /// Per-shard replay log path (satellite: per-shard writers instead of
+    /// one contended handle).
+    pub record_path: Option<String>,
+}
+
+/// Shard thread entry point: construct the architecture + scheduler
+/// locally (the engine borrows the arch, so it must live on this thread)
+/// and run the epoch loop.
+pub fn run_shard(
+    params: ShardParams,
+    cache: ProfileCache,
+    packet_rx: Receiver<EpochPacket>,
+    report_tx: Sender<EpochReport>,
+    result_tx: Sender<ShardResult>,
+) {
+    let arch = Arch::paper_heterogeneous(params.noi);
+    match params.sched.clone() {
+        ShardSchedSpec::Simba => {
+            let sched = SimbaSched::new(arch.clone());
+            drive(&params, cache, &arch, sched, packet_rx, report_tx, result_tx);
+        }
+        ShardSchedSpec::BigLittle => {
+            let sched = BigLittleSched::new(arch.clone());
+            drive(&params, cache, &arch, sched, packet_rx, report_tx, result_tx);
+        }
+        ShardSchedSpec::Thermos { theta, fallback } => {
+            let zoo = ModelZoo::new();
+            let encoder = StateEncoder::new(&arch, &zoo, params.serve.sim.max_images);
+            let ddt = match theta {
+                Some(t) => NativeDdt::new(STATE_DIM, NUM_CLUSTERS, t),
+                None => {
+                    let mut rng = Rng::new(params.serve.sim.seed);
+                    NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng)
+                }
+            };
+            let sched = TenantRouter::new(ThermosSched::new(arch.clone(), encoder, ddt, fallback));
+            drive(&params, cache, &arch, sched, packet_rx, report_tx, result_tx);
+        }
+    }
+}
+
+fn drive<S: ServeSched>(
+    params: &ShardParams,
+    cache: ProfileCache,
+    arch: &Arch,
+    sched: S,
+    packet_rx: Receiver<EpochPacket>,
+    report_tx: Sender<EpochReport>,
+    result_tx: Sender<ShardResult>,
+) {
+    let mut server = Server::new(arch, sched, Box::new(NullSource), params.serve.clone());
+    server.set_profile_cache(cache);
+    if let Some(path) = &params.record_path {
+        match ReplayWriter::create(path) {
+            Ok(w) => server = server.with_replay(Arc::new(Mutex::new(w))),
+            Err(e) => eprintln!("shard {}: replay log {path} failed: {e}", params.id),
+        }
+    }
+
+    let mut epoch = 0usize;
+    while let Ok(pkt) = packet_rx.recv() {
+        let last = pkt.last;
+        server.set_power_cap_w(Some(pkt.cap_w));
+        for req in pkt.reqs {
+            server.offer(req);
+        }
+        server.advance(params.epoch_steps);
+        let report = EpochReport {
+            shard: params.id,
+            epoch,
+            peak_temp_k: server.take_epoch_peak_temp_k(),
+            power_w: server.power_w(),
+            completed: server.completed_total(),
+            queue_depth: server.queue_depth(),
+            fifo_depth: server.fifo_depth(),
+            throttled: server.any_throttled(),
+            cap_gated: server.cap_gated(),
+        };
+        epoch += 1;
+        if report_tx.send(report).is_err() {
+            break; // coordinator gone; drain and exit
+        }
+        if last {
+            break;
+        }
+    }
+
+    // Drain: keep the final cap, no new arrivals, bounded by drain_max_s.
+    let deadline = server.now() + params.drain_max_s;
+    while !server.is_drained() && server.now() < deadline - 1e-9 {
+        server.advance(params.epoch_steps.max(1));
+    }
+
+    let hub = server.hub_handle().lock().unwrap().clone();
+    let report = server.finish();
+    let _ = result_tx.send(ShardResult { id: params.id, hub, report });
+}

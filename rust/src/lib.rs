@@ -20,6 +20,7 @@
 //! self-contained after `make artifacts`.
 
 pub mod arch;
+pub mod cluster;
 pub mod experiments;
 pub mod noi;
 pub mod pim;

@@ -3,9 +3,9 @@
 //! heavy lifting lives in the library; this is the CLI entrypoint.
 
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use thermos::arch::Arch;
+use thermos::cluster::{run_cluster, AutoscaleConfig, ClusterConfig, ShardSchedSpec};
 use thermos::noi::NoiTopology;
 #[cfg(feature = "pjrt")]
 use thermos::rl::relmas_trainer::RelmasTrainer;
@@ -75,9 +75,23 @@ serve options:
   --tenants <we,wb,wn>      tenant mix weights exec,balanced,energy [1,1,1]
   --queue-cap <n>           per-tenant queue bound [64]
   --max-wait <s>            shed deadline, 0 = never shed [30]
+  --pressure-depth <n>      under thermal/power pressure, shed queued work
+                            (energy class first) down to this backlog [48]
   --snapshot-every <s>      live telemetry period, 0 = off [10]
   --rate-on/--rate-off <jobs/s>, --on-s/--off-s <s>   MMPP burst shape
   --quiet                   suppress live snapshot lines on stderr
+
+serve cluster options (sharded serving; implies the cluster path):
+  --shards <n>              shard count: one engine + scheduler per shard,
+                            consistent-hash routed, global power arbiter
+  --epoch <s>               router/arbiter telemetry epoch [1]
+  --budget <w>              package power budget (W) [0.75 x TDP x shards]
+  --batch-images <n>        coalesced batch image cap [8000]
+  --no-coalesce             disable same-model batch coalescing
+  --drain-max <s>           post-horizon drain bound per shard [30]
+  --autoscale               enable the utilization autoscaler
+  --autoscale-min/--autoscale-max <n>   active-shard bounds [1 / shards]
+  --shard-capacity <jobs/s> autoscaler per-shard capacity [2]
 ";
 
 fn main() {
@@ -88,7 +102,8 @@ fn main() {
             "noi", "seed", "artifacts", "episodes", "jobs", "max-images", "out", "log-csv",
             "sched", "params", "pref", "rate", "duration", "warmup", "epochs", "source", "trace",
             "record", "mix-jobs", "tenants", "queue-cap", "max-wait", "snapshot-every", "rate-on",
-            "rate-off", "on-s", "off-s",
+            "rate-off", "on-s", "off-s", "shards", "epoch", "budget", "batch-images",
+            "pressure-depth", "drain-max", "autoscale-min", "autoscale-max", "shard-capacity",
         ],
     ) {
         Ok(a) => a,
@@ -348,7 +363,7 @@ fn run_server<S: ServeSched>(
     sched: S,
     source: Box<dyn TrafficSource>,
     cfg: ServeConfig,
-    replay: Option<Rc<RefCell<ReplayWriter>>>,
+    replay: Option<Arc<Mutex<ReplayWriter>>>,
     live: bool,
 ) -> ServeReport {
     let mut server = Server::new(arch, sched, source, cfg);
@@ -362,9 +377,8 @@ fn run_server<S: ServeSched>(
     server.run()
 }
 
-fn cmd_serve(args: &cli::Args) -> Result<()> {
-    let noi = noi_of(args)?;
-    let arch = Arch::paper_heterogeneous(noi);
+/// Build the serve traffic source from the shared `--source` options.
+fn serve_source(args: &cli::Args) -> Result<Box<dyn TrafficSource>> {
     let seed = args.parse_u64("seed", 1).map_err(anyhow::Error::msg)?;
     let rate = args.parse_f64("rate", 2.0).map_err(anyhow::Error::msg)?;
     let mix_jobs = args.parse_usize("mix-jobs", 500).map_err(anyhow::Error::msg)?;
@@ -375,8 +389,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         "--tenants expects three weights: exec,balanced,energy"
     );
     let weights = [tenants[0], tenants[1], tenants[2]];
-
-    let source: Box<dyn TrafficSource> = match args.get_or("source", "poisson") {
+    Ok(match args.get_or("source", "poisson") {
         "poisson" => Box::new(PoissonSource::new(rate, mix_jobs, max_images, weights, seed)),
         "mmpp" => Box::new(MmppSource::new(
             args.parse_f64("rate-on", rate * 4.0).map_err(anyhow::Error::msg)?,
@@ -393,18 +406,54 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             Box::new(TraceSource::from_path(path).map_err(anyhow::Error::msg)?)
         }
         other => bail!("unknown source `{other}`"),
-    };
+    })
+}
 
-    let cfg = ServeConfig {
+/// Shared serve/engine knobs for both the single-node and cluster paths.
+fn serve_config(args: &cli::Args) -> Result<ServeConfig> {
+    let seed = args.parse_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let max_images = args.parse_u64("max-images", 4000).map_err(anyhow::Error::msg)?;
+    Ok(ServeConfig {
         duration_s: args.parse_f64("duration", 120.0).map_err(anyhow::Error::msg)?,
         tenant_queue_cap: args.parse_usize("queue-cap", 64).map_err(anyhow::Error::msg)?,
         max_wait_s: args.parse_f64("max-wait", 30.0).map_err(anyhow::Error::msg)?,
         snapshot_every_s: args.parse_f64("snapshot-every", 10.0).map_err(anyhow::Error::msg)?,
+        pressure_depth: args.parse_usize("pressure-depth", 48).map_err(anyhow::Error::msg)?,
         sim: SimConfig { warmup_s: 0.0, max_images, seed, ..SimConfig::default() },
-    };
+    })
+}
+
+/// Write the final report JSON to `--out` (or stdout).
+fn emit_report(args: &cli::Args, json: &Json) -> Result<()> {
+    let pretty = json.to_string_pretty();
+    match args.get("out") {
+        Some(p) => {
+            if let Some(parent) = std::path::Path::new(p).parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            std::fs::write(p, pretty + "\n")?;
+            eprintln!("wrote report to {p}");
+        }
+        None => println!("{pretty}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    if args.get("shards").is_some() {
+        return cmd_serve_cluster(args);
+    }
+    let noi = noi_of(args)?;
+    let arch = Arch::paper_heterogeneous(noi);
+    let seed = args.parse_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let max_images = args.parse_u64("max-images", 4000).map_err(anyhow::Error::msg)?;
+    let source = serve_source(args)?;
+    let cfg = serve_config(args)?;
 
     let replay = match args.get("record") {
-        Some(p) => Some(Rc::new(RefCell::new(
+        Some(p) => Some(Arc::new(Mutex::new(
             ReplayWriter::create(p).with_context(|| format!("create replay log {p}"))?,
         ))),
         None => None,
@@ -429,20 +478,72 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     };
 
     eprintln!("telemetry digest: {}", report.digest);
-    let pretty = report.json.to_string_pretty();
-    match args.get("out") {
-        Some(p) => {
-            if let Some(parent) = std::path::Path::new(p).parent() {
-                if !parent.as_os_str().is_empty() {
-                    std::fs::create_dir_all(parent)?;
-                }
-            }
-            std::fs::write(p, pretty + "\n")?;
-            eprintln!("wrote report to {p}");
+    emit_report(args, &report.json)
+}
+
+/// Sharded serving: `thermos serve --shards N` routes the stream over N
+/// engine shards with a global power arbiter (see `thermos::cluster`).
+fn cmd_serve_cluster(args: &cli::Args) -> Result<()> {
+    let noi = noi_of(args)?;
+    let shards = args.parse_usize("shards", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    let seed = args.parse_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let serve = serve_config(args)?;
+    let duration_s = serve.duration_s;
+    let source = serve_source(args)?;
+
+    let theta = match args.get("params") {
+        Some(_) => Some(native_ddt(args, seed)?.theta),
+        None => None,
+    };
+    let sched = match args.get_or("sched", "thermos") {
+        "simba" => ShardSchedSpec::Simba,
+        "biglittle" | "big_little" => ShardSchedSpec::BigLittle,
+        "thermos" | "thermos-mt" | "thermos_mt" => {
+            ShardSchedSpec::Thermos { theta, fallback: pref_of(args)? }
         }
-        None => println!("{pretty}"),
+        other => bail!("unknown scheduler `{other}`"),
+    };
+    let autoscale = if args.has("autoscale") {
+        Some(AutoscaleConfig {
+            min_shards: args.parse_usize("autoscale-min", 1).map_err(anyhow::Error::msg)?,
+            max_shards: args.parse_usize("autoscale-max", shards).map_err(anyhow::Error::msg)?,
+            shard_capacity_jobs_s: args
+                .parse_f64("shard-capacity", 2.0)
+                .map_err(anyhow::Error::msg)?,
+            ..AutoscaleConfig::default()
+        })
+    } else {
+        None
+    };
+    let budget = args.parse_f64("budget", 0.0).map_err(anyhow::Error::msg)?;
+    let cfg = ClusterConfig {
+        shards,
+        epoch_s: args.parse_f64("epoch", 1.0).map_err(anyhow::Error::msg)?,
+        duration_s,
+        drain_max_s: args.parse_f64("drain-max", 30.0).map_err(anyhow::Error::msg)?,
+        power_budget_w: (budget > 0.0).then_some(budget),
+        coalesce: !args.has("no-coalesce"),
+        max_batch_images: args.parse_u64("batch-images", 8000).map_err(anyhow::Error::msg)?,
+        noi,
+        serve,
+        sched,
+        autoscale,
+        record_base: args.get("record").map(str::to_string),
+        ..ClusterConfig::default()
+    };
+
+    let report = run_cluster(cfg, source);
+    if !args.has("quiet") {
+        for snap in &report.snapshots {
+            eprintln!("{}", snap.to_string_compact());
+        }
     }
-    Ok(())
+    eprintln!(
+        "cluster digest: {}  (profile cache: {} hits / {} misses, {} entries)",
+        report.digest, report.cache_hits, report.cache_misses, report.cache_entries
+    );
+    emit_report(args, &report.json)
 }
 
 /// Render a trained DDT policy (requires --params).

@@ -21,6 +21,25 @@ pub trait TrafficSource {
     fn arrivals_until(&mut self, now: f64) -> Vec<ServeRequest>;
 }
 
+/// A source that never produces arrivals. Used by cluster shard workers,
+/// whose requests are pushed in externally by the router each epoch
+/// (`Server::offer`) instead of pulled from a source.
+pub struct NullSource;
+
+impl TrafficSource for NullSource {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+
+    fn peek(&self) -> Option<f64> {
+        None
+    }
+
+    fn arrivals_until(&mut self, _now: f64) -> Vec<ServeRequest> {
+        Vec::new()
+    }
+}
+
 /// Sample a tenant class from unnormalized weights (exec, balanced,
 /// energy).
 fn sample_tenant(rng: &mut Rng, weights: &[f64; 3]) -> TenantClass {

@@ -24,7 +24,7 @@ pub mod replay;
 pub mod server;
 pub mod telemetry;
 
-pub use ingest::{MmppSource, PoissonSource, TraceSource, TrafficSource};
+pub use ingest::{MmppSource, NullSource, PoissonSource, TraceSource, TrafficSource};
 pub use replay::ReplayWriter;
 pub use server::{ServeConfig, ServeReport, ServeSched, Server, TenantRouter};
 pub use telemetry::{digest64, Histogram, TelemetryHub};

@@ -7,6 +7,16 @@
 //! request that waits past its dispatch deadline is *shed*, and the
 //! engine FIFO is only ever filled up to its free room — the batch
 //! engine's silent host-stall backlog never grows in serve mode.
+//!
+//! Under thermal/power *pressure* (a throttled chiplet or a binding
+//! arbiter power cap) the server additionally sheds in SLO order —
+//! energy-class tenants first, then balanced, then exec — and stops
+//! feeding the engine FIFO, holding work at the service layer where it
+//! can still be shed instead of burying it in the engine.
+//!
+//! The server is driven either by its own [`TrafficSource`] via
+//! [`Server::run`], or externally epoch-by-epoch via [`Server::offer`] +
+//! [`Server::advance`] (the cluster shard workers).
 
 use super::ingest::TrafficSource;
 use super::replay::ReplayWriter;
@@ -16,12 +26,11 @@ use crate::arch::Arch;
 use crate::sched::policy::PolicyEval;
 use crate::sched::thermos::{Preference, ThermosSched};
 use crate::sched::{BigLittleSched, RelmasSched, Scheduler, SimbaSched, SysSnapshot};
-use crate::sim::{Mapping, SimConfig, Simulator};
+use crate::sim::{Mapping, ProfileCache, SimConfig, Simulator};
 use crate::util::json::Json;
 use crate::workload::{Job, ModelZoo};
-use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// A scheduler usable by the server. The single extra hook lets
 /// preference-aware schedulers learn each job's tenant preference at
@@ -87,6 +96,11 @@ pub struct ServeConfig {
     pub max_wait_s: f64,
     /// Emit a telemetry snapshot every this many seconds (0 disables).
     pub snapshot_every_s: f64,
+    /// SLO-ordered pressure shedding: while the engine reports thermal or
+    /// power-cap pressure, shed queued requests — energy class first,
+    /// then balanced, then exec — until the total backlog (tenant queues
+    /// + engine FIFO) is at most this deep (0 disables).
+    pub pressure_depth: usize,
     /// Engine knobs (FIFO depth, thermal constraint, seed, …).
     /// `admit_rate`, `warmup_s`, and `mix_jobs` are unused in serve mode —
     /// the traffic source owns the workload.
@@ -100,6 +114,7 @@ impl Default for ServeConfig {
             tenant_queue_cap: 64,
             max_wait_s: 30.0,
             snapshot_every_s: 10.0,
+            pressure_depth: 48,
             sim: SimConfig { warmup_s: 0.0, ..SimConfig::default() },
         }
     }
@@ -127,14 +142,16 @@ pub struct Server<'a, S: ServeSched> {
     cfg: ServeConfig,
     zoo: ModelZoo,
     queues: [VecDeque<Pending>; TenantClass::COUNT],
-    hub: Rc<RefCell<TelemetryHub>>,
-    replay: Option<Rc<RefCell<ReplayWriter>>>,
+    hub: Arc<Mutex<TelemetryHub>>,
+    replay: Option<Arc<Mutex<ReplayWriter>>>,
     snapshots: Vec<Json>,
     next_snapshot_s: f64,
     next_id: u64,
     /// Round-robin cursor for weighted-fair dispatch.
     rr: usize,
     cluster_max_temp_k: Vec<f64>,
+    /// Peak chiplet temperature since the last `take_epoch_peak_temp_k`.
+    epoch_peak_temp_k: f64,
     /// Live-telemetry hook: called with each periodic snapshot.
     pub on_snapshot: Option<Box<dyn FnMut(&Json) + 'a>>,
 }
@@ -147,10 +164,10 @@ impl<'a, S: ServeSched> Server<'a, S> {
         cfg: ServeConfig,
     ) -> Server<'a, S> {
         let mut sim = Simulator::open_loop(arch, sched, cfg.sim.clone());
-        let hub = Rc::new(RefCell::new(TelemetryHub::new()));
+        let hub = Arc::new(Mutex::new(TelemetryHub::new()));
         let hub_cb = hub.clone();
         sim.on_completed = Some(Box::new(move |stats| {
-            hub_cb.borrow_mut().on_completed(stats);
+            hub_cb.lock().unwrap().on_completed(stats);
         }));
         let n_clusters = arch.clusters.len();
         let snapshot_every = cfg.snapshot_every_s;
@@ -168,26 +185,36 @@ impl<'a, S: ServeSched> Server<'a, S> {
             next_id: 0,
             rr: 0,
             cluster_max_temp_k: vec![arch.t_ambient; n_clusters],
+            epoch_peak_temp_k: arch.t_ambient,
             on_snapshot: None,
         }
     }
 
     /// Record every offered request and every mapping decision to `w`.
-    pub fn with_replay(mut self, w: Rc<RefCell<ReplayWriter>>) -> Self {
+    pub fn with_replay(mut self, w: Arc<Mutex<ReplayWriter>>) -> Self {
         let w_cb = w.clone();
         self.sim.on_mapped = Some(Box::new(move |job, profile| {
-            let _ = w_cb.borrow_mut().decision(job, profile);
+            let _ = w_cb.lock().unwrap().decision(job, profile);
         }));
         self.replay = Some(w);
         self
     }
 
-    fn offer(&mut self, req: ServeRequest) {
+    /// Share an `ExecProfile` memo table with the engine (cluster shards
+    /// all pass clones of one cache).
+    pub fn set_profile_cache(&mut self, cache: ProfileCache) {
+        self.sim.set_profile_cache(cache);
+    }
+
+    /// Offer one request at the service boundary. Requests with a future
+    /// `t_s` (batched ahead by the cluster router) are admitted now but
+    /// held until their arrival time before dispatch.
+    pub fn offer(&mut self, req: ServeRequest) {
         if let Some(w) = &self.replay {
-            let _ = w.borrow_mut().request(&req);
+            let _ = w.lock().unwrap().request(&req);
         }
         let ti = req.tenant.index();
-        let mut hub = self.hub.borrow_mut();
+        let mut hub = self.hub.lock().unwrap();
         hub.on_offered(req.tenant);
         if self.queues[ti].len() >= self.cfg.tenant_queue_cap {
             hub.on_reject(req.tenant);
@@ -207,12 +234,27 @@ impl<'a, S: ServeSched> Server<'a, S> {
                 while let Some(p) = q.front() {
                     if now - p.req.t_s > self.cfg.max_wait_s {
                         let p = q.pop_front().unwrap();
-                        self.hub.borrow_mut().on_shed(p.req.tenant, p.id);
+                        self.hub.lock().unwrap().on_shed(p.req.tenant, p.id);
                     } else {
                         break;
                     }
                 }
             }
+        }
+        // SLO-ordered pressure shedding (energy → balanced → exec), and
+        // no new dispatch while the engine reports pressure: work stays
+        // at the service layer where it can still be shed.
+        let pressure = self.cfg.pressure_depth > 0 && self.sim.under_pressure();
+        if pressure {
+            let mut backlog = self.service_depth() + self.sim.queue_len();
+            for tc in [TenantClass::Energy, TenantClass::Balanced, TenantClass::Exec] {
+                while backlog > self.cfg.pressure_depth {
+                    let Some(p) = self.queues[tc.index()].pop_front() else { break };
+                    self.hub.lock().unwrap().on_shed_pressure(tc, p.id);
+                    backlog -= 1;
+                }
+            }
+            return;
         }
         // Round-robin over tenants into the engine FIFO, bounded by its
         // free room — explicit backpressure instead of a hidden backlog.
@@ -221,19 +263,25 @@ impl<'a, S: ServeSched> Server<'a, S> {
             let mut dispatched = false;
             for k in 0..TenantClass::COUNT {
                 let ti = (self.rr + k) % TenantClass::COUNT;
-                if let Some(p) = self.queues[ti].pop_front() {
-                    self.rr = (ti + 1) % TenantClass::COUNT;
-                    self.sim.sched.register_pref(p.id, p.req.tenant.pref());
-                    self.sim.inject_job(Job {
-                        id: p.id,
-                        dcg: self.zoo.dcg(p.req.model),
-                        images: p.req.images,
-                        arrival_s: p.req.t_s,
-                    });
-                    room -= 1;
-                    dispatched = true;
-                    break;
+                let ready = self.queues[ti]
+                    .front()
+                    .map(|p| p.req.t_s <= now + 1e-9)
+                    .unwrap_or(false);
+                if !ready {
+                    continue;
                 }
+                let p = self.queues[ti].pop_front().unwrap();
+                self.rr = (ti + 1) % TenantClass::COUNT;
+                self.sim.sched.register_pref(p.id, p.req.tenant.pref());
+                self.sim.inject_job(Job {
+                    id: p.id,
+                    dcg: self.zoo.dcg(p.req.model),
+                    images: p.req.images,
+                    arrival_s: p.req.t_s,
+                });
+                room -= 1;
+                dispatched = true;
+                break;
             }
             if !dispatched {
                 break;
@@ -246,10 +294,11 @@ impl<'a, S: ServeSched> Server<'a, S> {
     }
 
     fn post_step(&mut self) {
-        self.hub.borrow_mut().sample_depths(self.service_depth(), self.sim.queue_len());
+        self.hub.lock().unwrap().sample_depths(self.service_depth(), self.sim.queue_len());
         for (c, &t) in self.sim.temps().iter().enumerate() {
             let cl = self.arch.chiplets[c].pim as usize;
             self.cluster_max_temp_k[cl] = self.cluster_max_temp_k[cl].max(t);
+            self.epoch_peak_temp_k = self.epoch_peak_temp_k.max(t);
         }
         if self.cfg.snapshot_every_s > 0.0 && self.sim.now() + 1e-9 >= self.next_snapshot_s {
             let snap = self.snapshot_json();
@@ -262,7 +311,7 @@ impl<'a, S: ServeSched> Server<'a, S> {
     }
 
     fn snapshot_json(&self) -> Json {
-        let hub = self.hub.borrow();
+        let hub = self.hub.lock().unwrap();
         let (offered, admitted, rejected, shed, completed) = hub.totals();
         Json::obj(vec![
             ("t_s", Json::Num(self.sim.now())),
@@ -281,35 +330,105 @@ impl<'a, S: ServeSched> Server<'a, S> {
         ])
     }
 
+    /// One 100 ms service step: pull source arrivals, dispatch, advance
+    /// the engine, sample telemetry.
+    fn tick(&mut self) {
+        let dt = self.sim.dt_s();
+        let step_end = self.sim.now() + dt;
+        for req in self.source.arrivals_until(step_end) {
+            self.offer(req);
+        }
+        self.dispatch(step_end);
+        self.sim.step();
+        self.post_step();
+    }
+
+    /// Advance the service by `steps` engine steps (cluster epoch drive).
+    pub fn advance(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.tick();
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    /// Source drained, queues empty, engine idle.
+    pub fn is_drained(&self) -> bool {
+        self.source.peek().is_none() && self.service_depth() == 0 && self.sim.is_idle()
+    }
+
+    pub fn set_power_cap_w(&mut self, cap: Option<f64>) {
+        self.sim.set_power_cap_w(cap);
+    }
+
+    /// Package power of the most recent step (W).
+    pub fn power_w(&self) -> f64 {
+        self.sim.power_w()
+    }
+
+    pub fn any_throttled(&self) -> bool {
+        self.sim.throttled().iter().any(|&t| t)
+    }
+
+    pub fn cap_gated(&self) -> bool {
+        self.sim.cap_gated()
+    }
+
+    /// Tenant-queue backlog (requests not yet dispatched to the engine).
+    pub fn queue_depth(&self) -> usize {
+        self.service_depth()
+    }
+
+    /// Engine FIFO depth.
+    pub fn fifo_depth(&self) -> usize {
+        self.sim.queue_len()
+    }
+
+    pub fn completed_total(&self) -> u64 {
+        self.hub.lock().unwrap().totals().4
+    }
+
+    /// Shared handle to the telemetry hub (cluster merges these).
+    pub fn hub_handle(&self) -> Arc<Mutex<TelemetryHub>> {
+        self.hub.clone()
+    }
+
+    /// Peak chiplet temperature since the previous call (epoch telemetry
+    /// for the cluster arbiter); resets the epoch window to the current
+    /// temperature field.
+    pub fn take_epoch_peak_temp_k(&mut self) -> f64 {
+        let current = self
+            .sim
+            .temps()
+            .iter()
+            .fold(self.arch.t_ambient, |m, &t| m.max(t));
+        std::mem::replace(&mut self.epoch_peak_temp_k, current)
+    }
+
     /// Drive the service to its horizon (or until a finite source drains
     /// and all admitted work completes) and produce the final report.
     pub fn run(mut self) -> ServeReport {
         let dt = self.sim.dt_s();
         let steps = (self.cfg.duration_s / dt).ceil() as usize;
         for _ in 0..steps {
-            let step_end = self.sim.now() + dt;
-            for req in self.source.arrivals_until(step_end) {
-                self.offer(req);
-            }
-            self.dispatch(step_end);
-            self.sim.step();
-            self.post_step();
-            if self.source.peek().is_none()
-                && self.service_depth() == 0
-                && self.sim.is_idle()
-            {
+            self.tick();
+            if self.is_drained() {
                 break;
             }
         }
         self.finish()
     }
 
-    fn finish(mut self) -> ServeReport {
+    /// Produce the final report (callers driving the server externally
+    /// via [`Server::advance`] call this directly).
+    pub fn finish(mut self) -> ServeReport {
         if let Some(w) = &self.replay {
-            let _ = w.borrow_mut().flush();
+            let _ = w.lock().unwrap().flush();
         }
         let (json, digest) = {
-            let hub = self.hub.borrow();
+            let hub = self.hub.lock().unwrap();
             let (offered, admitted, rejected, shed, completed) = hub.totals();
             let now = self.sim.now();
             let json = Json::obj(vec![
@@ -321,7 +440,9 @@ impl<'a, S: ServeSched> Server<'a, S> {
                 ("admitted", Json::Num(admitted as f64)),
                 ("rejected", Json::Num(rejected as f64)),
                 ("shed", Json::Num(shed as f64)),
+                ("shed_pressure", Json::Num(hub.shed_pressure_total() as f64)),
                 ("completed", Json::Num(completed as f64)),
+                ("images_done", Json::Num(hub.images_done_total() as f64)),
                 ("throughput_jobs_s", Json::Num(completed as f64 / now.max(1e-9))),
                 ("latency_e2e_s", hub.e2e_all.to_json()),
                 ("latency_exec_s", hub.exec_all.to_json()),
@@ -330,6 +451,7 @@ impl<'a, S: ServeSched> Server<'a, S> {
                 ("fifo_depth_max", Json::Num(hub.fifo_depth_max as f64)),
                 ("host_stalls", Json::Num(self.sim.host_stalls() as f64)),
                 ("throttle_events", Json::Num(self.sim.throttle_events() as f64)),
+                ("cap_gated_steps", Json::Num(self.sim.cap_gated_steps() as f64)),
                 ("max_temp_k", Json::Num(self.sim.max_temp_k())),
                 ("cluster_max_temp_k", Json::arr_f64(&self.cluster_max_temp_k)),
                 ("system_energy_j", Json::Num(self.sim.system_energy_j())),
@@ -354,6 +476,7 @@ mod tests {
             tenant_queue_cap: 16,
             max_wait_s: 20.0,
             snapshot_every_s: 10.0,
+            pressure_depth: 48,
             sim: SimConfig {
                 warmup_s: 0.0,
                 max_images: 500,
@@ -405,6 +528,45 @@ mod tests {
         // The engine's silent backlog must stay silent — serve never
         // overfills the FIFO.
         assert_eq!(report.json.get("host_stalls").as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn pressure_shedding_drops_energy_class_first() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let mut cfg = quick_serve_cfg(5);
+        cfg.max_wait_s = 0.0; // isolate pressure sheds from deadline sheds
+        cfg.pressure_depth = 4;
+        let mut server =
+            Server::new(&arch, sched, Box::new(crate::serve::ingest::NullSource), cfg);
+        // An impossible 0 W cap puts the engine under pressure after one
+        // step establishes nonzero (leakage) package power.
+        server.set_power_cap_w(Some(0.0));
+        server.advance(2);
+        assert!(server.cap_gated(), "cap must be gating by now");
+        for tenant in [TenantClass::Exec, TenantClass::Balanced, TenantClass::Energy] {
+            for _ in 0..4 {
+                server.offer(ServeRequest {
+                    t_s: 0.0,
+                    tenant,
+                    model: crate::workload::DnnModel::ResNet18,
+                    images: 100,
+                });
+            }
+        }
+        server.advance(1);
+        // Backlog 12 must shrink to pressure_depth 4 in SLO order:
+        // all 4 energy requests go, then all 4 balanced, exec survives.
+        let hub = server.hub_handle();
+        let hub = hub.lock().unwrap();
+        assert_eq!(hub.tenants[TenantClass::Energy.index()].shed_pressure, 4);
+        assert_eq!(hub.tenants[TenantClass::Balanced.index()].shed_pressure, 4);
+        assert_eq!(hub.tenants[TenantClass::Exec.index()].shed_pressure, 0);
+        assert_eq!(hub.shed_pressure_total(), 8);
+        drop(hub);
+        assert_eq!(server.queue_depth(), 4, "exec requests must survive");
+        // Under pressure nothing is fed to the engine FIFO.
+        assert_eq!(server.fifo_depth(), 0);
     }
 
     #[test]

@@ -103,6 +103,21 @@ impl Histogram {
         self.max
     }
 
+    /// Fold another histogram into this one. Bucket counts add
+    /// elementwise (both sides share the fixed LO/HI/NB layout), so a
+    /// merge of per-shard histograms yields exactly the bucket contents
+    /// of a single-stream histogram over the union of the samples —
+    /// quantiles agree exactly, the mean up to float summation order.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("count", Json::Num(self.total as f64)),
@@ -133,6 +148,9 @@ pub struct TenantStats {
     pub rejected: u64,
     /// Admitted but dropped before dispatch (waited past the deadline).
     pub shed: u64,
+    /// Dropped by SLO-ordered load shedding under thermal/power pressure
+    /// (energy class first, then balanced, then exec).
+    pub shed_pressure: u64,
     pub completed: u64,
     pub images_done: u64,
     pub e2e_s: Histogram,
@@ -140,9 +158,27 @@ pub struct TenantStats {
     pub energy_j: Histogram,
 }
 
+impl TenantStats {
+    /// Fold another tenant's stats into this one (cross-shard merge).
+    pub fn merge(&mut self, other: &TenantStats) {
+        self.offered += other.offered;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.shed += other.shed;
+        self.shed_pressure += other.shed_pressure;
+        self.completed += other.completed;
+        self.images_done += other.images_done;
+        self.e2e_s.merge(&other.e2e_s);
+        self.exec_s.merge(&other.exec_s);
+        self.energy_j.merge(&other.energy_j);
+    }
+}
+
 /// The telemetry hub: one per server run. Shared with the engine's
-/// completion callback via `Rc<RefCell<…>>`.
-#[derive(Debug, Default)]
+/// completion callback via `Arc<Mutex<…>>` so shard workers can report
+/// from their own threads; the cluster merges per-shard hubs at the end
+/// of the run in shard-id order.
+#[derive(Clone, Debug, Default)]
 pub struct TelemetryHub {
     pub tenants: [TenantStats; TenantClass::COUNT],
     pub e2e_all: Histogram,
@@ -176,6 +212,11 @@ impl TelemetryHub {
 
     pub fn on_shed(&mut self, tenant: TenantClass, job_id: u64) {
         self.tenants[tenant.index()].shed += 1;
+        self.tenant_of.remove(&job_id);
+    }
+
+    pub fn on_shed_pressure(&mut self, tenant: TenantClass, job_id: u64) {
+        self.tenants[tenant.index()].shed_pressure += 1;
         self.tenant_of.remove(&job_id);
     }
 
@@ -214,6 +255,28 @@ impl TelemetryHub {
         (o, a, r, s, c)
     }
 
+    pub fn shed_pressure_total(&self) -> u64 {
+        self.tenants.iter().map(|t| t.shed_pressure).sum()
+    }
+
+    pub fn images_done_total(&self) -> u64 {
+        self.tenants.iter().map(|t| t.images_done).sum()
+    }
+
+    /// Fold another hub into this one. Tenant arrays are fixed-order, so
+    /// merging per-shard hubs in shard-id order is deterministic; the
+    /// `tenant_of` lookup map is runtime state and is not merged.
+    pub fn merge(&mut self, other: &TelemetryHub) {
+        for (t, o) in self.tenants.iter_mut().zip(other.tenants.iter()) {
+            t.merge(o);
+        }
+        self.e2e_all.merge(&other.e2e_all);
+        self.exec_all.merge(&other.exec_all);
+        self.energy_all.merge(&other.energy_all);
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        self.fifo_depth_max = self.fifo_depth_max.max(other.fifo_depth_max);
+    }
+
     /// Per-tenant JSON, in fixed `TenantClass::ALL` order.
     pub fn tenants_json(&self) -> Json {
         Json::obj(
@@ -228,6 +291,7 @@ impl TelemetryHub {
                             ("admitted", Json::Num(t.admitted as f64)),
                             ("rejected", Json::Num(t.rejected as f64)),
                             ("shed", Json::Num(t.shed as f64)),
+                            ("shed_pressure", Json::Num(t.shed_pressure as f64)),
                             ("completed", Json::Num(t.completed as f64)),
                             ("images_done", Json::Num(t.images_done as f64)),
                             ("latency_e2e_s", t.e2e_s.to_json()),
@@ -244,12 +308,7 @@ impl TelemetryHub {
 /// FNV-1a 64-bit digest of a string, rendered as 16 hex chars. Used to
 /// compare two runs' final telemetry byte-for-byte.
 pub fn digest64(s: &str) -> String {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in s.as_bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    format!("{h:016x}")
+    format!("{:016x}", crate::util::stats::fnv1a64(s.as_bytes()))
 }
 
 #[cfg(test)]
@@ -315,6 +374,60 @@ mod tests {
         let (offered, admitted, rejected, shed, completed) = hub.totals();
         assert_eq!((offered, admitted, rejected, shed, completed), (3, 2, 1, 0, 1));
         assert_eq!(hub.e2e_all.count(), 1);
+    }
+
+    #[test]
+    fn merged_histograms_match_single_stream() {
+        // Deterministic pseudo-samples spanning several decades.
+        let samples: Vec<f64> = (0..4000u64)
+            .map(|i| ((i.wrapping_mul(2_654_435_761) % 100_000) + 1) as f64 / 1000.0)
+            .collect();
+        let mut single = Histogram::new();
+        let mut shards = [
+            Histogram::new(),
+            Histogram::new(),
+            Histogram::new(),
+            Histogram::new(),
+        ];
+        for (i, &x) in samples.iter().enumerate() {
+            single.record(x);
+            shards[i % 4].record(x);
+        }
+        let mut merged = Histogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        // Bucket counts are identical, so quantiles agree exactly.
+        assert_eq!(merged.count(), single.count());
+        for q in [0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), single.quantile(q), "q={q}");
+        }
+        assert_eq!(merged.min, single.min);
+        assert_eq!(merged.max, single.max);
+        // Mean agrees up to float summation order.
+        let rel = (merged.mean() - single.mean()).abs() / single.mean();
+        assert!(rel < 1e-9, "mean rel err {rel}");
+    }
+
+    #[test]
+    fn hub_merge_sums_counters_and_pressure_sheds() {
+        let mut a = TelemetryHub::new();
+        let mut b = TelemetryHub::new();
+        a.on_offered(TenantClass::Energy);
+        a.on_admit(TenantClass::Energy, 1);
+        a.on_shed_pressure(TenantClass::Energy, 1);
+        b.on_offered(TenantClass::Energy);
+        b.on_admit(TenantClass::Energy, 7);
+        b.on_shed_pressure(TenantClass::Energy, 7);
+        b.on_offered(TenantClass::Exec);
+        b.on_reject(TenantClass::Exec);
+        b.sample_depths(5, 9);
+        a.merge(&b);
+        let e = &a.tenants[TenantClass::Energy.index()];
+        assert_eq!((e.offered, e.admitted, e.shed_pressure), (2, 2, 2));
+        assert_eq!(a.tenants[TenantClass::Exec.index()].rejected, 1);
+        assert_eq!(a.shed_pressure_total(), 2);
+        assert_eq!((a.queue_depth_max, a.fifo_depth_max), (5, 9));
     }
 
     #[test]

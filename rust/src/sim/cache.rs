@@ -1,0 +1,163 @@
+//! Shared memoization of [`ExecProfile`] computation.
+//!
+//! `ExecProfile::compute` is deterministic in `(model, mapping)` — the
+//! architecture and compute model are fixed for a run — so recurring
+//! models mapped onto the same chiplet set produce byte-identical
+//! profiles. The cache keys on an FNV-1a fingerprint of the model name
+//! plus every `(chiplet, bits)` part of the mapping, and is shared
+//! read-mostly across cluster shards behind an `RwLock` (all shards of a
+//! cluster instantiate the same `Arch`, so profiles are interchangeable).
+//!
+//! Hit/miss counters are atomics whose split between shards depends on
+//! thread interleaving; they are surfaced for observability but MUST be
+//! kept out of any digested report (the cached profiles themselves are
+//! deterministic, so simulation results are unaffected).
+
+use super::mapping::{ExecProfile, Mapping};
+use crate::arch::Arch;
+use crate::pim::ComputeModel;
+use crate::util::stats::Fnv64;
+use crate::workload::Dcg;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+struct CacheInner {
+    map: RwLock<HashMap<u64, Arc<ExecProfile>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Cheaply clonable handle to a shared profile memo table.
+#[derive(Clone)]
+pub struct ProfileCache {
+    inner: Arc<CacheInner>,
+}
+
+impl ProfileCache {
+    pub fn new() -> ProfileCache {
+        ProfileCache {
+            inner: Arc::new(CacheInner {
+                map: RwLock::new(HashMap::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Fingerprint of a (model, mapping) pair: the model name and the
+    /// exact `(chiplet, bits)` split of every layer.
+    pub fn key(dcg: &Dcg, mapping: &Mapping) -> u64 {
+        let mut h = Fnv64::new();
+        h.write(dcg.model.name().as_bytes());
+        for la in &mapping.layers {
+            h.write_u64(u64::MAX); // layer delimiter
+            for &(c, b) in &la.parts {
+                h.write_u64(c as u64);
+                h.write_u64(b);
+            }
+        }
+        h.finish()
+    }
+
+    /// Return the memoized profile for this (model, mapping) pair, or
+    /// compute and insert it. Racing inserts of the same key are benign:
+    /// both sides compute identical profiles.
+    pub fn get_or_compute(
+        &self,
+        arch: &Arch,
+        cm: &ComputeModel,
+        dcg: &Dcg,
+        mapping: &Mapping,
+    ) -> Arc<ExecProfile> {
+        let key = Self::key(dcg, mapping);
+        if let Some(p) = self.inner.map.read().unwrap().get(&key) {
+            self.inner.hits.fetch_add(1, Ordering::Relaxed);
+            return p.clone();
+        }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        let p = Arc::new(ExecProfile::compute(arch, cm, dcg, mapping));
+        self.inner.map.write().unwrap().entry(key).or_insert_with(|| p.clone());
+        p
+    }
+
+    /// (hits, misses) — observability only; the split is
+    /// thread-interleaving-dependent, keep it out of digested reports.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.inner.hits.load(Ordering::Relaxed),
+            self.inner.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for ProfileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noi::NoiTopology;
+    use crate::workload::{DnnModel, ModelZoo};
+
+    fn mapping_all_on(c: usize, dcg: &Dcg) -> Mapping {
+        Mapping {
+            layers: dcg
+                .layers
+                .iter()
+                .map(|l| super::super::mapping::LayerAssignment {
+                    parts: vec![(c, l.weight_bits)],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_and_distinguishes_mappings() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let cm = ComputeModel::default();
+        let zoo = ModelZoo::new();
+        let dcg = zoo.dcg(DnnModel::ResNet18);
+        let m0 = mapping_all_on(0, &dcg);
+        let m1 = mapping_all_on(1, &dcg);
+        let cache = ProfileCache::new();
+
+        let a = cache.get_or_compute(&arch, &cm, &dcg, &m0);
+        let b = cache.get_or_compute(&arch, &cm, &dcg, &m0);
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(a.frame_latency_s, b.frame_latency_s);
+
+        let c = cache.get_or_compute(&arch, &cm, &dcg, &m1);
+        assert_eq!(cache.stats(), (1, 2));
+        assert_eq!(cache.len(), 2);
+        // Direct computation must agree with the cached value.
+        let direct = ExecProfile::compute(&arch, &cm, &dcg, &m1);
+        assert_eq!(c.frame_latency_s, direct.frame_latency_s);
+        assert_eq!(c.frame_energy_j, direct.frame_energy_j);
+    }
+
+    #[test]
+    fn key_is_mapping_sensitive() {
+        let zoo = ModelZoo::new();
+        let dcg = zoo.dcg(DnnModel::ResNet18);
+        let m0 = mapping_all_on(0, &dcg);
+        let m1 = mapping_all_on(1, &dcg);
+        assert_eq!(ProfileCache::key(&dcg, &m0), ProfileCache::key(&dcg, &m0));
+        assert_ne!(ProfileCache::key(&dcg, &m0), ProfileCache::key(&dcg, &m1));
+        let other = zoo.dcg(DnnModel::MobileNetV3Large);
+        let mo = mapping_all_on(0, &other);
+        assert_ne!(ProfileCache::key(&dcg, &m0), ProfileCache::key(&other, &mo));
+    }
+}

@@ -8,6 +8,7 @@
 //! throttle stalls perturb that profile — exactly the split the paper's
 //! primary/secondary reward design (§4.3.3) relies on.
 
+use super::cache::ProfileCache;
 use super::mapping::{ExecProfile, Mapping};
 use super::metrics::{JobStats, SimResult, TracePoint};
 use crate::arch::Arch;
@@ -129,6 +130,18 @@ pub struct Simulator<'a, S: Scheduler> {
     max_temp_k: f64,
     system_energy_j: f64,
     trace: Vec<TracePoint>,
+    /// Package power cap (W). When the previous step's total power
+    /// exceeded it, `map_jobs` declines to map new work until power falls
+    /// back under the cap (the cluster arbiter's admission-side lever).
+    power_cap_w: Option<f64>,
+    /// Total package power of the most recent step (W).
+    last_power_w: f64,
+    /// Whether the cap gated mapping during the most recent step.
+    cap_gated: bool,
+    /// Steps on which queued work was held back by the power cap.
+    cap_gated_steps: u64,
+    /// Optional shared (model, mapping) → profile memo table.
+    profile_cache: Option<ProfileCache>,
     /// Callback invoked when a job is mapped: (job, ideal profile).
     pub on_mapped: Option<Box<dyn FnMut(&Job, &ExecProfile) + 'a>>,
     /// Callback on completion: full stats.
@@ -181,6 +194,11 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
             max_temp_k: arch.t_ambient,
             system_energy_j: 0.0,
             trace: Vec::new(),
+            power_cap_w: None,
+            last_power_w: 0.0,
+            cap_gated: false,
+            cap_gated_steps: 0,
+            profile_cache: None,
             cfg,
             on_mapped: None,
             on_completed: None,
@@ -239,6 +257,37 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         self.queue.host_stalls
     }
 
+    /// Set (or clear) the package power cap enforced at mapping time.
+    pub fn set_power_cap_w(&mut self, cap: Option<f64>) {
+        self.power_cap_w = cap;
+    }
+
+    /// Total package power of the most recent step (W).
+    pub fn power_w(&self) -> f64 {
+        self.last_power_w
+    }
+
+    /// Whether the power cap gated mapping on the most recent step.
+    pub fn cap_gated(&self) -> bool {
+        self.cap_gated
+    }
+
+    pub fn cap_gated_steps(&self) -> u64 {
+        self.cap_gated_steps
+    }
+
+    /// Thermal or power pressure: any throttled chiplet, or the power cap
+    /// currently gating admission. The serve layer consults this for
+    /// SLO-ordered load shedding.
+    pub fn under_pressure(&self) -> bool {
+        self.cap_gated || self.throttled.iter().any(|&t| t)
+    }
+
+    /// Share an [`ExecProfile`] memo table (e.g. across cluster shards).
+    pub fn set_profile_cache(&mut self, cache: ProfileCache) {
+        self.profile_cache = Some(cache);
+    }
+
     /// Inject an externally-generated job (open-loop mode). The job lands
     /// in the backlog and is admitted to the FIFO on the next step; callers
     /// that want explicit backpressure should check [`Simulator::queue_room`]
@@ -277,6 +326,21 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
     /// "models are mapped continuously until the queue is empty or there
     /// are insufficient resources").
     fn map_jobs(&mut self) {
+        // Power-cap admission gate: while the previous step's package
+        // power exceeds the arbiter-assigned cap, hold queued work back
+        // (running jobs are never interrupted — the cap acts on admission,
+        // the thermal throttle latch on execution).
+        if let Some(cap) = self.power_cap_w {
+            self.cap_gated = self.last_power_w > cap;
+            if self.cap_gated {
+                if !self.queue.is_empty() {
+                    self.cap_gated_steps += 1;
+                }
+                return;
+            }
+        } else {
+            self.cap_gated = false;
+        }
         while let Some(head) = self.queue.front() {
             let snap = self.snapshot();
             let Some(mapping) = self.sched.schedule(head, &snap) else { break };
@@ -299,7 +363,12 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         let total_assigned: u64 = bits.iter().sum();
         assert_eq!(total_assigned, job.dcg.total_weight_bits(), "incomplete mapping committed");
 
-        let profile = ExecProfile::compute(self.arch, &self.cm, &job.dcg, &mapping);
+        let profile = match &self.profile_cache {
+            Some(cache) => {
+                (*cache.get_or_compute(self.arch, &self.cm, &job.dcg, &mapping)).clone()
+            }
+            None => ExecProfile::compute(self.arch, &self.cm, &job.dcg, &mapping),
+        };
         if let Some(cb) = self.on_mapped.as_mut() {
             cb(&job, &profile);
         }
@@ -467,7 +536,8 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         self.admit();
         self.map_jobs();
         let power = self.progress(dt);
-        self.system_energy_j += power.iter().sum::<f64>() * dt;
+        self.last_power_w = power.iter().sum::<f64>();
+        self.system_energy_j += self.last_power_w * dt;
         self.thermal_update(&power, dt);
         if self.cfg.record_trace {
             let mut cl_max = [f64::MIN; 4];
@@ -714,6 +784,38 @@ mod tests {
         assert_eq!(r.jobs.len(), 1, "injected job must complete");
         assert_eq!(r.jobs[0].id, 7);
         assert!(r.jobs[0].exec_s > 0.0);
+    }
+
+    #[test]
+    fn power_cap_gates_mapping_until_lifted() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let cfg = quick_cfg(1.0);
+        let mut sim = Simulator::open_loop(&arch, sched, cfg);
+        // One idle step establishes a nonzero package power (leakage),
+        // which an impossible 0 W cap then gates against.
+        sim.step();
+        assert!(sim.power_w() > 0.0, "leakage power expected");
+        sim.set_power_cap_w(Some(0.0));
+        let zoo = ModelZoo::new();
+        sim.inject_job(Job {
+            id: 1,
+            dcg: zoo.dcg(crate::workload::DnnModel::ResNet18),
+            images: 100,
+            arrival_s: 0.0,
+        });
+        for _ in 0..20 {
+            sim.step();
+        }
+        assert_eq!(sim.active_count(), 0, "cap must hold the job back");
+        assert_eq!(sim.queue_len(), 1);
+        assert!(sim.cap_gated());
+        assert!(sim.cap_gated_steps() > 0);
+        assert!(sim.under_pressure());
+        // Lifting the cap lets the job map and finish.
+        sim.set_power_cap_w(None);
+        let (r, _) = sim.run_drain(120.0);
+        assert_eq!(r.jobs.len(), 1);
     }
 
     #[test]

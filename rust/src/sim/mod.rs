@@ -7,10 +7,12 @@
 //! at 100 ms and throttles chiplets that violate Eq. 2. Metrics are
 //! collected after a warm-up period.
 
+pub mod cache;
 pub mod engine;
 pub mod mapping;
 pub mod metrics;
 
+pub use cache::ProfileCache;
 pub use engine::{SimConfig, Simulator};
 pub use mapping::{ExecProfile, LayerAssignment, Mapping};
 pub use metrics::{JobStats, SimResult};

@@ -1,5 +1,46 @@
 //! Small statistics helpers shared by the simulator metrics, the bench
-//! harness, and the experiment reports.
+//! harness, and the experiment reports, plus the FNV-1a hash used for
+//! telemetry digests, the profile memo cache, and consistent-hash routing.
+
+/// Incremental FNV-1a 64-bit hasher. Deterministic across platforms and
+/// runs — the repo's fingerprint for telemetry digests, mapping keys, and
+/// hash-ring points (never used for adversarial input).
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64-bit hash of a byte string.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
 
 /// Online mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]

@@ -1,0 +1,131 @@
+//! Integration: the sharded serving cluster — determinism of the merged
+//! fleet report under real threads, throughput scaling with shard count,
+//! and the merged-report contract (budget conservation, routing totals).
+
+use thermos::cluster::{run_cluster, ClusterConfig, ClusterReport, ShardSchedSpec};
+use thermos::serve::{PoissonSource, ServeConfig};
+use thermos::sim::SimConfig;
+use thermos::util::json::Json;
+
+const MAX_IMAGES: u64 = 500;
+
+fn cluster_cfg(shards: usize, duration_s: f64, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        duration_s,
+        drain_max_s: 20.0,
+        serve: ServeConfig {
+            duration_s,
+            tenant_queue_cap: 32,
+            max_wait_s: 30.0,
+            snapshot_every_s: 0.0,
+            pressure_depth: 48,
+            sim: SimConfig {
+                warmup_s: 0.0,
+                max_images: MAX_IMAGES,
+                seed,
+                ..SimConfig::default()
+            },
+        },
+        sched: ShardSchedSpec::Simba,
+        ..ClusterConfig::default()
+    }
+}
+
+fn run(shards: usize, rate: f64, duration_s: f64, seed: u64) -> ClusterReport {
+    let cfg = cluster_cfg(shards, duration_s, seed);
+    let source = Box::new(PoissonSource::new(rate, 60, MAX_IMAGES, [1.0, 1.0, 1.0], seed));
+    run_cluster(cfg, source)
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).as_f64().unwrap_or(0.0)
+}
+
+#[test]
+fn four_shard_same_seed_reproduces_merged_digest() {
+    let a = run(4, 4.0, 30.0, 42);
+    let b = run(4, 4.0, 30.0, 42);
+    // Real worker threads, byte-identical fleet telemetry: the epoch
+    // barrier + sorted merge make interleaving invisible.
+    assert_eq!(
+        a.json.to_string_compact(),
+        b.json.to_string_compact(),
+        "same-seed cluster runs diverged"
+    );
+    assert_eq!(a.digest, b.digest);
+    assert_eq!(a.snapshots.len(), b.snapshots.len());
+    assert!(num(&a.json, "completed") > 0.0, "cluster completed no jobs");
+
+    let c = run(4, 4.0, 30.0, 43);
+    assert_ne!(a.digest, c.digest, "different seeds must change the digest");
+}
+
+#[test]
+fn throughput_scales_with_shards() {
+    // 8 jobs/s saturates one engine; adding shards adds both compute and
+    // power budget, so completed image volume must grow.
+    let done: Vec<f64> = [1usize, 2, 4]
+        .iter()
+        .map(|&s| num(&run(s, 8.0, 40.0, 7).json, "images_done"))
+        .collect();
+    assert!(done[0] > 0.0, "single shard did no work");
+    // Soft monotonicity (routing skew can cost a few percent)...
+    assert!(done[1] >= done[0] * 0.95, "2 shards regressed: {done:?}");
+    assert!(done[2] >= done[1] * 0.95, "4 shards regressed: {done:?}");
+    // ...and strictly more at the endpoints.
+    assert!(done[2] > done[0], "sharding did not scale: {done:?}");
+}
+
+#[test]
+fn merged_report_contract_holds() {
+    let r = run(2, 3.0, 20.0, 5);
+    let j = &r.json;
+    for key in [
+        "scheduler",
+        "source",
+        "shards",
+        "offered",
+        "coalesced_requests",
+        "routed_per_shard",
+        "completed",
+        "images_done",
+        "latency_e2e_s",
+        "tenants",
+        "power_budget_w",
+        "arbiter",
+        "shards_detail",
+    ] {
+        assert!(!matches!(j.get(key), Json::Null), "missing merged field `{key}`");
+    }
+    // Router conservation: per-shard routed counts sum to offered.
+    let routed: f64 = j
+        .get("routed_per_shard")
+        .as_arr()
+        .expect("routed_per_shard array")
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .sum();
+    assert_eq!(routed, num(j, "offered"));
+    // Arbiter conservation: final caps sum to the package budget.
+    let caps: f64 = j
+        .get("arbiter")
+        .get("final_caps_w")
+        .as_arr()
+        .expect("final_caps_w array")
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .sum();
+    assert!((caps - num(j, "power_budget_w")).abs() < 1e-6);
+    // The epoch barrier ran every epoch.
+    assert_eq!(num(j.get("arbiter"), "epochs"), 20.0);
+    // Per-shard detail rows agree with the merge.
+    let detail_done: f64 = j
+        .get("shards_detail")
+        .as_arr()
+        .expect("shards_detail array")
+        .iter()
+        .map(|s| num(s, "images_done"))
+        .sum();
+    assert_eq!(detail_done, num(j, "images_done"));
+}

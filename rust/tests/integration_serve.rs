@@ -3,8 +3,7 @@
 //! byte-identical final telemetry report (asserted via its digest). Also
 //! checks the report carries every field the ops story needs.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use thermos::arch::Arch;
 use thermos::noi::NoiTopology;
 use thermos::sched::policy::NativeDdt;
@@ -24,6 +23,7 @@ fn serve_cfg(seed: u64) -> ServeConfig {
         tenant_queue_cap: 32,
         max_wait_s: 25.0,
         snapshot_every_s: 20.0,
+        pressure_depth: 48,
         sim: SimConfig { warmup_s: 0.0, max_images: 800, seed, ..SimConfig::default() },
     }
 }
@@ -45,18 +45,20 @@ fn replay_run(arch: &Arch, trace: &str, seed: u64) -> ServeReport {
 fn recorded_trace_replays_to_identical_telemetry_digest() {
     let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
 
-    // Live run: Poisson traffic, recorded to an in-memory replay log.
-    let writer = Rc::new(RefCell::new(ReplayWriter::in_memory()));
+    // Live run: Poisson traffic, recorded to an in-memory replay log
+    // (the writer handle is `Send` — cluster shards record the same way).
+    let writer = Arc::new(Mutex::new(ReplayWriter::in_memory()));
     let source = Box::new(PoissonSource::new(1.5, 60, 800, [1.0, 1.0, 1.0], 42));
     let live = Server::new(&arch, router(&arch, 42), source, serve_cfg(42))
         .with_replay(writer.clone())
         .run();
     assert!(live.json.get("completed").as_f64().unwrap() > 0.0, "live run completed nothing");
 
-    let trace = Rc::try_unwrap(writer)
+    let trace = Arc::try_unwrap(writer)
         .ok()
         .expect("server must release the replay writer")
         .into_inner()
+        .unwrap()
         .into_string()
         .unwrap();
     assert!(trace.lines().any(|l| l.contains("\"ev\":\"req\"")), "log has requests");
