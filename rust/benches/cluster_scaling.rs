@@ -44,7 +44,7 @@ fn run_point(shards: usize) -> Json {
         ..ClusterConfig::default()
     };
     let source = Box::new(PoissonSource::new(RATE_JOBS_S, 80, MAX_IMAGES, [1.0, 1.0, 1.0], SEED));
-    run_cluster(cfg, source).json
+    run_cluster(cfg, source).expect("cluster run").json
 }
 
 fn main() {

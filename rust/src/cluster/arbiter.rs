@@ -1,18 +1,18 @@
-//! The global power/thermal arbiter: one thread owning the package power
-//! budget, redistributing per-shard caps every telemetry epoch.
+//! The global power/thermal arbiter: owns the package power budget and
+//! redistributes per-shard caps at every telemetry epoch barrier.
 //!
 //! Each epoch every shard reports its peak chiplet temperature; the
 //! arbiter reslices the fixed total budget headroom-weighted — shards far
 //! below the reference temperature (coolest PIM `t_max`, 330 K) gain
 //! budget, shards at or above it fall to a floor share. The sum of caps
-//! always equals the budget (conservation), caps are enforced by the
-//! engine's mapping-time admission gate, and since reports are collected
-//! at a barrier and sorted by shard id, the redistribution is
+//! over *alive* shards always equals the budget (conservation): a dead
+//! shard's slice is reclaimed and redistributed over the survivors until
+//! the supervisor restarts it. Caps are enforced by the engine's
+//! mapping-time admission gate, and since the coordinator collects the
+//! reports at a barrier and sorts them by shard id, the redistribution is
 //! deterministic regardless of thread scheduling.
 
-use super::shard::EpochReport;
 use crate::arch::Arch;
-use std::sync::mpsc::{Receiver, Sender};
 
 /// Sum of every chiplet's peak power (full-rate MACs + leakage) — the
 /// package TDP the default budget is derived from.
@@ -34,8 +34,9 @@ pub struct ArbiterConfig {
     /// Default 330 K — the ReRAM clusters' Eq. 2 limit, the first wall a
     /// heterogeneous package hits.
     pub t_ref_k: f64,
-    /// Fraction of the fair share (`budget / n`) every shard keeps even
-    /// when hot, so a throttled shard can still drain in-flight work.
+    /// Fraction of the fair share (`budget / n_alive`) every alive shard
+    /// keeps even when hot, so a throttled shard can still drain
+    /// in-flight work.
     pub floor_frac: f64,
 }
 
@@ -44,9 +45,6 @@ impl ArbiterConfig {
         ArbiterConfig { budget_w, t_ref_k: 330.0, floor_frac: 0.25 }
     }
 }
-
-/// Caps-and-reports message the arbiter sends back each epoch.
-pub type EpochOutcome = (Vec<f64>, Vec<EpochReport>);
 
 pub struct Arbiter {
     cfg: ArbiterConfig,
@@ -73,14 +71,39 @@ impl Arbiter {
     /// `cap_i = floor + pool · w_i / Σw` with `w_i = max(t_ref − T_i, ε)`.
     /// Conserves the budget exactly (up to float rounding).
     pub fn rebalance(&mut self, peak_temp_k: &[f64]) -> Vec<f64> {
+        let alive = vec![true; self.n];
+        self.rebalance_masked(peak_temp_k, &alive)
+    }
+
+    /// [`Arbiter::rebalance`] with a liveness mask: dead shards get a 0 W
+    /// cap and their slice is reclaimed into the pool shared by the alive
+    /// shards (whose caps still sum to the full budget). With every shard
+    /// alive this is arithmetically identical — same operations in the
+    /// same order — to the unmasked path, so fault-free runs keep their
+    /// exact digests.
+    pub fn rebalance_masked(&mut self, peak_temp_k: &[f64], alive: &[bool]) -> Vec<f64> {
         assert_eq!(peak_temp_k.len(), self.n);
-        let fair = self.cfg.budget_w / self.n as f64;
-        let floor = fair * self.cfg.floor_frac.clamp(0.0, 1.0);
-        let pool = self.cfg.budget_w - floor * self.n as f64;
-        let weights: Vec<f64> =
-            peak_temp_k.iter().map(|&t| (self.cfg.t_ref_k - t).max(0.5)).collect();
-        let wsum: f64 = weights.iter().sum();
-        let new: Vec<f64> = weights.iter().map(|w| floor + pool * w / wsum).collect();
+        assert_eq!(alive.len(), self.n);
+        let n_alive = alive.iter().filter(|&&a| a).count();
+        let new: Vec<f64> = if n_alive == 0 {
+            // Nothing to power: an all-dead epoch parks the budget.
+            vec![0.0; self.n]
+        } else {
+            let fair = self.cfg.budget_w / n_alive as f64;
+            let floor = fair * self.cfg.floor_frac.clamp(0.0, 1.0);
+            let pool = self.cfg.budget_w - floor * n_alive as f64;
+            let weights: Vec<f64> = peak_temp_k
+                .iter()
+                .zip(alive)
+                .map(|(&t, &a)| if a { (self.cfg.t_ref_k - t).max(0.5) } else { 0.0 })
+                .collect();
+            let wsum: f64 = weights.iter().sum();
+            weights
+                .iter()
+                .zip(alive)
+                .map(|(w, &a)| if a { floor + pool * w / wsum } else { 0.0 })
+                .collect()
+        };
         if new
             .iter()
             .zip(self.caps_w.iter())
@@ -91,34 +114,6 @@ impl Arbiter {
         self.epochs += 1;
         self.caps_w = new.clone();
         new
-    }
-
-    /// Arbiter thread body: each epoch, collect exactly one report per
-    /// shard (a barrier), sort by shard id (determinism), rebalance, and
-    /// send the new caps plus the sorted reports to the coordinator.
-    /// Returns itself so the coordinator can read final caps/counters.
-    pub fn run(
-        mut self,
-        reports_rx: Receiver<EpochReport>,
-        outcome_tx: Sender<EpochOutcome>,
-        total_epochs: usize,
-    ) -> Arbiter {
-        for _ in 0..total_epochs {
-            let mut reports = Vec::with_capacity(self.n);
-            for _ in 0..self.n {
-                match reports_rx.recv() {
-                    Ok(r) => reports.push(r),
-                    Err(_) => return self, // a shard died; stop arbitrating
-                }
-            }
-            reports.sort_by_key(|r| r.shard);
-            let peaks: Vec<f64> = reports.iter().map(|r| r.peak_temp_k).collect();
-            let caps = self.rebalance(&peaks);
-            if outcome_tx.send((caps, reports)).is_err() {
-                return self;
-            }
-        }
-        self
     }
 }
 
@@ -159,5 +154,29 @@ mod tests {
         let floor = 4.0 * 0.25;
         assert!(caps[0] < floor + 0.1, "hot shard cap {} ≫ floor {floor}", caps[0]);
         assert!((caps[0] + caps[1] - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dead_shards_lose_their_slice_to_the_survivors() {
+        let mut arb = Arbiter::new(ArbiterConfig::new(12.0), 4);
+        let temps = [305.0, 305.0, 305.0, 305.0];
+        let caps = arb.rebalance_masked(&temps, &[true, false, true, true]);
+        assert_eq!(caps[1], 0.0, "dead shard must hold no budget");
+        let alive_total: f64 = caps.iter().sum();
+        assert!((alive_total - 12.0).abs() < 1e-9, "reclaimed budget not conserved");
+        // Equal temps: survivors split evenly at budget / 3.
+        for &c in [caps[0], caps[2], caps[3]].iter() {
+            assert!((c - 4.0).abs() < 1e-9, "caps {caps:?}");
+        }
+        // Masked all-alive path is bit-identical to the legacy path.
+        let mut a = Arbiter::new(ArbiterConfig::new(12.0), 4);
+        let mut b = Arbiter::new(ArbiterConfig::new(12.0), 4);
+        let temps = [301.0, 317.5, 322.25, 328.0];
+        let ca = a.rebalance(&temps);
+        let cb = b.rebalance_masked(&temps, &[true; 4]);
+        assert_eq!(ca, cb);
+        // All-dead epoch parks the whole budget.
+        let caps = arb.rebalance_masked(&temps, &[false; 4]);
+        assert!(caps.iter().all(|&c| c == 0.0));
     }
 }

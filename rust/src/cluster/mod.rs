@@ -1,49 +1,63 @@
 //! The cluster subsystem: sharded multi-engine serving with a global
-//! thermal/power arbiter.
+//! thermal/power arbiter and a fault-injecting supervisor.
 //!
 //! ```text
 //!                       ┌────────────────────────────┐
 //!   traffic source ──▶  │ coordinator (main thread)  │
-//!                       │  consistent-hash router +  │◀── caps, epoch
-//!                       │  coalescing + autoscaler   │    reports
-//!                       └──────┬──────┬──────┬───────┘        ▲
-//!                 EpochPacket  │      │      │ (bounded       │
-//!                 {reqs,cap}   ▼      ▼      ▼  mailboxes)    │
-//!                       ┌──────────┐ ┌───┐ ┌───┐              │
-//!                       │ shard 0  │ │ 1 │ │ N │  one engine +│
-//!                       │ (thread) │ │   │ │   │  sched each  │
-//!                       └────┬─────┘ └─┬─┘ └─┬─┘              │
-//!                            │ EpochReport {peak_temp, power} │
-//!                            ▼         ▼     ▼                │
-//!                       ┌────────────────────────────┐        │
-//!                       │ arbiter (thread): resplit  │────────┘
-//!                       │ power budget by headroom   │
-//!                       └────────────────────────────┘
+//!                       │  consistent-hash router +  │
+//!                       │  coalescing + autoscaler + │
+//!                       │  supervisor + arbiter      │
+//!                       └──────┬──────┬──────┬───────┘
+//!            EpochPacket       │      │      │      ▲
+//!            {reqs, cap, cmd}  ▼      ▼      ▼      │ EpochReport
+//!                       ┌──────────┐ ┌───┐ ┌───┐    │ {peak_temp,
+//!                       │ shard 0  │ │ 1 │ │ N │    │  power, ids}
+//!                       │ (thread) │ │   │ │   │ ───┘
+//!                       └──────────┘ └───┘ └───┘
 //! ```
 //!
 //! One serving [`Server`] (engine + scheduler) per shard — one shard per
 //! interposer — on its own worker thread. The coordinator routes each
 //! epoch's arrivals by model fingerprint (consistent hashing keeps a
 //! model's weights and cached profiles on one shard), coalesces
-//! same-model requests into batches, and pushes one [`EpochPacket`] per
-//! shard through a bounded mailbox. The arbiter owns the package power
-//! budget: every epoch it collects one [`EpochReport`] per shard
-//! (a barrier), reslices the budget headroom-weighted from reported peak
-//! temperatures — hot shards lose budget to cool ones — and returns
-//! per-shard caps that the engine enforces at mapping time.
+//! same-model requests into batches, tags each batch with a global
+//! request id, and pushes one [`EpochPacket`] per shard through a bounded
+//! mailbox. At the epoch barrier it collects exactly one [`EpochReport`]
+//! per shard, settles the request-id ledger, reslices the power budget
+//! headroom-weighted over the *alive* shards (hot shards lose budget to
+//! cool ones, dead shards lose their whole slice), and autoscales the
+//! active ring.
+//!
+//! ## Fault injection and supervision
+//!
+//! With a [`FaultPlan`] configured, a supervisor inside the coordinator
+//! compiles the plan into per-shard lifecycles and applies them at epoch
+//! barriers: crashes kill a shard's engine (the supervisor removes it
+//! from the ring, fails its in-flight requests over to the survivors by
+//! re-routing them on the shrunken ring, and restarts it from a
+//! checkpoint after its down window); hangs freeze a shard — tolerated
+//! for [`SUPERVISOR_PATIENCE_EPOCHS`] epochs, then escalated to a
+//! crash + restart; chiplet trips, mailbox drops/delays, and report
+//! losses perturb the data and telemetry planes. The request-id ledger
+//! is transactional: a request id is settled exactly once (done or
+//! dropped), so failover retries never double-complete —
+//! at-most-once accounting. Degradation counters ([`FaultStats`]) join
+//! the merged report (and its digest) only when a plan is active, so
+//! fault-free digests are byte-identical to a build without this module.
 //!
 //! ## Determinism model
 //!
 //! Real threads, reproducible results: shards advance in *epoch
 //! lockstep*. Within an epoch a shard is a deterministic function of its
 //! seed and its packet sequence; the packet sequence is a deterministic
-//! function of the source seed and the (deterministic) cap/autoscale
-//! history; the arbiter sorts reports by shard id before rebalance.
-//! Thread interleaving can reorder report arrival but never their epoch
-//! content, so `thermos serve --shards 4 --seed S` twice produces
-//! byte-identical merged reports. The only interleaving-dependent values
-//! — profile-cache hit/miss splits — are deliberately kept out of the
-//! digested JSON.
+//! function of the source seed, the fault plan, and the (deterministic)
+//! cap/autoscale history; the coordinator sorts reports by shard id
+//! before rebalancing. Thread interleaving can reorder report arrival
+//! but never their epoch content, so `thermos serve --shards 4 --seed S
+//! [--chaos C]` twice produces byte-identical merged reports. The only
+//! interleaving-dependent values — profile-cache hit/miss splits — are
+//! deliberately kept out of the digested JSON.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod arbiter;
 pub mod autoscale;
@@ -55,15 +69,20 @@ pub use autoscale::{AutoscaleConfig, Autoscaler};
 pub use router::{ClusterRouter, HashRing, RouteStats};
 pub use shard::{EpochPacket, EpochReport, ShardParams, ShardResult, ShardSchedSpec};
 
+pub use crate::fault::{ClusterError, FaultPlan};
+
 use crate::arch::Arch;
+use crate::fault::{FaultKind, FaultStats, ShardCmd, SUPERVISOR_PATIENCE_EPOCHS};
 use crate::noi::NoiTopology;
 use crate::sched::thermos::PREF_BALANCED;
 use crate::serve::ingest::TrafficSource;
 use crate::serve::server::{ServeConfig, Server};
 use crate::serve::telemetry::{digest64, TelemetryHub};
+use crate::serve::ServeRequest;
 use crate::sim::{ProfileCache, SimConfig};
 use crate::thermal::ThermalParams;
 use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc;
 
 #[derive(Clone, Debug)]
@@ -98,6 +117,9 @@ pub struct ClusterConfig {
     pub autoscale: Option<AutoscaleConfig>,
     /// Per-shard replay logs: `<base>.shard<i>.jsonl`.
     pub record_base: Option<String>,
+    /// Deterministic fault schedule; `None` disables the whole fault
+    /// plane (and keeps merged digests identical to pre-fault builds).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ClusterConfig {
@@ -118,6 +140,7 @@ impl Default for ClusterConfig {
             sched: ShardSchedSpec::Thermos { theta: None, fallback: PREF_BALANCED },
             autoscale: None,
             record_base: None,
+            faults: None,
         }
     }
 }
@@ -135,14 +158,365 @@ pub struct ClusterReport {
     pub cache_entries: usize,
 }
 
+/// The fault supervisor: compiles a [`FaultPlan`] into per-shard
+/// lifecycles and owns the request-id ledger that makes failover
+/// at-most-once. Lives inside the coordinator — every decision happens
+/// at an epoch barrier, on one thread, in shard-id order, so the fault
+/// schedule perturbs the run deterministically.
+struct Supervisor {
+    n: usize,
+    /// Per-shard lifecycle directive by epoch (absent ⇒ `Run`).
+    schedule: Vec<BTreeMap<usize, ShardCmd>>,
+    /// Epochs that begin a scheduled fault (for `faults_injected`).
+    fault_starts: Vec<BTreeSet<usize>>,
+    /// Epochs at which a hung shard resumes and rejoins the ring.
+    rejoin: Vec<BTreeSet<usize>>,
+    /// Chiplet trip transitions per shard per epoch: `(chiplet, offline)`.
+    trips: Vec<BTreeMap<usize, Vec<(usize, bool)>>>,
+    /// `(epoch, shard)` whose request batch is lost in transit.
+    drops: BTreeSet<(usize, usize)>,
+    /// `(epoch, shard)` → delay in epochs for that batch.
+    delays: BTreeMap<(usize, usize), usize>,
+    /// `(epoch, shard)` whose epoch report is lost before the arbiter.
+    losses: BTreeSet<(usize, usize)>,
+    /// Liveness as of the last applied directive.
+    alive: Vec<bool>,
+    /// Global request id → (owning shard, request). BTreeMap so failover
+    /// re-routes in ascending gid order — deterministic retry order.
+    inflight: BTreeMap<u64, (usize, ServeRequest)>,
+    /// Delivery epoch → delayed batches `(original shard, tagged reqs)`.
+    delayed: BTreeMap<usize, Vec<(usize, Vec<(u64, ServeRequest)>)>>,
+    next_gid: u64,
+    /// Ledger tracking is only paid for when a plan is active.
+    track: bool,
+    stats: FaultStats,
+}
+
+impl Supervisor {
+    fn new(plan: &FaultPlan, n: usize, total_epochs: usize, track: bool) -> Supervisor {
+        let mut sup = Supervisor {
+            n,
+            schedule: vec![BTreeMap::new(); n],
+            fault_starts: vec![BTreeSet::new(); n],
+            rejoin: vec![BTreeSet::new(); n],
+            trips: vec![BTreeMap::new(); n],
+            drops: BTreeSet::new(),
+            delays: BTreeMap::new(),
+            losses: BTreeSet::new(),
+            alive: vec![true; n],
+            inflight: BTreeMap::new(),
+            delayed: BTreeMap::new(),
+            next_gid: 0,
+            track,
+            stats: FaultStats::default(),
+        };
+        for ev in &plan.events {
+            let s = ev.shard;
+            if s >= n || ev.epoch >= total_epochs {
+                continue;
+            }
+            match &ev.kind {
+                FaultKind::ChipletTrip { chiplet, epochs } => {
+                    let d = (*epochs).max(1);
+                    sup.trips[s].entry(ev.epoch).or_default().push((*chiplet, true));
+                    sup.trips[s].entry(ev.epoch + d).or_default().push((*chiplet, false));
+                }
+                FaultKind::ShardCrash { down_epochs } => {
+                    let d = (*down_epochs).max(1);
+                    // First-wins: overlapping lifecycles on one shard are
+                    // dropped wholesale, never half-applied.
+                    if (ev.epoch..=ev.epoch + d).any(|e| sup.schedule[s].contains_key(&e)) {
+                        continue;
+                    }
+                    sup.schedule[s].insert(ev.epoch, ShardCmd::Crash);
+                    for e in ev.epoch + 1..ev.epoch + d {
+                        sup.schedule[s].insert(e, ShardCmd::Down);
+                    }
+                    if ev.epoch + d < total_epochs {
+                        sup.schedule[s].insert(ev.epoch + d, ShardCmd::Restart);
+                    }
+                    sup.fault_starts[s].insert(ev.epoch);
+                }
+                FaultKind::ShardHang { epochs } => {
+                    let k = (*epochs).max(1);
+                    if k <= SUPERVISOR_PATIENCE_EPOCHS {
+                        if (ev.epoch..ev.epoch + k).any(|e| sup.schedule[s].contains_key(&e)) {
+                            continue;
+                        }
+                        for e in ev.epoch..ev.epoch + k {
+                            sup.schedule[s].insert(e, ShardCmd::Hang);
+                        }
+                        if ev.epoch + k < total_epochs {
+                            sup.rejoin[s].insert(ev.epoch + k);
+                        }
+                    } else {
+                        // Patience exhausted: two hung epochs, then the
+                        // supervisor escalates to a crash + restart.
+                        if (ev.epoch..=ev.epoch + 3).any(|e| sup.schedule[s].contains_key(&e)) {
+                            continue;
+                        }
+                        sup.schedule[s].insert(ev.epoch, ShardCmd::Hang);
+                        sup.schedule[s].insert(ev.epoch + 1, ShardCmd::Hang);
+                        sup.schedule[s].insert(ev.epoch + 2, ShardCmd::Crash);
+                        if ev.epoch + 3 < total_epochs {
+                            sup.schedule[s].insert(ev.epoch + 3, ShardCmd::Restart);
+                        }
+                    }
+                    sup.fault_starts[s].insert(ev.epoch);
+                }
+                FaultKind::MailboxDrop => {
+                    sup.drops.insert((ev.epoch, s));
+                }
+                FaultKind::MailboxDelay { epochs } => {
+                    sup.delays.insert((ev.epoch, s), (*epochs).max(1));
+                }
+                FaultKind::ReportLoss => {
+                    sup.losses.insert((ev.epoch, s));
+                }
+            }
+        }
+        sup
+    }
+
+    /// Remove an entire unapplied lifecycle starting at `start` (its cmds
+    /// occupy consecutive epochs) plus its rejoin mark and start marker.
+    fn unschedule_lifecycle(&mut self, s: usize, start: usize) {
+        let mut e = start;
+        while self.schedule[s].remove(&e).is_some() {
+            e += 1;
+        }
+        self.rejoin[s].remove(&e);
+        self.fault_starts[s].remove(&start);
+    }
+
+    /// Gids currently parked in the delayed-delivery stash; these are
+    /// skipped by crash failover (the delivery path re-routes them).
+    fn delayed_gids(&self) -> BTreeSet<u64> {
+        self.delayed
+            .values()
+            .flatten()
+            .flat_map(|(_, reqs)| reqs.iter().map(|&(g, _)| g))
+            .collect()
+    }
+
+    /// Re-route every in-flight request of dead shard `s` onto the
+    /// current (already shrunken) ring, keeping its gid — retried, never
+    /// duplicated. Requests with no surviving home are dropped for good.
+    fn failover(
+        &mut self,
+        s: usize,
+        router: &ClusterRouter,
+        extras: &mut [Vec<(u64, ServeRequest)>],
+    ) {
+        self.stats.failovers += 1;
+        extras[s].clear();
+        let parked = self.delayed_gids();
+        let mine: Vec<(u64, ServeRequest)> = self
+            .inflight
+            .iter()
+            .filter(|(g, (sh, _))| *sh == s && !parked.contains(g))
+            .map(|(&g, (_, r))| (g, r.clone()))
+            .collect();
+        for (g, r) in mine {
+            match router.reroute(&r) {
+                Some(t) => {
+                    self.inflight.insert(g, (t, r.clone()));
+                    extras[t].push((g, r));
+                    self.stats.retries += 1;
+                }
+                None => {
+                    self.inflight.remove(&g);
+                    self.stats.dropped_requests += 1;
+                }
+            }
+        }
+    }
+
+    /// Apply this epoch's directives: ring membership, failover, trips,
+    /// and delayed deliveries. Returns per-shard `(cmd, trips, extra
+    /// requests)` for the packet build.
+    #[allow(clippy::type_complexity)]
+    fn directives(
+        &mut self,
+        epoch: usize,
+        router: &mut ClusterRouter,
+    ) -> (Vec<ShardCmd>, Vec<Vec<(usize, bool)>>, Vec<Vec<(u64, ServeRequest)>>) {
+        let n = self.n;
+        let mut cmds = vec![ShardCmd::Run; n];
+        let mut trips: Vec<Vec<(usize, bool)>> = vec![Vec::new(); n];
+        let mut extras: Vec<Vec<(u64, ServeRequest)>> = vec![Vec::new(); n];
+        for s in 0..n {
+            let mut cmd = self.schedule[s].get(&epoch).copied().unwrap_or(ShardCmd::Run);
+            // A fault that would empty the ring is skipped outright (and
+            // not counted): scale-to-zero is rejected, never a panic.
+            if matches!(cmd, ShardCmd::Crash | ShardCmd::Hang)
+                && self.alive[s]
+                && router.ring.contains(s)
+                && router.ring.num_shards() == 1
+            {
+                self.unschedule_lifecycle(s, epoch);
+                cmd = ShardCmd::Run;
+            }
+            match cmd {
+                ShardCmd::Crash => {
+                    if self.fault_starts[s].contains(&epoch) {
+                        self.stats.faults_injected += 1;
+                    }
+                    router.ring.remove(s);
+                    self.alive[s] = false;
+                    self.failover(s, router, &mut extras);
+                }
+                ShardCmd::Hang => {
+                    if self.alive[s] {
+                        if self.fault_starts[s].contains(&epoch) {
+                            self.stats.faults_injected += 1;
+                        }
+                        router.ring.remove(s);
+                        self.alive[s] = false;
+                    }
+                }
+                ShardCmd::Down => {}
+                ShardCmd::Restart => {
+                    self.alive[s] = true;
+                    router.ring.add(s);
+                    self.stats.restarts += 1;
+                }
+                ShardCmd::Run => {
+                    if self.rejoin[s].remove(&epoch) {
+                        self.alive[s] = true;
+                        router.ring.add(s);
+                    }
+                }
+            }
+            cmds[s] = cmd;
+            // Trips ride the packet; shards that are dead this epoch
+            // ignore them (a fresh engine boots with every chiplet
+            // online, so a stale trip-off is a harmless no-op).
+            if let Some(t) = self.trips[s].remove(&epoch) {
+                if !matches!(cmds[s], ShardCmd::Crash | ShardCmd::Down) {
+                    for &(_, on) in &t {
+                        if on {
+                            self.stats.chiplet_trips += 1;
+                            self.stats.faults_injected += 1;
+                        }
+                    }
+                    trips[s] = t;
+                }
+            }
+        }
+        // Delayed batches come due: deliver to the original shard if it
+        // is serving, otherwise re-route them like failover retries.
+        if let Some(batches) = self.delayed.remove(&epoch) {
+            for (orig, reqs) in batches {
+                if self.alive[orig] && router.ring.contains(orig) {
+                    extras[orig].extend(reqs);
+                } else {
+                    for (g, r) in reqs {
+                        match router.reroute(&r) {
+                            Some(t) => {
+                                if self.track {
+                                    self.inflight.insert(g, (t, r.clone()));
+                                }
+                                extras[t].push((g, r));
+                                self.stats.retries += 1;
+                            }
+                            None => {
+                                self.inflight.remove(&g);
+                                self.stats.dropped_requests += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.stats.downtime_epochs += self.alive.iter().filter(|&&a| !a).count() as u64;
+        (cmds, trips, extras)
+    }
+
+    /// Tag a routed batch with fresh global request ids (and track them
+    /// in the ledger when a plan is active).
+    fn assign_gids(&mut self, shard: usize, batch: Vec<ServeRequest>) -> Vec<(u64, ServeRequest)> {
+        batch
+            .into_iter()
+            .map(|r| {
+                let g = self.next_gid;
+                self.next_gid += 1;
+                if self.track {
+                    self.inflight.insert(g, (shard, r.clone()));
+                }
+                (g, r)
+            })
+            .collect()
+    }
+
+    /// Apply mailbox faults to this shard's freshly routed batch.
+    fn intercept(&mut self, epoch: usize, shard: usize, reqs: &mut Vec<(u64, ServeRequest)>) {
+        if self.drops.remove(&(epoch, shard)) {
+            self.stats.faults_injected += 1;
+            self.stats.dropped_requests += reqs.len() as u64;
+            for (g, _) in reqs.drain(..) {
+                self.inflight.remove(&g);
+            }
+        }
+        if let Some(k) = self.delays.remove(&(epoch, shard)) {
+            self.stats.faults_injected += 1;
+            if !reqs.is_empty() {
+                self.delayed.entry(epoch + k).or_default().push((shard, std::mem::take(reqs)));
+            }
+        }
+    }
+
+    /// True when this shard's epoch report is scheduled to be lost.
+    fn lose_report(&mut self, epoch: usize, shard: usize) -> bool {
+        if self.losses.remove(&(epoch, shard)) {
+            self.stats.reports_lost += 1;
+            self.stats.faults_injected += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Close ledger entries: each id settles exactly once (done *or*
+    /// dropped), even when the epoch's telemetry report was lost.
+    fn settle(&mut self, done_ids: &[u64], dropped_ids: &[u64]) {
+        if !self.track {
+            return;
+        }
+        for g in done_ids.iter().chain(dropped_ids) {
+            self.inflight.remove(g);
+        }
+    }
+}
+
+/// Last-known substitute used on the telemetry plane before a shard's
+/// first report (only reachable when a report-loss fault hits epoch 0).
+fn baseline_report(shard: usize) -> EpochReport {
+    EpochReport {
+        shard,
+        epoch: 0,
+        peak_temp_k: 0.0,
+        power_w: 0.0,
+        completed: 0,
+        queue_depth: 0,
+        fifo_depth: 0,
+        throttled: false,
+        cap_gated: false,
+        alive: true,
+        done_ids: Vec::new(),
+        dropped_ids: Vec::new(),
+    }
+}
+
 fn epoch_snapshot_json(
     epoch: usize,
     t_s: f64,
     reports: &[EpochReport],
     caps_w: &[f64],
     active: usize,
+    down_shards: Option<usize>,
 ) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("epoch", Json::Num(epoch as f64)),
         ("t_s", Json::Num(t_s)),
         ("active_shards", Json::Num(active as f64)),
@@ -165,13 +539,20 @@ fn epoch_snapshot_json(
             "cap_gated_shards",
             Json::Num(reports.iter().filter(|r| r.cap_gated).count() as f64),
         ),
-    ])
+    ];
+    if let Some(d) = down_shards {
+        pairs.push(("down_shards", Json::Num(d as f64)));
+    }
+    Json::obj(pairs)
 }
 
 /// Run a sharded serving cluster to its horizon and merge the per-shard
 /// telemetry into one fleet-wide report. See the module docs for the
-/// architecture and determinism model.
-pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> ClusterReport {
+/// architecture, the fault model, and the determinism model.
+pub fn run_cluster(
+    cfg: ClusterConfig,
+    mut source: Box<dyn TrafficSource>,
+) -> Result<ClusterReport, ClusterError> {
     assert!(cfg.shards >= 1, "cluster needs at least one shard");
     let n = cfg.shards;
     let ref_arch = Arch::paper_heterogeneous(cfg.noi);
@@ -185,6 +566,9 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
     let cache = ProfileCache::new();
     let source_name = source.name().to_string();
     let scheduler_name = cfg.sched.name();
+    let faults_on = cfg.faults.is_some();
+    let plan = cfg.faults.clone().unwrap_or_default();
+    let mut sup = Supervisor::new(&plan, n, total_epochs, faults_on);
 
     // Channels: bounded per-shard mailboxes in, unbounded telemetry out.
     let mut packet_txs: Vec<mpsc::SyncSender<EpochPacket>> = Vec::with_capacity(n);
@@ -195,7 +579,6 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
         packet_rxs.push(rx);
     }
     let (report_tx, report_rx) = mpsc::channel::<EpochReport>();
-    let (outcome_tx, outcome_rx) = mpsc::channel::<arbiter::EpochOutcome>();
     let (result_tx, result_rx) = mpsc::channel::<ShardResult>();
 
     let mut snapshots: Vec<Json> = Vec::new();
@@ -211,11 +594,10 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
         cfg.coalesce,
         cfg.max_batch_images,
     );
+    let mut arbiter = Arbiter::new(ArbiterConfig::new(budget_w), n);
+    let mut last_reports: Vec<EpochReport> = (0..n).map(baseline_report).collect();
 
-    let (mut results, arbiter) = std::thread::scope(|scope| {
-        let arb = Arbiter::new(ArbiterConfig::new(budget_w), n);
-        let arb_handle = scope.spawn(move || arb.run(report_rx, outcome_tx, total_epochs));
-
+    let (mut results, run_err) = std::thread::scope(|scope| {
         for (id, rx) in packet_rxs.into_iter().enumerate() {
             let params = ShardParams {
                 id,
@@ -241,17 +623,31 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
         drop(report_tx);
         drop(result_tx);
 
-        // Coordinator: route arrivals, barrier with the arbiter, autoscale.
+        // Coordinator: supervise, route, barrier, rebalance, autoscale.
+        let mut run_err: Option<ClusterError> = None;
         let mut caps_w = vec![budget_w / n as f64; n];
-        for epoch in 0..total_epochs {
+        'epochs: for epoch in 0..total_epochs {
+            let (cmds, mut trip_sets, mut extras) = sup.directives(epoch, &mut router);
+            if router.ring.is_empty() {
+                run_err = Some(ClusterError::NoActiveShards);
+                break 'epochs;
+            }
             let t_end = (epoch as f64 + 1.0) * cfg.epoch_s;
             let arrivals = source.arrivals_until(t_end);
             let offered_rate = arrivals.len() as f64 / cfg.epoch_s;
             let mut batches = router.route_epoch(arrivals, n, &mut stats);
             let last = epoch + 1 == total_epochs;
             for (id, tx) in packet_txs.iter().enumerate() {
-                let pkt =
-                    EpochPacket { reqs: std::mem::take(&mut batches[id]), cap_w: caps_w[id], last };
+                let mut reqs = sup.assign_gids(id, std::mem::take(&mut batches[id]));
+                sup.intercept(epoch, id, &mut reqs);
+                reqs.append(&mut extras[id]);
+                let pkt = EpochPacket {
+                    reqs,
+                    cap_w: caps_w[id],
+                    last,
+                    cmd: cmds[id],
+                    trips: std::mem::take(&mut trip_sets[id]),
+                };
                 match tx.try_send(pkt) {
                     Ok(()) => {}
                     // The lockstep protocol keeps at most one packet in
@@ -262,20 +658,58 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
                     Err(mpsc::TrySendError::Disconnected(_)) => {}
                 }
             }
-            let Ok((new_caps, reports)) = outcome_rx.recv() else { break };
-            caps_w = new_caps;
+            // Barrier: exactly one report per shard, dead or alive.
+            let mut reports: Vec<EpochReport> = Vec::with_capacity(n);
+            for _ in 0..n {
+                match report_rx.recv() {
+                    Ok(r) => reports.push(r),
+                    Err(_) => {
+                        run_err = Some(ClusterError::ShardFailed(format!(
+                            "epoch {epoch}: a shard worker exited before the barrier"
+                        )));
+                        break 'epochs;
+                    }
+                }
+            }
+            reports.sort_by_key(|r| r.shard);
+            // The id ledger settles unconditionally — report loss only
+            // blinds the telemetry plane, never the accounting plane.
+            for r in &reports {
+                sup.settle(&r.done_ids, &r.dropped_ids);
+            }
+            let mut alive_mask = vec![true; n];
+            for r in reports.iter_mut() {
+                let s = r.shard;
+                alive_mask[s] = r.alive;
+                if sup.lose_report(epoch, s) {
+                    let mut sub = last_reports[s].clone();
+                    sub.epoch = epoch;
+                    alive_mask[s] = sub.alive;
+                    *r = sub;
+                } else {
+                    let mut known = r.clone();
+                    known.done_ids = Vec::new();
+                    known.dropped_ids = Vec::new();
+                    last_reports[s] = known;
+                }
+            }
+            let peaks: Vec<f64> = reports.iter().map(|r| r.peak_temp_k).collect();
+            caps_w = arbiter.rebalance_masked(&peaks, &alive_mask);
             if let Some(a) = autoscaler.as_mut() {
                 let active = router.ring.num_shards();
                 let target = a.target(offered_rate, active).clamp(1, n);
                 while router.ring.num_shards() < target {
-                    match (0..n).find(|&i| !router.ring.contains(i)) {
+                    match (0..n).find(|&i| !router.ring.contains(i) && sup.alive[i]) {
                         Some(i) => router.ring.add(i),
                         None => break,
                     }
                 }
-                while router.ring.num_shards() > target {
-                    let last_active = *router.ring.shards().last().unwrap();
-                    router.ring.remove(last_active);
+                // Scale-to-zero is rejected: the last shard never drains.
+                while router.ring.num_shards() > target && router.ring.num_shards() > 1 {
+                    match router.ring.shards().last().copied() {
+                        Some(s) => router.ring.remove(s),
+                        None => break,
+                    }
                 }
             }
             snapshots.push(epoch_snapshot_json(
@@ -284,6 +718,7 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
                 &reports,
                 &caps_w,
                 router.ring.num_shards(),
+                faults_on.then(|| alive_mask.iter().filter(|&&a| !a).count()),
             ));
         }
         drop(packet_txs);
@@ -292,10 +727,16 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
         while let Ok(r) = result_rx.recv() {
             results.push(r);
         }
-        let arbiter = arb_handle.join().expect("arbiter thread panicked");
-        (results, arbiter)
+        (results, run_err)
     });
+    if let Some(e) = run_err {
+        return Err(e);
+    }
     results.sort_by_key(|r| r.id);
+    // Close the ledger with ids settled during the post-horizon drain.
+    for r in &results {
+        sup.settle(&r.done_ids, &r.dropped_ids);
+    }
 
     // Deterministic merge: fixed shard-id order.
     let mut merged = TelemetryHub::new();
@@ -335,7 +776,7 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
         ]),
         None => Json::Null,
     };
-    let json = Json::obj(vec![
+    let mut pairs = vec![
         ("scheduler", Json::Str(scheduler_name.to_string())),
         ("source", Json::Str(source_name)),
         ("seed", Json::Num(cfg.serve.sim.seed as f64)),
@@ -395,17 +836,23 @@ pub fn run_cluster(cfg: ClusterConfig, mut source: Box<dyn TrafficSource>) -> Cl
         ),
         ("autoscaler", autoscale_json),
         ("shards_detail", Json::Arr(shards_detail)),
-    ]);
+    ];
+    // Only fault-aware runs carry the key: fault-free digests stay
+    // byte-identical to builds that predate the fault plane.
+    if faults_on {
+        pairs.push(("faults", sup.stats.to_json()));
+    }
+    let json = Json::obj(pairs);
     let digest = digest64(&json.to_string_compact());
     let (cache_hits, cache_misses) = cache.stats();
-    ClusterReport {
+    Ok(ClusterReport {
         json,
         digest,
         snapshots,
         cache_hits,
         cache_misses,
         cache_entries: cache.len(),
-    }
+    })
 }
 
 /// Convenience: a single-shard "cluster" is just a [`Server`] run — used
@@ -447,7 +894,9 @@ pub fn single_node_report(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::PoissonSource;
+    use crate::fault::FaultEvent;
+    use crate::serve::{PoissonSource, TenantClass};
+    use crate::workload::DnnModel;
 
     #[test]
     fn tiny_cluster_runs_and_reports() {
@@ -472,20 +921,124 @@ mod tests {
             ..ClusterConfig::default()
         };
         let source = Box::new(PoissonSource::new(2.0, 30, 200, [1.0, 1.0, 1.0], 3));
-        let report = run_cluster(cfg, source);
+        let report = run_cluster(cfg, source).expect("cluster run");
         assert_eq!(report.digest.len(), 16);
         assert_eq!(report.snapshots.len(), 8);
-        assert!(report.json.get("offered").as_f64().unwrap() > 0.0);
-        assert!(report.json.get("completed").as_f64().unwrap() > 0.0);
-        assert_eq!(report.json.get("shards").as_f64().unwrap(), 2.0);
+        assert!(report.json.get("offered").as_f64().expect("offered") > 0.0);
+        assert!(report.json.get("completed").as_f64().expect("completed") > 0.0);
+        assert_eq!(report.json.get("shards").as_f64().expect("shards"), 2.0);
+        // Fault-free runs carry no fault telemetry at all.
+        assert!(matches!(report.json.get("faults"), Json::Null));
         // Caps always sum to the budget.
-        let budget = report.json.get("power_budget_w").as_f64().unwrap();
+        let budget = report.json.get("power_budget_w").as_f64().expect("budget");
         let caps = match report.json.get("arbiter").get("final_caps_w") {
-            Json::Arr(xs) => xs.iter().map(|x| x.as_f64().unwrap()).sum::<f64>(),
+            Json::Arr(xs) => xs.iter().map(|x| x.as_f64().expect("cap")).sum::<f64>(),
             other => panic!("final_caps_w not an array: {other:?}"),
         };
         assert!((caps - budget).abs() < 1e-6, "caps {caps} vs budget {budget}");
         // The shared profile cache saw traffic.
         assert!(report.cache_hits + report.cache_misses > 0);
+    }
+
+    #[test]
+    fn supervisor_compiles_crash_and_hang_lifecycles() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { epoch: 2, shard: 1, kind: FaultKind::ShardCrash { down_epochs: 2 } },
+            FaultEvent { epoch: 3, shard: 0, kind: FaultKind::ShardHang { epochs: 4 } },
+        ]);
+        let sup = Supervisor::new(&plan, 2, 20, true);
+        assert_eq!(sup.schedule[1].get(&2), Some(&ShardCmd::Crash));
+        assert_eq!(sup.schedule[1].get(&3), Some(&ShardCmd::Down));
+        assert_eq!(sup.schedule[1].get(&4), Some(&ShardCmd::Restart));
+        // A 4-epoch hang exceeds patience (2): two hung epochs, then the
+        // supervisor escalates to a crash + restart.
+        assert_eq!(sup.schedule[0].get(&3), Some(&ShardCmd::Hang));
+        assert_eq!(sup.schedule[0].get(&4), Some(&ShardCmd::Hang));
+        assert_eq!(sup.schedule[0].get(&5), Some(&ShardCmd::Crash));
+        assert_eq!(sup.schedule[0].get(&6), Some(&ShardCmd::Restart));
+    }
+
+    #[test]
+    fn supervisor_skips_a_crash_that_would_empty_the_ring() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            epoch: 0,
+            shard: 0,
+            kind: FaultKind::ShardCrash { down_epochs: 1 },
+        }]);
+        let mut sup = Supervisor::new(&plan, 1, 10, true);
+        let mut router = ClusterRouter::new(&[0], 8, false, 100);
+        let (cmds, _, _) = sup.directives(0, &mut router);
+        assert_eq!(cmds[0], ShardCmd::Run, "sole shard must not be crashed");
+        assert_eq!(sup.stats.faults_injected, 0);
+        assert!(router.ring.contains(0));
+        // The lifecycle is unscheduled, not deferred: no phantom restart.
+        let (cmds, _, _) = sup.directives(1, &mut router);
+        assert_eq!(cmds[0], ShardCmd::Run);
+        assert_eq!(sup.stats.restarts, 0);
+    }
+
+    #[test]
+    fn failover_reroutes_inflight_and_settles_exactly_once() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            epoch: 1,
+            shard: 0,
+            kind: FaultKind::ShardCrash { down_epochs: 2 },
+        }]);
+        let mut sup = Supervisor::new(&plan, 2, 10, true);
+        let mut router = ClusterRouter::new(&[0, 1], 16, false, 100);
+        let req = ServeRequest {
+            t_s: 0.1,
+            tenant: TenantClass::Exec,
+            model: DnnModel::ResNet18,
+            images: 50,
+        };
+        let tagged = sup.assign_gids(0, vec![req]);
+        assert_eq!(tagged.len(), 1);
+        let gid = tagged[0].0;
+        let (cmds, _trips, extras) = sup.directives(1, &mut router);
+        assert_eq!(cmds[0], ShardCmd::Crash);
+        assert_eq!(sup.stats.failovers, 1);
+        assert_eq!(sup.stats.retries, 1);
+        assert!(
+            extras[1].iter().any(|(g, _)| *g == gid),
+            "in-flight work must land on the survivor"
+        );
+        assert!(!router.ring.contains(0));
+        // The survivor reports the id done: the ledger closes, no dupes.
+        sup.settle(&[gid], &[]);
+        assert!(sup.inflight.is_empty());
+        // The restart re-joins the ring after the down window.
+        let (cmds, _, _) = sup.directives(3, &mut router);
+        assert_eq!(cmds[0], ShardCmd::Restart);
+        assert!(router.ring.contains(0));
+        assert_eq!(sup.stats.restarts, 1);
+    }
+
+    #[test]
+    fn mailbox_faults_drop_or_park_the_batch() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { epoch: 0, shard: 0, kind: FaultKind::MailboxDrop },
+            FaultEvent { epoch: 1, shard: 1, kind: FaultKind::MailboxDelay { epochs: 2 } },
+        ]);
+        let mut sup = Supervisor::new(&plan, 2, 10, true);
+        let req = |t| ServeRequest {
+            t_s: t,
+            tenant: TenantClass::Energy,
+            model: DnnModel::AlexNet,
+            images: 10,
+        };
+        let mut dropped = sup.assign_gids(0, vec![req(0.0), req(0.1)]);
+        sup.intercept(0, 0, &mut dropped);
+        assert!(dropped.is_empty());
+        assert_eq!(sup.stats.dropped_requests, 2);
+        assert!(sup.inflight.is_empty(), "dropped ids leave the ledger");
+        let mut delayed = sup.assign_gids(1, vec![req(1.0)]);
+        sup.intercept(1, 1, &mut delayed);
+        assert!(delayed.is_empty());
+        // Two epochs later the batch comes due on the same shard.
+        let mut router = ClusterRouter::new(&[0, 1], 16, false, 100);
+        let (_, _, extras) = sup.directives(3, &mut router);
+        assert_eq!(extras[1].len(), 1, "delayed batch must be delivered");
+        assert_eq!(sup.stats.faults_injected, 2);
     }
 }

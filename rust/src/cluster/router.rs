@@ -79,6 +79,18 @@ impl HashRing {
         let idx = if idx == self.points.len() { 0 } else { idx };
         self.points[idx].1
     }
+
+    /// Non-panicking [`HashRing::shard_for`]: `None` when the ring is
+    /// empty (every shard dead or drained) so the caller can surface a
+    /// [`crate::fault::ClusterError::NoActiveShards`] instead of crashing
+    /// the coordinator.
+    pub fn try_shard_for(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            None
+        } else {
+            Some(self.shard_for(key))
+        }
+    }
 }
 
 /// Per-run routing counters.
@@ -154,6 +166,14 @@ impl ClusterRouter {
         stats.batches += out.iter().map(|b| b.len() as u64).sum::<u64>();
         out
     }
+
+    /// Failover placement for a single request: where it lands on the
+    /// *current* ring (the supervisor removes a dead shard before calling
+    /// this, so in-flight work re-routes exactly like fresh arrivals —
+    /// same key, same ring, deterministic). `None` when no shard is left.
+    pub fn reroute(&self, req: &ServeRequest) -> Option<usize> {
+        self.ring.try_shard_for(Self::key_of(req))
+    }
 }
 
 #[cfg(test)]
@@ -200,6 +220,51 @@ mod tests {
                 assert_eq!(a, b, "key on a surviving shard must not move");
             }
         }
+    }
+
+    #[test]
+    fn failover_moves_about_one_nth_of_the_keys() {
+        // The quantitative version of the remap property: killing one of
+        // N shards must re-route ≈ K/N keys — the dead shard's share and
+        // nothing else. Checked over several ring sizes and victims.
+        let population = keys(10_000);
+        for &n in &[3usize, 4, 8] {
+            let shards: Vec<usize> = (0..n).collect();
+            let before = HashRing::new(&shards, 64);
+            let victim = n / 2;
+            let mut after = before.clone();
+            after.remove(victim);
+            let moved = population
+                .iter()
+                .filter(|&&k| before.shard_for(k) != after.shard_for(k))
+                .count();
+            let ideal = population.len() as f64 / n as f64;
+            assert!(
+                (moved as f64) < 2.0 * ideal,
+                "n={n}: moved {moved}, ideal {ideal}"
+            );
+            assert!(
+                (moved as f64) > 0.3 * ideal,
+                "n={n}: moved {moved} suspiciously few (ideal {ideal})"
+            );
+        }
+    }
+
+    #[test]
+    fn try_shard_for_handles_an_empty_ring() {
+        let mut ring = HashRing::new(&[0], 8);
+        assert!(ring.try_shard_for(12345).is_some());
+        ring.remove(0);
+        assert!(ring.is_empty());
+        assert_eq!(ring.try_shard_for(12345), None);
+        let router = ClusterRouter::new(&[], 8, false, 100);
+        let r = ServeRequest {
+            t_s: 0.0,
+            tenant: TenantClass::Exec,
+            model: DnnModel::ResNet18,
+            images: 10,
+        };
+        assert_eq!(router.reroute(&r), None, "empty ring must not panic");
     }
 
     #[test]

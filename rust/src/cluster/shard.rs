@@ -2,16 +2,35 @@
 //! epoch-by-epoch from the coordinator in lockstep.
 //!
 //! A shard blocks on its mailbox for an [`EpochPacket`], applies the
-//! arbiter-assigned power cap, offers the routed batch, advances exactly
-//! `epoch_steps` engine steps, and reports its epoch telemetry. After the
-//! final packet it drains in-flight work (no new arrivals, no barrier —
-//! drain is a deterministic function of shard-local state) and sends its
-//! telemetry hub + final report for the epoch-ordered merge.
+//! supervisor's directive ([`ShardCmd`]) and the arbiter-assigned power
+//! cap, offers the routed batch, advances exactly `epoch_steps` engine
+//! steps, and reports its epoch telemetry. After the final packet it
+//! drains in-flight work (no new arrivals, no barrier — drain is a
+//! deterministic function of shard-local state) and sends its telemetry
+//! hub + final report for the epoch-ordered merge.
+//!
+//! # Fault model
+//!
+//! The worker thread is the shard's *node agent*: it never dies — only
+//! the engine + scheduler it hosts do. On `Crash` the server is dropped
+//! (queued and running work is lost; the supervisor fails those ids over
+//! to surviving shards); on `Restart` it is rebuilt from the scheduler
+//! factory and the lightweight checkpoint that survives the crash — the
+//! telemetry hub, the shared replay log, and cluster time (the fresh
+//! engine clock fast-forwards to `epoch · epoch_dt` so it rejoins the
+//! lockstep instead of lagging it). On `Hang` the worker buffers the
+//! packet without making progress and, on resume, books the lost epochs
+//! as stall time so completion stamps stay consistent with cluster time.
+//! Every packet — dead, hung, or healthy — is answered with exactly one
+//! [`EpochReport`] (`alive: false` markers for dead/hung epochs), so the
+//! coordinator's barrier always collects `n` reports and never deadlocks,
+//! and the fault schedule perturbs telemetry deterministically.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use crate::arch::Arch;
+use crate::fault::ShardCmd;
 use crate::noi::NoiTopology;
 use crate::sched::policy::NativeDdt;
 use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
@@ -20,10 +39,13 @@ use crate::sched::{BigLittleSched, SimbaSched};
 use crate::serve::ingest::NullSource;
 use crate::serve::replay::ReplayWriter;
 use crate::serve::server::{ServeConfig, ServeReport, ServeSched, Server, TenantRouter};
-use crate::serve::telemetry::TelemetryHub;
+use crate::serve::telemetry::{digest64, TelemetryHub};
 use crate::serve::ServeRequest;
 use crate::sim::ProfileCache;
+use crate::thermal::ThermalParams;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::sync::lock_recover;
 use crate::workload::ModelZoo;
 
 /// Which scheduler each shard instantiates (every shard gets its own
@@ -48,18 +70,30 @@ impl ShardSchedSpec {
     }
 }
 
-/// One epoch of work for a shard.
+/// One epoch of work for a shard. Requests carry the coordinator-assigned
+/// global id that identifies them across failovers.
 #[derive(Clone, Debug)]
 pub struct EpochPacket {
-    pub reqs: Vec<ServeRequest>,
+    pub reqs: Vec<(u64, ServeRequest)>,
     /// Arbiter-assigned power cap for this epoch (W).
     pub cap_w: f64,
     /// Final epoch: drain and report after this one.
     pub last: bool,
+    /// Supervisor directive for this epoch.
+    pub cmd: ShardCmd,
+    /// Chiplet trip transitions to apply this epoch: `(chiplet, offline)`.
+    pub trips: Vec<(usize, bool)>,
 }
 
-/// Per-epoch shard telemetry, consumed by the arbiter.
-#[derive(Clone, Copy, Debug)]
+impl EpochPacket {
+    /// A plain healthy-epoch packet (used by tests and the no-fault path).
+    pub fn run(reqs: Vec<(u64, ServeRequest)>, cap_w: f64, last: bool) -> EpochPacket {
+        EpochPacket { reqs, cap_w, last, cmd: ShardCmd::Run, trips: Vec::new() }
+    }
+}
+
+/// Per-epoch shard telemetry, consumed by the supervisor and arbiter.
+#[derive(Clone, Debug)]
 pub struct EpochReport {
     pub shard: usize,
     pub epoch: usize,
@@ -73,14 +107,44 @@ pub struct EpochReport {
     pub fifo_depth: usize,
     pub throttled: bool,
     pub cap_gated: bool,
+    /// False for the marker report of a dead or hung epoch.
+    pub alive: bool,
+    /// Request ids completed this epoch (at-most-once settlement).
+    pub done_ids: Vec<u64>,
+    /// Request ids resolved negatively this epoch (rejected/shed).
+    pub dropped_ids: Vec<u64>,
 }
 
-/// Final shard output: its telemetry hub (for the fleet-wide merge) and
-/// its own serve report.
+impl EpochReport {
+    /// Marker for an epoch the shard sat out (dead or hung): no progress,
+    /// no thermal reading, cumulative counters only.
+    fn marker(shard: usize, epoch: usize, completed: u64) -> EpochReport {
+        EpochReport {
+            shard,
+            epoch,
+            peak_temp_k: 0.0,
+            power_w: 0.0,
+            completed,
+            queue_depth: 0,
+            fifo_depth: 0,
+            throttled: false,
+            cap_gated: false,
+            alive: false,
+            done_ids: Vec::new(),
+            dropped_ids: Vec::new(),
+        }
+    }
+}
+
+/// Final shard output: its telemetry hub (for the fleet-wide merge), its
+/// own serve report, and the ids it settled during the post-horizon drain
+/// (the supervisor closes its ledger with these).
 pub struct ShardResult {
     pub id: usize,
     pub hub: TelemetryHub,
     pub report: ServeReport,
+    pub done_ids: Vec<u64>,
+    pub dropped_ids: Vec<u64>,
 }
 
 /// Everything a shard worker needs; all owned, so the thread closure is
@@ -100,9 +164,10 @@ pub struct ShardParams {
     pub record_path: Option<String>,
 }
 
-/// Shard thread entry point: construct the architecture + scheduler
-/// locally (the engine borrows the arch, so it must live on this thread)
-/// and run the epoch loop.
+/// Shard thread entry point: construct the architecture locally (the
+/// engine borrows the arch, so it must live on this thread) and hand a
+/// scheduler *factory* to the epoch loop — restarts after a crash rebuild
+/// the scheduler from the same deterministic inputs.
 pub fn run_shard(
     params: ShardParams,
     cache: ProfileCache,
@@ -111,84 +176,244 @@ pub fn run_shard(
     result_tx: Sender<ShardResult>,
 ) {
     let arch = Arch::paper_heterogeneous(params.noi);
+    let arch_ref = &arch;
     match params.sched.clone() {
         ShardSchedSpec::Simba => {
-            let sched = SimbaSched::new(arch.clone());
-            drive(&params, cache, &arch, sched, packet_rx, report_tx, result_tx);
+            let factory = move || SimbaSched::new(arch_ref.clone());
+            drive(&params, cache, arch_ref, factory, packet_rx, report_tx, result_tx);
         }
         ShardSchedSpec::BigLittle => {
-            let sched = BigLittleSched::new(arch.clone());
-            drive(&params, cache, &arch, sched, packet_rx, report_tx, result_tx);
+            let factory = move || BigLittleSched::new(arch_ref.clone());
+            drive(&params, cache, arch_ref, factory, packet_rx, report_tx, result_tx);
         }
         ShardSchedSpec::Thermos { theta, fallback } => {
             let zoo = ModelZoo::new();
-            let encoder = StateEncoder::new(&arch, &zoo, params.serve.sim.max_images);
-            let ddt = match theta {
-                Some(t) => NativeDdt::new(STATE_DIM, NUM_CLUSTERS, t),
-                None => {
-                    let mut rng = Rng::new(params.serve.sim.seed);
-                    NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng)
-                }
+            let encoder = StateEncoder::new(arch_ref, &zoo, params.serve.sim.max_images);
+            let seed = params.serve.sim.seed;
+            let factory = move || {
+                let ddt = match &theta {
+                    Some(t) => NativeDdt::new(STATE_DIM, NUM_CLUSTERS, t.clone()),
+                    None => {
+                        let mut rng = Rng::new(seed);
+                        NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng)
+                    }
+                };
+                TenantRouter::new(ThermosSched::new(arch_ref.clone(), encoder.clone(), ddt, fallback))
             };
-            let sched = TenantRouter::new(ThermosSched::new(arch.clone(), encoder, ddt, fallback));
-            drive(&params, cache, &arch, sched, packet_rx, report_tx, result_tx);
+            drive(&params, cache, arch_ref, factory, packet_rx, report_tx, result_tx);
         }
     }
 }
 
-fn drive<S: ServeSched>(
+fn drive<'a, S: ServeSched, F: Fn() -> S>(
     params: &ShardParams,
     cache: ProfileCache,
-    arch: &Arch,
-    sched: S,
+    arch: &'a Arch,
+    make_sched: F,
     packet_rx: Receiver<EpochPacket>,
     report_tx: Sender<EpochReport>,
     result_tx: Sender<ShardResult>,
 ) {
-    let mut server = Server::new(arch, sched, Box::new(NullSource), params.serve.clone());
-    server.set_profile_cache(cache);
-    if let Some(path) = &params.record_path {
+    let epoch_dt = params.epoch_steps as f64 * ThermalParams::default().dt_s;
+    let hub = Arc::new(Mutex::new(TelemetryHub::new()));
+    let replay: Option<Arc<Mutex<ReplayWriter>>> = params.record_path.as_ref().and_then(|path| {
         match ReplayWriter::create(path) {
-            Ok(w) => server = server.with_replay(Arc::new(Mutex::new(w))),
-            Err(e) => eprintln!("shard {}: replay log {path} failed: {e}", params.id),
+            Ok(w) => Some(Arc::new(Mutex::new(w))),
+            Err(e) => {
+                eprintln!("shard {}: replay log {path} failed: {e}", params.id);
+                None
+            }
         }
-    }
+    });
+    let new_server = || -> Server<'a, S> {
+        let mut s = Server::new_with_hub(
+            arch,
+            make_sched(),
+            Box::new(NullSource),
+            params.serve.clone(),
+            hub.clone(),
+        );
+        s.set_profile_cache(cache.clone());
+        if let Some(w) = &replay {
+            s = s.with_replay(w.clone());
+        }
+        s
+    };
 
+    let mut server: Option<Server<'a, S>> = Some(new_server());
     let mut epoch = 0usize;
+    // Hang state: batches/trips buffered while frozen, and how many epochs
+    // the freeze has lasted (booked as stall time on resume).
+    let mut paused_reqs: Vec<(u64, ServeRequest)> = Vec::new();
+    let mut paused_trips: Vec<(usize, bool)> = Vec::new();
+    let mut paused_epochs = 0usize;
+    // Engine clock at the last healthy barrier (the dead-shard report's
+    // service duration).
+    let mut checkpoint_s = 0.0f64;
+
     while let Ok(pkt) = packet_rx.recv() {
         let last = pkt.last;
-        server.set_power_cap_w(Some(pkt.cap_w));
-        for req in pkt.reqs {
-            server.offer(req);
+        match pkt.cmd {
+            ShardCmd::Crash => {
+                // Engine + scheduler die; queued and running work is gone
+                // (the supervisor fails those ids over). The hub, replay
+                // log, and checkpoint clock survive in the node agent.
+                server = None;
+                paused_reqs.clear();
+                paused_trips.clear();
+                paused_epochs = 0;
+                let done = lock_recover(&hub).totals().4;
+                if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
+                    break;
+                }
+            }
+            ShardCmd::Down => {
+                let done = lock_recover(&hub).totals().4;
+                if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
+                    break;
+                }
+            }
+            ShardCmd::Hang => {
+                paused_reqs.extend(pkt.reqs);
+                paused_trips.extend(pkt.trips);
+                paused_epochs += 1;
+                let done = lock_recover(&hub).totals().4;
+                if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
+                    break;
+                }
+            }
+            ShardCmd::Run | ShardCmd::Restart => {
+                if pkt.cmd == ShardCmd::Restart || server.is_none() {
+                    let mut s = new_server();
+                    // Rejoin cluster time: resuming at the checkpoint clock
+                    // would lag the lockstep forever.
+                    s.set_clock_s(epoch as f64 * epoch_dt);
+                    server = Some(s);
+                    paused_epochs = 0;
+                }
+                let Some(s) = server.as_mut() else {
+                    // Unreachable (rebuilt above), but the barrier contract
+                    // is one report per packet no matter what.
+                    let done = lock_recover(&hub).totals().4;
+                    if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
+                        break;
+                    }
+                    epoch += 1;
+                    if last {
+                        break;
+                    }
+                    continue;
+                };
+                if paused_epochs > 0 {
+                    s.stall_for(paused_epochs as f64 * epoch_dt);
+                    paused_epochs = 0;
+                }
+                s.set_power_cap_w(Some(pkt.cap_w));
+                for (c, off) in paused_trips.drain(..).chain(pkt.trips.iter().copied()) {
+                    s.set_chiplet_offline(c % arch.num_chiplets(), off);
+                }
+                let buffered: Vec<(u64, ServeRequest)> = paused_reqs.drain(..).collect();
+                for (id, req) in buffered.into_iter().chain(pkt.reqs.into_iter()) {
+                    s.offer_with_id(id, req);
+                }
+                s.advance(params.epoch_steps);
+                let (done_ids, dropped_ids) = s.take_epoch_done();
+                let report = EpochReport {
+                    shard: params.id,
+                    epoch,
+                    peak_temp_k: s.take_epoch_peak_temp_k(),
+                    power_w: s.power_w(),
+                    completed: s.completed_total(),
+                    queue_depth: s.queue_depth(),
+                    fifo_depth: s.fifo_depth(),
+                    throttled: s.any_throttled(),
+                    cap_gated: s.cap_gated(),
+                    alive: true,
+                    done_ids,
+                    dropped_ids,
+                };
+                checkpoint_s = s.now();
+                if report_tx.send(report).is_err() {
+                    break; // coordinator gone; drain and exit
+                }
+            }
         }
-        server.advance(params.epoch_steps);
-        let report = EpochReport {
-            shard: params.id,
-            epoch,
-            peak_temp_k: server.take_epoch_peak_temp_k(),
-            power_w: server.power_w(),
-            completed: server.completed_total(),
-            queue_depth: server.queue_depth(),
-            fifo_depth: server.fifo_depth(),
-            throttled: server.any_throttled(),
-            cap_gated: server.cap_gated(),
-        };
         epoch += 1;
-        if report_tx.send(report).is_err() {
-            break; // coordinator gone; drain and exit
-        }
         if last {
             break;
         }
     }
 
     // Drain: keep the final cap, no new arrivals, bounded by drain_max_s.
-    let deadline = server.now() + params.drain_max_s;
-    while !server.is_drained() && server.now() < deadline - 1e-9 {
-        server.advance(params.epoch_steps.max(1));
-    }
+    // A shard that ends its run hung first catches up its frozen epochs.
+    let (report, done_ids, dropped_ids) = match server {
+        Some(mut s) => {
+            if paused_epochs > 0 {
+                s.stall_for(paused_epochs as f64 * epoch_dt);
+            }
+            for (id, req) in paused_reqs.drain(..) {
+                s.offer_with_id(id, req);
+            }
+            let deadline = s.now() + params.drain_max_s;
+            while !s.is_drained() && s.now() < deadline - 1e-9 {
+                s.advance(params.epoch_steps.max(1));
+            }
+            let (done, dropped) = s.take_epoch_done();
+            (s.finish(), done, dropped)
+        }
+        None => (
+            dead_shard_report(params, &hub, checkpoint_s),
+            Vec::new(),
+            Vec::new(),
+        ),
+    };
+    let hub_snapshot = lock_recover(&hub).clone();
+    let _ = result_tx.send(ShardResult {
+        id: params.id,
+        hub: hub_snapshot,
+        report,
+        done_ids,
+        dropped_ids,
+    });
+}
 
-    let hub = server.hub_handle().lock().unwrap().clone();
-    let report = server.finish();
-    let _ = result_tx.send(ShardResult { id: params.id, hub, report });
+/// Final report for a shard that died and was never restarted: admission
+/// counters and latency histograms survive in the hub; engine-owned stats
+/// (temperatures, energy, throttle counters) died with the engine and
+/// read zero — visible degradation, not fabricated data.
+fn dead_shard_report(
+    params: &ShardParams,
+    hub: &Arc<Mutex<TelemetryHub>>,
+    checkpoint_s: f64,
+) -> ServeReport {
+    let hub = lock_recover(hub);
+    let (offered, admitted, rejected, shed, completed) = hub.totals();
+    let json = Json::obj(vec![
+        ("scheduler", Json::Str(params.sched.name().to_string())),
+        ("source", Json::Str("null".to_string())),
+        ("seed", Json::Num(params.serve.sim.seed as f64)),
+        ("duration_s", Json::Num(checkpoint_s)),
+        ("offered", Json::Num(offered as f64)),
+        ("admitted", Json::Num(admitted as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("shed_pressure", Json::Num(hub.shed_pressure_total() as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("images_done", Json::Num(hub.images_done_total() as f64)),
+        ("throughput_jobs_s", Json::Num(completed as f64 / checkpoint_s.max(1e-9))),
+        ("latency_e2e_s", hub.e2e_all.to_json()),
+        ("latency_exec_s", hub.exec_all.to_json()),
+        ("energy_j", hub.energy_all.to_json()),
+        ("queue_depth_max", Json::Num(hub.queue_depth_max as f64)),
+        ("fifo_depth_max", Json::Num(hub.fifo_depth_max as f64)),
+        ("host_stalls", Json::Num(0.0)),
+        ("throttle_events", Json::Num(0.0)),
+        ("cap_gated_steps", Json::Num(0.0)),
+        ("max_temp_k", Json::Num(0.0)),
+        ("cluster_max_temp_k", Json::arr_f64(&[])),
+        ("system_energy_j", Json::Num(0.0)),
+        ("tenants", hub.tenants_json()),
+    ]);
+    let digest = digest64(&json.to_string_compact());
+    ServeReport { json, digest, snapshots: Vec::new() }
 }

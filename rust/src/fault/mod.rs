@@ -1,0 +1,402 @@
+//! Deterministic fault injection for the cluster serving path.
+//!
+//! A [`FaultPlan`] is a seeded *schedule* of faults — chiplet thermal
+//! trips, shard crashes/hangs, mailbox drops/delays, arbiter-report loss —
+//! either parsed from a JSON file (`serve --faults plan.json`) or generated
+//! from a chaos seed (`serve --chaos N`). Faults are keyed by (epoch,
+//! shard) and the chaos generator draws each epoch's faults from an RNG
+//! seeded by `(seed, epoch)` alone, so the same seed always produces the
+//! same fault sequence regardless of thread interleaving. Injection itself
+//! happens only at epoch barriers inside the cluster supervisor
+//! (`cluster::run_cluster`), which keeps the merged telemetry digest
+//! byte-identical across same-seed runs.
+//!
+//! Nothing here touches threads or clocks: this module is pure data —
+//! the plan, the degradation counters ([`FaultStats`]), the supervisor →
+//! shard command verbs ([`ShardCmd`]), and the cluster error type
+//! ([`ClusterError`]) that replaces panics on the serving hot path.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How many consecutive hung epochs the supervisor tolerates before it
+/// escalates a hang to a crash + restart.
+pub const SUPERVISOR_PATIENCE_EPOCHS: usize = 2;
+
+/// One injectable fault. Durations are in epochs (the cluster barrier
+/// period), not seconds — faults land exactly on barrier boundaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Force a chiplet offline in the shard's engine for `epochs` epochs:
+    /// its capacity is masked out of scheduling and jobs mapped onto it
+    /// stall (thermal-trip semantics).
+    ChipletTrip { chiplet: usize, epochs: usize },
+    /// Kill the shard's engine + scheduler. The supervisor marks it
+    /// drained in the ring, fails its in-flight work over, and restarts it
+    /// from a checkpoint after `down_epochs` epochs.
+    ShardCrash { down_epochs: usize },
+    /// The shard stops making progress for `epochs` epochs but keeps its
+    /// state; hangs longer than [`SUPERVISOR_PATIENCE_EPOCHS`] are
+    /// escalated to a crash.
+    ShardHang { epochs: usize },
+    /// This epoch's request batch to the shard is lost in transit.
+    MailboxDrop,
+    /// This epoch's request batch arrives `epochs` epochs late.
+    MailboxDelay { epochs: usize },
+    /// The shard's epoch report never reaches the arbiter; the supervisor
+    /// substitutes the last known reading on the power/telemetry plane.
+    ReportLoss,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::ChipletTrip { .. } => "chiplet_trip",
+            FaultKind::ShardCrash { .. } => "shard_crash",
+            FaultKind::ShardHang { .. } => "shard_hang",
+            FaultKind::MailboxDrop => "mailbox_drop",
+            FaultKind::MailboxDelay { .. } => "mailbox_delay",
+            FaultKind::ReportLoss => "report_loss",
+        }
+    }
+}
+
+/// A fault scheduled against one shard at one epoch barrier.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub epoch: usize,
+    pub shard: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, sorted by (epoch, shard).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| (e.epoch, e.shard));
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the JSON plan schema:
+    ///
+    /// ```json
+    /// {"faults": [
+    ///   {"kind": "shard_crash",   "shard": 1, "epoch": 5, "down_epochs": 3},
+    ///   {"kind": "shard_hang",    "shard": 0, "epoch": 2, "epochs": 2},
+    ///   {"kind": "chiplet_trip",  "shard": 2, "epoch": 4, "chiplet": 12, "epochs": 6},
+    ///   {"kind": "mailbox_drop",  "shard": 1, "epoch": 7},
+    ///   {"kind": "mailbox_delay", "shard": 0, "epoch": 9, "epochs": 1},
+    ///   {"kind": "report_loss",   "shard": 3, "epoch": 11}
+    /// ]}
+    /// ```
+    ///
+    /// `down_epochs` defaults to 2 and `epochs` to 1 when omitted;
+    /// `chiplet` is required for `chiplet_trip` (taken modulo the shard's
+    /// chiplet count at injection time).
+    pub fn from_json(text: &str) -> Result<FaultPlan, ClusterError> {
+        let bad = |msg: String| ClusterError::BadFaultPlan(msg);
+        let root = Json::parse(text).map_err(|e| bad(format!("unparseable plan: {e}")))?;
+        let list = root
+            .get("faults")
+            .as_arr()
+            .ok_or_else(|| bad("plan must be an object with a `faults` array".into()))?;
+        let mut events = Vec::with_capacity(list.len());
+        for (i, ev) in list.iter().enumerate() {
+            let kind_name = ev
+                .get("kind")
+                .as_str()
+                .ok_or_else(|| bad(format!("fault #{i}: missing `kind`")))?;
+            let shard = ev
+                .get("shard")
+                .as_usize()
+                .ok_or_else(|| bad(format!("fault #{i}: missing `shard`")))?;
+            let epoch = ev
+                .get("epoch")
+                .as_usize()
+                .ok_or_else(|| bad(format!("fault #{i}: missing `epoch`")))?;
+            let epochs = ev.get("epochs").as_usize().unwrap_or(1).max(1);
+            let kind = match kind_name {
+                "chiplet_trip" => FaultKind::ChipletTrip {
+                    chiplet: ev
+                        .get("chiplet")
+                        .as_usize()
+                        .ok_or_else(|| bad(format!("fault #{i}: chiplet_trip needs `chiplet`")))?,
+                    epochs,
+                },
+                "shard_crash" => FaultKind::ShardCrash {
+                    down_epochs: ev.get("down_epochs").as_usize().unwrap_or(2).max(1),
+                },
+                "shard_hang" => FaultKind::ShardHang { epochs },
+                "mailbox_drop" => FaultKind::MailboxDrop,
+                "mailbox_delay" => FaultKind::MailboxDelay { epochs },
+                "report_loss" => FaultKind::ReportLoss,
+                other => return Err(bad(format!("fault #{i}: unknown kind `{other}`"))),
+            };
+            events.push(FaultEvent { epoch, shard, kind });
+        }
+        Ok(FaultPlan::new(events))
+    }
+
+    /// Serialize back to the `from_json` schema (round-trips exactly).
+    pub fn to_json(&self) -> Json {
+        let faults = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("kind", Json::Str(e.kind.name().to_string())),
+                    ("shard", Json::Num(e.shard as f64)),
+                    ("epoch", Json::Num(e.epoch as f64)),
+                ];
+                match &e.kind {
+                    FaultKind::ChipletTrip { chiplet, epochs } => {
+                        pairs.push(("chiplet", Json::Num(*chiplet as f64)));
+                        pairs.push(("epochs", Json::Num(*epochs as f64)));
+                    }
+                    FaultKind::ShardCrash { down_epochs } => {
+                        pairs.push(("down_epochs", Json::Num(*down_epochs as f64)));
+                    }
+                    FaultKind::ShardHang { epochs } | FaultKind::MailboxDelay { epochs } => {
+                        pairs.push(("epochs", Json::Num(*epochs as f64)));
+                    }
+                    FaultKind::MailboxDrop | FaultKind::ReportLoss => {}
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![("faults", Json::Arr(faults))])
+    }
+
+    /// Generate a chaos schedule. Deterministic per `(seed, epoch)`: every
+    /// epoch's faults are drawn from `Rng::new(seed ^ epoch * GOLDEN)`,
+    /// independent of all other epochs, so extending the run does not
+    /// reshuffle earlier faults. For runs long enough to recover
+    /// (`epochs >= 4`, `shards >= 2`) one early shard crash is guaranteed,
+    /// which in turn guarantees `faults_injected > 0` and `failovers > 0`
+    /// in the merged report.
+    pub fn chaos(seed: u64, shards: usize, epochs: usize) -> FaultPlan {
+        let mut events = Vec::new();
+        if shards >= 2 && epochs >= 4 {
+            let mut r = Rng::new(seed ^ 0xc4a5);
+            let epoch = 2 + r.below((epochs / 3).max(1));
+            let shard = r.below(shards);
+            let max_down = epochs.saturating_sub(epoch + 1).clamp(1, 3);
+            let down_epochs = 1 + r.below(max_down);
+            events.push(FaultEvent { epoch, shard, kind: FaultKind::ShardCrash { down_epochs } });
+        }
+        for epoch in 0..epochs {
+            let mut r = Rng::new(seed ^ (epoch as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            let u = r.f64();
+            if shards == 0 || u >= 0.24 {
+                continue;
+            }
+            let shard = r.below(shards);
+            let kind = if u < 0.03 {
+                FaultKind::ShardCrash { down_epochs: 1 + r.below(3) }
+            } else if u < 0.06 {
+                FaultKind::ShardHang { epochs: 1 + r.below(4) }
+            } else if u < 0.12 {
+                FaultKind::ChipletTrip { chiplet: r.below(4096), epochs: 1 + r.below(6) }
+            } else if u < 0.16 {
+                FaultKind::MailboxDrop
+            } else if u < 0.20 {
+                FaultKind::MailboxDelay { epochs: 1 }
+            } else {
+                FaultKind::ReportLoss
+            };
+            events.push(FaultEvent { epoch, shard, kind });
+        }
+        FaultPlan::new(events)
+    }
+}
+
+/// Degradation counters accumulated by the supervisor; merged into the
+/// cluster report (and therefore the digest) whenever a plan is active.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Fault events actually applied (scheduled events that were skipped —
+    /// e.g. a crash that would empty the ring — are not counted).
+    pub faults_injected: u64,
+    /// Shard-failover events: one per crash/escalation that moved a
+    /// shard's in-flight and future work off the dead shard.
+    pub failovers: u64,
+    /// In-flight requests re-routed to a surviving shard (same global id:
+    /// at-most-once accounting, no duplicate completions).
+    pub retries: u64,
+    /// Shard restarts from checkpoint.
+    pub restarts: u64,
+    /// Sum over epochs of shards not alive at the barrier.
+    pub downtime_epochs: u64,
+    /// Requests lost for good (mailbox drop, or no surviving shard).
+    pub dropped_requests: u64,
+    /// Epoch reports lost before reaching the arbiter.
+    pub reports_lost: u64,
+    /// Chiplet thermal-trip injections.
+    pub chiplet_trips: u64,
+}
+
+impl FaultStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("faults_injected", Json::Num(self.faults_injected as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
+            ("downtime_epochs", Json::Num(self.downtime_epochs as f64)),
+            ("dropped_requests", Json::Num(self.dropped_requests as f64)),
+            ("reports_lost", Json::Num(self.reports_lost as f64)),
+            ("chiplet_trips", Json::Num(self.chiplet_trips as f64)),
+        ])
+    }
+}
+
+/// Supervisor → shard-worker directive carried in each epoch packet. The
+/// worker thread is the "node agent": it never dies, only its engine +
+/// scheduler do, so the epoch barrier always collects exactly one report
+/// per shard and stays deadlock-free under faults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardCmd {
+    /// Process this epoch normally.
+    Run,
+    /// Drop the engine + scheduler now; reply with a dead-shard marker.
+    Crash,
+    /// Stay dead this epoch; reply with a dead-shard marker.
+    Down,
+    /// Rebuild engine + scheduler from the factory, fast-forward the clock
+    /// to cluster time, then process this epoch normally.
+    Restart,
+    /// Buffer this epoch's batch without making progress (hung).
+    Hang,
+}
+
+/// Error type for the cluster serving path — replaces the panics that a
+/// poisoned lock, an empty ring, or a failed worker used to cause.
+#[derive(Clone, Debug)]
+pub enum ClusterError {
+    /// The autoscaler or failover logic would leave zero active shards.
+    NoActiveShards,
+    /// A `--faults` plan failed to parse or validate.
+    BadFaultPlan(String),
+    /// Replay/record file I/O failed.
+    Io(String),
+    /// A shard worker disappeared without delivering its final result.
+    ShardFailed(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NoActiveShards => {
+                write!(f, "cluster would have zero active shards")
+            }
+            ClusterError::BadFaultPlan(msg) => write!(f, "bad fault plan: {msg}"),
+            ClusterError::Io(msg) => write!(f, "cluster i/o error: {msg}"),
+            ClusterError::ShardFailed(msg) => write!(f, "shard failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_json_round_trips() {
+        let src = r#"{"faults": [
+            {"kind": "shard_crash",   "shard": 1, "epoch": 5, "down_epochs": 3},
+            {"kind": "shard_hang",    "shard": 0, "epoch": 2, "epochs": 2},
+            {"kind": "chiplet_trip",  "shard": 2, "epoch": 4, "chiplet": 12, "epochs": 6},
+            {"kind": "mailbox_drop",  "shard": 1, "epoch": 7},
+            {"kind": "mailbox_delay", "shard": 0, "epoch": 9, "epochs": 1},
+            {"kind": "report_loss",   "shard": 3, "epoch": 11}
+        ]}"#;
+        let plan = FaultPlan::from_json(src).unwrap();
+        assert_eq!(plan.events.len(), 6);
+        // Sorted by (epoch, shard).
+        assert!(plan.events.windows(2).all(|w| (w[0].epoch, w[0].shard) <= (w[1].epoch, w[1].shard)));
+        let back = FaultPlan::from_json(&plan.to_json().to_string_compact()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn plan_defaults_apply() {
+        let plan = FaultPlan::from_json(
+            r#"{"faults": [{"kind": "shard_crash", "shard": 0, "epoch": 1},
+                           {"kind": "shard_hang", "shard": 1, "epoch": 2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(plan.events[0].kind, FaultKind::ShardCrash { down_epochs: 2 });
+        assert_eq!(plan.events[1].kind, FaultKind::ShardHang { epochs: 1 });
+    }
+
+    #[test]
+    fn bad_plans_are_rejected() {
+        assert!(FaultPlan::from_json("not json").is_err());
+        assert!(FaultPlan::from_json(r#"{"no_faults": []}"#).is_err());
+        assert!(FaultPlan::from_json(r#"{"faults": [{"kind": "meteor", "shard": 0, "epoch": 0}]}"#)
+            .is_err());
+        assert!(FaultPlan::from_json(r#"{"faults": [{"kind": "shard_crash", "epoch": 0}]}"#)
+            .is_err());
+        assert!(FaultPlan::from_json(
+            r#"{"faults": [{"kind": "chiplet_trip", "shard": 0, "epoch": 0}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_seed() {
+        let a = FaultPlan::chaos(7, 4, 30);
+        let b = FaultPlan::chaos(7, 4, 30);
+        assert_eq!(a, b);
+        let c = FaultPlan::chaos(8, 4, 30);
+        assert_ne!(a, c, "different chaos seeds should give different plans");
+    }
+
+    #[test]
+    fn chaos_prefix_is_stable_when_run_extends() {
+        // Per-(seed, epoch) draws: the first 30 epochs of a 60-epoch plan
+        // match the 30-epoch plan (minus the guaranteed crash whose window
+        // scales with the horizon).
+        let short = FaultPlan::chaos(11, 4, 30);
+        let long = FaultPlan::chaos(11, 4, 60);
+        // Compare only non-crash events: the guaranteed crash is drawn from
+        // a window that scales with the horizon, everything else is a pure
+        // per-epoch draw.
+        let non_crash = |p: &FaultPlan, cutoff: usize| -> Vec<FaultEvent> {
+            p.events
+                .iter()
+                .filter(|e| e.epoch < cutoff && !matches!(e.kind, FaultKind::ShardCrash { .. }))
+                .cloned()
+                .collect()
+        };
+        assert_eq!(non_crash(&short, 30), non_crash(&long, 30));
+    }
+
+    #[test]
+    fn chaos_guarantees_an_early_crash() {
+        for seed in 0..20u64 {
+            let plan = FaultPlan::chaos(seed, 4, 20);
+            assert!(
+                plan.events
+                    .iter()
+                    .any(|e| matches!(e.kind, FaultKind::ShardCrash { .. }) && e.epoch >= 2),
+                "seed {seed}: no crash scheduled"
+            );
+        }
+        // Degenerate shapes stay quiet rather than panicking.
+        assert!(FaultPlan::chaos(3, 0, 10).is_empty());
+        let single = FaultPlan::chaos(3, 1, 3);
+        assert!(!single.events.iter().any(|e| e.shard > 0));
+    }
+}

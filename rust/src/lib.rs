@@ -22,6 +22,7 @@
 pub mod arch;
 pub mod cluster;
 pub mod experiments;
+pub mod fault;
 pub mod noi;
 pub mod pim;
 pub mod rl;

@@ -5,7 +5,7 @@
 use anyhow::{bail, Context, Result};
 use std::sync::{Arc, Mutex};
 use thermos::arch::Arch;
-use thermos::cluster::{run_cluster, AutoscaleConfig, ClusterConfig, ShardSchedSpec};
+use thermos::cluster::{run_cluster, AutoscaleConfig, ClusterConfig, FaultPlan, ShardSchedSpec};
 use thermos::noi::NoiTopology;
 #[cfg(feature = "pjrt")]
 use thermos::rl::relmas_trainer::RelmasTrainer;
@@ -92,6 +92,12 @@ serve cluster options (sharded serving; implies the cluster path):
   --autoscale               enable the utilization autoscaler
   --autoscale-min/--autoscale-max <n>   active-shard bounds [1 / shards]
   --shard-capacity <jobs/s> autoscaler per-shard capacity [2]
+  --faults <plan.json>      inject faults from a JSON schedule (shard
+                            crash/hang, chiplet trip, mailbox drop/delay,
+                            report loss); the supervisor restarts crashed
+                            shards and fails their work over
+  --chaos <seed>            generate a deterministic fault schedule from a
+                            chaos seed (mutually exclusive with --faults)
 ";
 
 fn main() {
@@ -104,6 +110,7 @@ fn main() {
             "record", "mix-jobs", "tenants", "queue-cap", "max-wait", "snapshot-every", "rate-on",
             "rate-off", "on-s", "off-s", "shards", "epoch", "budget", "batch-images",
             "pressure-depth", "drain-max", "autoscale-min", "autoscale-max", "shard-capacity",
+            "faults", "chaos",
         ],
     ) {
         Ok(a) => a,
@@ -517,9 +524,27 @@ fn cmd_serve_cluster(args: &cli::Args) -> Result<()> {
         None
     };
     let budget = args.parse_f64("budget", 0.0).map_err(anyhow::Error::msg)?;
+    let epoch_s = args.parse_f64("epoch", 1.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        !(args.get("faults").is_some() && args.get("chaos").is_some()),
+        "--faults and --chaos are mutually exclusive"
+    );
+    let faults = match (args.get("faults"), args.get("chaos")) {
+        (Some(path), _) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read fault plan {path}"))?;
+            Some(FaultPlan::from_json(&text)?)
+        }
+        (None, Some(_)) => {
+            let chaos_seed = args.parse_u64("chaos", 0).map_err(anyhow::Error::msg)?;
+            let epochs = ((duration_s / epoch_s).ceil() as usize).max(1);
+            Some(FaultPlan::chaos(chaos_seed, shards, epochs))
+        }
+        (None, None) => None,
+    };
     let cfg = ClusterConfig {
         shards,
-        epoch_s: args.parse_f64("epoch", 1.0).map_err(anyhow::Error::msg)?,
+        epoch_s,
         duration_s,
         drain_max_s: args.parse_f64("drain-max", 30.0).map_err(anyhow::Error::msg)?,
         power_budget_w: (budget > 0.0).then_some(budget),
@@ -530,10 +555,11 @@ fn cmd_serve_cluster(args: &cli::Args) -> Result<()> {
         sched,
         autoscale,
         record_base: args.get("record").map(str::to_string),
+        faults,
         ..ClusterConfig::default()
     };
 
-    let report = run_cluster(cfg, source);
+    let report = run_cluster(cfg, source)?;
     if !args.has("quiet") {
         for snap in &report.snapshots {
             eprintln!("{}", snap.to_string_compact());

@@ -1,10 +1,11 @@
 //! Request/decision logging and deterministic replay.
 //!
-//! The log is JSONL: one compact JSON object per line. Two event kinds:
+//! The log is JSONL: one compact JSON object per line. Three event kinds:
 //!
 //! ```text
 //! {"ev":"req","t_s":1.234,"tenant":"exec","model":"resnet18","images":500}
 //! {"ev":"map","id":12,"model":"resnet18","images":500,"ideal_exec_s":0.42,"load_s":0.01}
+//! {"ev":"done","id":12,"t_s":3.456}
 //! ```
 //!
 //! * `req` — every request the source offered (admitted or not), in
@@ -13,6 +14,9 @@
 //! * `map` — every mapping decision the scheduler committed, with its
 //!   deterministic execution profile; a fingerprint for diffing scheduler
 //!   behavior between runs.
+//! * `done` — every job completion with its (server-local) job id. The
+//!   fault-injection tests grep these across shard logs to prove
+//!   at-most-once completion under failover.
 //!
 //! Lines starting with `#` and blank lines are ignored on parse, and
 //! non-`req` events are skipped, so a recorded log replays as-is.
@@ -83,6 +87,15 @@ impl ReplayWriter {
             ("images", Json::Num(job.images as f64)),
             ("ideal_exec_s", Json::Num(profile.ideal_exec_s(job.images))),
             ("load_s", Json::Num(profile.load_time_s)),
+        ]))
+    }
+
+    /// Log one job completion.
+    pub fn done(&mut self, job_id: u64, t_s: f64) -> std::io::Result<()> {
+        self.write_line(&Json::obj(vec![
+            ("ev", Json::Str("done".to_string())),
+            ("id", Json::Num(job_id as f64)),
+            ("t_s", Json::Num(t_s)),
         ]))
     }
 
@@ -188,6 +201,7 @@ mod tests {
 {\"ev\":\"req\",\"t_s\":1,\"tenant\":\"energy\",\"model\":\"alexnet\",\"images\":100}
 
 {\"ev\":\"map\",\"id\":0,\"model\":\"alexnet\",\"images\":100,\"ideal_exec_s\":0.1,\"load_s\":0.01}
+{\"ev\":\"done\",\"id\":0,\"t_s\":1.5}
 {\"ev\":\"req\",\"t_s\":2,\"tenant\":\"exec\",\"model\":\"resnet50\",\"images\":300}
 ";
         let reqs = parse_trace(text).unwrap();

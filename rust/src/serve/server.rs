@@ -28,6 +28,7 @@ use crate::sched::thermos::{Preference, ThermosSched};
 use crate::sched::{BigLittleSched, RelmasSched, Scheduler, SimbaSched, SysSnapshot};
 use crate::sim::{Mapping, ProfileCache, SimConfig, Simulator};
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 use crate::workload::{Job, ModelZoo};
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -144,6 +145,14 @@ pub struct Server<'a, S: ServeSched> {
     queues: [VecDeque<Pending>; TenantClass::COUNT],
     hub: Arc<Mutex<TelemetryHub>>,
     replay: Option<Arc<Mutex<ReplayWriter>>>,
+    /// Job ids completed since the last [`Server::take_epoch_done`] (fed by
+    /// the engine completion callback; the cluster supervisor's at-most-
+    /// once accounting reads these at each epoch barrier).
+    epoch_done: Arc<Mutex<Vec<u64>>>,
+    /// Request ids resolved *negatively* since the last take: rejected at
+    /// admission, deadline-shed, or pressure-shed. These will never
+    /// complete, so the supervisor can stop tracking them.
+    epoch_dropped: Vec<u64>,
     snapshots: Vec<Json>,
     next_snapshot_s: f64,
     next_id: u64,
@@ -163,15 +172,23 @@ impl<'a, S: ServeSched> Server<'a, S> {
         source: Box<dyn TrafficSource>,
         cfg: ServeConfig,
     ) -> Server<'a, S> {
-        let mut sim = Simulator::open_loop(arch, sched, cfg.sim.clone());
-        let hub = Arc::new(Mutex::new(TelemetryHub::new()));
-        let hub_cb = hub.clone();
-        sim.on_completed = Some(Box::new(move |stats| {
-            hub_cb.lock().unwrap().on_completed(stats);
-        }));
+        Self::new_with_hub(arch, sched, source, cfg, Arc::new(Mutex::new(TelemetryHub::new())))
+    }
+
+    /// Build a server around an existing telemetry hub. Shard restarts use
+    /// this: the hub (and its accumulated counters/histograms) survives
+    /// the engine + scheduler it instruments.
+    pub fn new_with_hub(
+        arch: &'a Arch,
+        sched: S,
+        source: Box<dyn TrafficSource>,
+        cfg: ServeConfig,
+        hub: Arc<Mutex<TelemetryHub>>,
+    ) -> Server<'a, S> {
+        let sim = Simulator::open_loop(arch, sched, cfg.sim.clone());
         let n_clusters = arch.clusters.len();
         let snapshot_every = cfg.snapshot_every_s;
-        Server {
+        let mut server = Server {
             arch,
             sim,
             source,
@@ -180,6 +197,8 @@ impl<'a, S: ServeSched> Server<'a, S> {
             queues: Default::default(),
             hub,
             replay: None,
+            epoch_done: Arc::new(Mutex::new(Vec::new())),
+            epoch_dropped: Vec::new(),
             snapshots: Vec::new(),
             next_snapshot_s: snapshot_every,
             next_id: 0,
@@ -187,16 +206,35 @@ impl<'a, S: ServeSched> Server<'a, S> {
             cluster_max_temp_k: vec![arch.t_ambient; n_clusters],
             epoch_peak_temp_k: arch.t_ambient,
             on_snapshot: None,
-        }
+        };
+        server.wire_completion();
+        server
     }
 
-    /// Record every offered request and every mapping decision to `w`.
+    /// (Re)attach the engine completion callback to the current hub,
+    /// epoch-done buffer, and replay writer.
+    fn wire_completion(&mut self) {
+        let hub = self.hub.clone();
+        let done = self.epoch_done.clone();
+        let replay = self.replay.clone();
+        self.sim.on_completed = Some(Box::new(move |stats| {
+            lock_recover(&hub).on_completed(stats);
+            lock_recover(&done).push(stats.id);
+            if let Some(w) = &replay {
+                let _ = lock_recover(w).done(stats.id, stats.completed_s);
+            }
+        }));
+    }
+
+    /// Record every offered request, mapping decision, and completion to
+    /// `w`.
     pub fn with_replay(mut self, w: Arc<Mutex<ReplayWriter>>) -> Self {
         let w_cb = w.clone();
         self.sim.on_mapped = Some(Box::new(move |job, profile| {
-            let _ = w_cb.lock().unwrap().decision(job, profile);
+            let _ = lock_recover(&w_cb).decision(job, profile);
         }));
         self.replay = Some(w);
+        self.wire_completion();
         self
     }
 
@@ -210,18 +248,29 @@ impl<'a, S: ServeSched> Server<'a, S> {
     /// `t_s` (batched ahead by the cluster router) are admitted now but
     /// held until their arrival time before dispatch.
     pub fn offer(&mut self, req: ServeRequest) {
+        let id = self.next_id;
+        self.offer_with_id(id, req);
+    }
+
+    /// Offer a request under a caller-assigned id (the cluster supervisor
+    /// assigns globally-unique ids so a retried request keeps its identity
+    /// across a failover — the basis of at-most-once accounting). A
+    /// rejected id is recorded as dropped so the caller learns it will
+    /// never complete.
+    pub fn offer_with_id(&mut self, id: u64, req: ServeRequest) {
+        self.next_id = self.next_id.max(id + 1);
         if let Some(w) = &self.replay {
-            let _ = w.lock().unwrap().request(&req);
+            let _ = lock_recover(w).request(&req);
         }
         let ti = req.tenant.index();
-        let mut hub = self.hub.lock().unwrap();
+        let mut hub = lock_recover(&self.hub);
         hub.on_offered(req.tenant);
         if self.queues[ti].len() >= self.cfg.tenant_queue_cap {
             hub.on_reject(req.tenant);
+            drop(hub);
+            self.epoch_dropped.push(id);
             return;
         }
-        let id = self.next_id;
-        self.next_id += 1;
         hub.on_admit(req.tenant, id);
         drop(hub);
         self.queues[ti].push_back(Pending { id, req });
@@ -233,8 +282,9 @@ impl<'a, S: ServeSched> Server<'a, S> {
             for q in self.queues.iter_mut() {
                 while let Some(p) = q.front() {
                     if now - p.req.t_s > self.cfg.max_wait_s {
-                        let p = q.pop_front().unwrap();
-                        self.hub.lock().unwrap().on_shed(p.req.tenant, p.id);
+                        let Some(p) = q.pop_front() else { break };
+                        lock_recover(&self.hub).on_shed(p.req.tenant, p.id);
+                        self.epoch_dropped.push(p.id);
                     } else {
                         break;
                     }
@@ -250,7 +300,8 @@ impl<'a, S: ServeSched> Server<'a, S> {
             for tc in [TenantClass::Energy, TenantClass::Balanced, TenantClass::Exec] {
                 while backlog > self.cfg.pressure_depth {
                     let Some(p) = self.queues[tc.index()].pop_front() else { break };
-                    self.hub.lock().unwrap().on_shed_pressure(tc, p.id);
+                    lock_recover(&self.hub).on_shed_pressure(tc, p.id);
+                    self.epoch_dropped.push(p.id);
                     backlog -= 1;
                 }
             }
@@ -270,7 +321,7 @@ impl<'a, S: ServeSched> Server<'a, S> {
                 if !ready {
                     continue;
                 }
-                let p = self.queues[ti].pop_front().unwrap();
+                let Some(p) = self.queues[ti].pop_front() else { continue };
                 self.rr = (ti + 1) % TenantClass::COUNT;
                 self.sim.sched.register_pref(p.id, p.req.tenant.pref());
                 self.sim.inject_job(Job {
@@ -294,7 +345,7 @@ impl<'a, S: ServeSched> Server<'a, S> {
     }
 
     fn post_step(&mut self) {
-        self.hub.lock().unwrap().sample_depths(self.service_depth(), self.sim.queue_len());
+        lock_recover(&self.hub).sample_depths(self.service_depth(), self.sim.queue_len());
         for (c, &t) in self.sim.temps().iter().enumerate() {
             let cl = self.arch.chiplets[c].pim as usize;
             self.cluster_max_temp_k[cl] = self.cluster_max_temp_k[cl].max(t);
@@ -311,7 +362,7 @@ impl<'a, S: ServeSched> Server<'a, S> {
     }
 
     fn snapshot_json(&self) -> Json {
-        let hub = self.hub.lock().unwrap();
+        let hub = lock_recover(&self.hub);
         let (offered, admitted, rejected, shed, completed) = hub.totals();
         Json::obj(vec![
             ("t_s", Json::Num(self.sim.now())),
@@ -387,12 +438,41 @@ impl<'a, S: ServeSched> Server<'a, S> {
     }
 
     pub fn completed_total(&self) -> u64 {
-        self.hub.lock().unwrap().totals().4
+        lock_recover(&self.hub).totals().4
     }
 
     /// Shared handle to the telemetry hub (cluster merges these).
     pub fn hub_handle(&self) -> Arc<Mutex<TelemetryHub>> {
         self.hub.clone()
+    }
+
+    /// Drain the ids resolved since the last call: `(completed, dropped)`.
+    /// Dropped means rejected or shed — the id will never complete. The
+    /// cluster supervisor reads this at each epoch barrier to settle its
+    /// in-flight ledger transactionally (crashes land only on barriers, so
+    /// there is no completed-but-unreported window).
+    pub fn take_epoch_done(&mut self) -> (Vec<u64>, Vec<u64>) {
+        let done = std::mem::take(&mut *lock_recover(&self.epoch_done));
+        let dropped = std::mem::take(&mut self.epoch_dropped);
+        (done, dropped)
+    }
+
+    /// Fault injection: force a chiplet offline (thermal trip) or back.
+    pub fn set_chiplet_offline(&mut self, chiplet: usize, off: bool) {
+        self.sim.set_chiplet_offline(chiplet, off);
+    }
+
+    /// Fault recovery: book a supervisor-detected hang of `gap_s` seconds —
+    /// the engine clock jumps to cluster time and active jobs record the
+    /// gap as stall.
+    pub fn stall_for(&mut self, gap_s: f64) {
+        self.sim.stall_all(gap_s);
+    }
+
+    /// Fast-forward the engine clock (shard restart rejoining cluster
+    /// time).
+    pub fn set_clock_s(&mut self, t_s: f64) {
+        self.sim.set_clock_s(t_s);
     }
 
     /// Peak chiplet temperature since the previous call (epoch telemetry
@@ -425,10 +505,10 @@ impl<'a, S: ServeSched> Server<'a, S> {
     /// via [`Server::advance`] call this directly).
     pub fn finish(mut self) -> ServeReport {
         if let Some(w) = &self.replay {
-            let _ = w.lock().unwrap().flush();
+            let _ = lock_recover(w).flush();
         }
         let (json, digest) = {
-            let hub = self.hub.lock().unwrap();
+            let hub = lock_recover(&self.hub);
             let (offered, admitted, rejected, shed, completed) = hub.totals();
             let now = self.sim.now();
             let json = Json::obj(vec![

@@ -116,6 +116,9 @@ pub struct Simulator<'a, S: Scheduler> {
     thermal: DssModel,
     free_bits: Vec<u64>,
     throttled: Vec<bool>,
+    /// Chiplets forced offline by fault injection (thermal trip): power-
+    /// gated, masked out of scheduling, and stalling any job mapped there.
+    offline: Vec<bool>,
     temps: Vec<f64>,
     queue: JobQueue,
     backlog: std::collections::VecDeque<Job>,
@@ -182,6 +185,7 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
                 .map(|c| arch.specs[c.pim as usize].mem_bits)
                 .collect(),
             throttled: vec![false; arch.num_chiplets()],
+            offline: vec![false; arch.num_chiplets()],
             temps: vec![arch.t_ambient; arch.num_chiplets()],
             queue: JobQueue::new(cfg.queue_capacity),
             backlog: Default::default(),
@@ -276,11 +280,53 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         self.cap_gated_steps
     }
 
-    /// Thermal or power pressure: any throttled chiplet, or the power cap
-    /// currently gating admission. The serve layer consults this for
-    /// SLO-ordered load shedding.
+    /// Thermal or power pressure: any throttled or tripped-offline chiplet,
+    /// or the power cap currently gating admission. The serve layer
+    /// consults this for SLO-ordered load shedding.
     pub fn under_pressure(&self) -> bool {
-        self.cap_gated || self.throttled.iter().any(|&t| t)
+        self.cap_gated
+            || self.throttled.iter().any(|&t| t)
+            || self.offline.iter().any(|&o| o)
+    }
+
+    /// Force a chiplet offline (fault injection: thermal trip) or bring it
+    /// back. Offline chiplets are power-gated (no leakage), advertise zero
+    /// free memory to the scheduler, and stall any job mapped onto them —
+    /// resident weights survive (the PIM arrays are non-volatile), so work
+    /// resumes when the chiplet returns.
+    pub fn set_chiplet_offline(&mut self, chiplet: usize, off: bool) {
+        if chiplet < self.offline.len() {
+            self.offline[chiplet] = off;
+        }
+    }
+
+    /// Chiplets currently forced offline.
+    pub fn offline(&self) -> &[bool] {
+        &self.offline
+    }
+
+    /// Freeze-then-catch-up after a supervisor-detected hang: the engine
+    /// made no progress for `gap_s` of cluster time. The clock jumps
+    /// forward and every active job books the gap as stall time, so
+    /// completion stamps (`mapped + load + run + stall`) stay consistent
+    /// with cluster time while no compute or energy accrues.
+    pub fn stall_all(&mut self, gap_s: f64) {
+        if gap_s <= 0.0 {
+            return;
+        }
+        self.now += gap_s;
+        for a in self.active.iter_mut() {
+            a.stall_s += gap_s;
+        }
+    }
+
+    /// Fast-forward the clock to `t_s` (shard restart from checkpoint: the
+    /// rebuilt engine must rejoin cluster time, not resume behind it).
+    /// Never moves the clock backwards.
+    pub fn set_clock_s(&mut self, t_s: f64) {
+        if t_s > self.now {
+            self.now = t_s;
+        }
     }
 
     /// Share an [`ExecProfile`] memo table (e.g. across cluster shards).
@@ -297,11 +343,17 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
     }
 
     fn snapshot(&self) -> SysSnapshot {
-        SysSnapshot {
-            free_bits: self.free_bits.clone(),
-            temps: self.temps.clone(),
-            throttled: self.throttled.clone(),
+        let mut free_bits = self.free_bits.clone();
+        let mut throttled = self.throttled.clone();
+        // Offline chiplets are invisible capacity: no free memory and
+        // permanently "throttled" from the scheduler's point of view.
+        for (c, &off) in self.offline.iter().enumerate() {
+            if off {
+                free_bits[c] = 0;
+                throttled[c] = true;
+            }
         }
+        SysSnapshot { free_bits, temps: self.temps.clone(), throttled }
     }
 
     /// Admit host arrivals; host stalls (backlog) when the FIFO is full.
@@ -423,12 +475,13 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
                 continue;
             }
             // Streaming phase.
-            let stalled = a.chiplets.iter().any(|&c| self.throttled[c]);
+            let stalled = a.chiplets.iter().any(|&c| self.throttled[c] || self.offline[c]);
             if stalled {
                 a.stall_s += left;
                 let leak: f64 = a
                     .chiplets
                     .iter()
+                    .filter(|&&c| !self.offline[c])
                     .map(|&c| {
                         let spec = self.arch.spec(c);
                         let share =
@@ -453,9 +506,12 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
             }
         }
 
-        // Leakage: every chiplet leaks whenever powered (retention).
+        // Leakage: every powered chiplet leaks (retention); offline
+        // chiplets are power-gated.
         for (c, p) in power.iter_mut().enumerate() {
-            *p += self.arch.spec(c).leakage_w;
+            if !self.offline[c] {
+                *p += self.arch.spec(c).leakage_w;
+            }
         }
 
         // Attribute leakage energy to jobs by resident-bits share (rest is
@@ -464,6 +520,7 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
             let leak: f64 = a
                 .chiplets
                 .iter()
+                .filter(|&&c| !self.offline[c])
                 .map(|&c| {
                     let spec = self.arch.spec(c);
                     spec.leakage_w * (a.bits_per_chiplet[c] as f64 / spec.mem_bits as f64)
@@ -816,6 +873,113 @@ mod tests {
         sim.set_power_cap_w(None);
         let (r, _) = sim.run_drain(120.0);
         assert_eq!(r.jobs.len(), 1);
+    }
+
+    #[test]
+    fn offline_chiplets_block_mapping_until_restored() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let mut sim = Simulator::open_loop(&arch, sched, quick_cfg(1.0));
+        for c in 0..arch.num_chiplets() {
+            sim.set_chiplet_offline(c, true);
+        }
+        let zoo = ModelZoo::new();
+        sim.inject_job(Job {
+            id: 3,
+            dcg: zoo.dcg(crate::workload::DnnModel::ResNet18),
+            images: 100,
+            arrival_s: 0.0,
+        });
+        for _ in 0..20 {
+            sim.step();
+        }
+        assert_eq!(sim.active_count(), 0, "nothing can map on a dead fabric");
+        assert_eq!(sim.queue_len(), 1);
+        assert!(sim.under_pressure());
+        // Power-gated fabric: package power is exactly zero (no leakage).
+        assert_eq!(sim.power_w(), 0.0);
+        for c in 0..arch.num_chiplets() {
+            sim.set_chiplet_offline(c, false);
+        }
+        let (r, _) = sim.run_drain(120.0);
+        assert_eq!(r.jobs.len(), 1, "job must complete once the fabric returns");
+    }
+
+    #[test]
+    fn offline_chiplet_stalls_resident_jobs() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let mut sim = Simulator::open_loop(&arch, sched, quick_cfg(1.0));
+        let zoo = ModelZoo::new();
+        sim.inject_job(Job {
+            id: 9,
+            dcg: zoo.dcg(crate::workload::DnnModel::ResNet18),
+            images: 1000,
+            arrival_s: 0.0,
+        });
+        // Reach the streaming phase (mapped and weights loaded) before
+        // tripping, so every faulted step below is a pure stall.
+        let mut guard = 0;
+        while sim.active_count() == 0 || sim.active[0].load_remaining_s > 0.0 {
+            sim.step();
+            guard += 1;
+            assert!(guard < 10_000, "job never reached the streaming phase");
+        }
+        let used: Vec<usize> = sim.active[0].chiplets.clone();
+        assert!(!used.is_empty());
+        for &c in &used {
+            sim.set_chiplet_offline(c, true);
+        }
+        let stall_before = sim.active[0].stall_s;
+        let run_before = sim.active[0].run_remaining_s;
+        for _ in 0..10 {
+            sim.step();
+        }
+        assert_eq!(sim.active_count(), 1, "job must not finish while tripped");
+        assert!(sim.active[0].stall_s > stall_before, "trip must stall the job");
+        assert!((sim.active[0].run_remaining_s - run_before).abs() < 1e-12);
+        for &c in &used {
+            sim.set_chiplet_offline(c, false);
+        }
+        let (r, _) = sim.run_drain(600.0);
+        assert_eq!(r.jobs.len(), 1);
+        assert!(r.jobs[0].stall_s >= 1.0 - 1e-9, "10 stalled steps ≥ 1 s of stall");
+    }
+
+    #[test]
+    fn stall_all_books_hang_time_into_completions() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let mut sim = Simulator::open_loop(&arch, sched, quick_cfg(1.0));
+        let zoo = ModelZoo::new();
+        sim.inject_job(Job {
+            id: 4,
+            dcg: zoo.dcg(crate::workload::DnnModel::ResNet18),
+            images: 200,
+            arrival_s: 0.0,
+        });
+        while sim.active_count() == 0 {
+            sim.step();
+        }
+        let t0 = sim.now();
+        sim.stall_all(5.0);
+        assert!((sim.now() - (t0 + 5.0)).abs() < 1e-12);
+        let (r, _) = sim.run_drain(120.0);
+        assert_eq!(r.jobs.len(), 1);
+        assert!(r.jobs[0].stall_s >= 5.0, "hang gap must be booked as stall");
+        // Completion stamp is consistent with the shifted clock.
+        assert!(r.jobs[0].completed_s >= t0 + 5.0);
+    }
+
+    #[test]
+    fn set_clock_never_rewinds() {
+        let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+        let sched = SimbaSched::new(arch.clone());
+        let mut sim = Simulator::open_loop(&arch, sched, quick_cfg(1.0));
+        sim.set_clock_s(42.0);
+        assert_eq!(sim.now(), 42.0);
+        sim.set_clock_s(10.0);
+        assert_eq!(sim.now(), 42.0, "clock must be monotonic");
     }
 
     #[test]

@@ -35,7 +35,7 @@ fn cluster_cfg(shards: usize, duration_s: f64, seed: u64) -> ClusterConfig {
 fn run(shards: usize, rate: f64, duration_s: f64, seed: u64) -> ClusterReport {
     let cfg = cluster_cfg(shards, duration_s, seed);
     let source = Box::new(PoissonSource::new(rate, 60, MAX_IMAGES, [1.0, 1.0, 1.0], seed));
-    run_cluster(cfg, source)
+    run_cluster(cfg, source).expect("cluster run")
 }
 
 fn num(j: &Json, key: &str) -> f64 {
@@ -119,6 +119,8 @@ fn merged_report_contract_holds() {
     assert!((caps - num(j, "power_budget_w")).abs() < 1e-6);
     // The epoch barrier ran every epoch.
     assert_eq!(num(j.get("arbiter"), "epochs"), 20.0);
+    // Fault-free runs must not carry fault telemetry (digest stability).
+    assert!(matches!(j.get("faults"), Json::Null), "fault-free run leaked a `faults` key");
     // Per-shard detail rows agree with the merge.
     let detail_done: f64 = j
         .get("shards_detail")

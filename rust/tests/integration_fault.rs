@@ -1,0 +1,155 @@
+//! Integration: deterministic fault injection on the cluster serving
+//! path — chaos runs reproduce byte-identical merged digests, a mid-run
+//! shard crash fails work over with at-most-once completion (no duplicate
+//! ids across the per-shard replay logs), and hangs resolve without
+//! failover.
+
+use std::collections::HashSet;
+use thermos::cluster::{run_cluster, ClusterConfig, ClusterReport, ShardSchedSpec};
+use thermos::fault::{FaultEvent, FaultKind, FaultPlan};
+use thermos::serve::{PoissonSource, ServeConfig};
+use thermos::sim::SimConfig;
+use thermos::util::json::Json;
+
+const MAX_IMAGES: u64 = 400;
+
+fn cluster_cfg(shards: usize, duration_s: f64, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        duration_s,
+        drain_max_s: 30.0,
+        serve: ServeConfig {
+            duration_s,
+            tenant_queue_cap: 32,
+            max_wait_s: 60.0,
+            snapshot_every_s: 0.0,
+            pressure_depth: 48,
+            sim: SimConfig {
+                warmup_s: 0.0,
+                max_images: MAX_IMAGES,
+                seed,
+                ..SimConfig::default()
+            },
+        },
+        sched: ShardSchedSpec::Simba,
+        ..ClusterConfig::default()
+    }
+}
+
+fn run(cfg: ClusterConfig, rate: f64, seed: u64) -> ClusterReport {
+    let source = Box::new(PoissonSource::new(rate, 60, MAX_IMAGES, [1.0, 1.0, 1.0], seed));
+    run_cluster(cfg, source).expect("cluster run")
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).as_f64().unwrap_or(0.0)
+}
+
+fn fault_stat(j: &Json, key: &str) -> f64 {
+    num(j.get("faults"), key)
+}
+
+#[test]
+fn chaos_same_seed_reproduces_merged_digest() {
+    let shards = 4;
+    let duration_s = 30.0;
+    let plan = FaultPlan::chaos(7, shards, 30);
+    assert!(!plan.is_empty(), "chaos plan should schedule faults");
+    let mk = || {
+        let mut cfg = cluster_cfg(shards, duration_s, 42);
+        cfg.faults = Some(plan.clone());
+        cfg
+    };
+    let a = run(mk(), 4.0, 42);
+    let b = run(mk(), 4.0, 42);
+    // Crashes, failovers, restarts, and retries — all on real threads —
+    // must still merge to byte-identical fleet telemetry.
+    assert_eq!(
+        a.json.to_string_compact(),
+        b.json.to_string_compact(),
+        "same-seed chaos runs diverged"
+    );
+    assert_eq!(a.digest, b.digest);
+    assert!(fault_stat(&a.json, "faults_injected") > 0.0, "chaos injected nothing");
+    assert!(fault_stat(&a.json, "failovers") > 0.0, "chaos crash did not fail over");
+    assert!(num(&a.json, "completed") > 0.0, "faulted cluster completed no jobs");
+
+    // A different chaos seed perturbs the run differently.
+    let mut cfg = cluster_cfg(shards, duration_s, 42);
+    cfg.faults = Some(FaultPlan::chaos(8, shards, 30));
+    let c = run(cfg, 4.0, 42);
+    assert_ne!(a.digest, c.digest, "different chaos seeds must change the digest");
+}
+
+#[test]
+fn shard_crash_fails_over_with_at_most_once_completion() {
+    let shards = 2;
+    let duration_s = 20.0;
+    let base = std::env::temp_dir().join("thermos_fault_crash_test");
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).expect("temp dir");
+    let record_base = base.join("replay").to_string_lossy().into_owned();
+
+    let mut cfg = cluster_cfg(shards, duration_s, 9);
+    cfg.record_base = Some(record_base.clone());
+    // Kill shard 1 at epoch 5; the supervisor restarts it at epoch 8.
+    cfg.faults = Some(FaultPlan::new(vec![FaultEvent {
+        epoch: 5,
+        shard: 1,
+        kind: FaultKind::ShardCrash { down_epochs: 3 },
+    }]));
+    let r = run(cfg, 3.0, 9);
+    let j = &r.json;
+    assert_eq!(fault_stat(j, "faults_injected"), 1.0);
+    assert_eq!(fault_stat(j, "failovers"), 1.0);
+    assert_eq!(fault_stat(j, "restarts"), 1.0);
+    assert_eq!(fault_stat(j, "downtime_epochs"), 3.0, "dead for epochs 5..8");
+    assert!(num(j, "completed") > 0.0);
+
+    // At-most-once: every completion id appears exactly once across all
+    // per-shard replay logs, and the done count matches the merged total.
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut done_lines = 0u64;
+    for s in 0..shards {
+        let path = format!("{record_base}.shard{s}.jsonl");
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read replay log {path}: {e}"));
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let ev = Json::parse(line).expect("replay line parses");
+            if ev.get("ev").as_str() != Some("done") {
+                continue;
+            }
+            done_lines += 1;
+            let id = ev.get("id").as_f64().expect("done id") as u64;
+            assert!(seen.insert(id), "request id {id} completed twice (shard {s})");
+        }
+    }
+    assert_eq!(
+        done_lines,
+        num(j, "completed") as u64,
+        "replay `done` events disagree with the merged completion count"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn short_hang_resolves_without_failover() {
+    let shards = 2;
+    let mut cfg = cluster_cfg(shards, 16.0, 21);
+    // A 2-epoch hang sits exactly at supervisor patience: the shard is
+    // drained from the ring, resumes, and is never crashed.
+    cfg.faults = Some(FaultPlan::new(vec![FaultEvent {
+        epoch: 4,
+        shard: 0,
+        kind: FaultKind::ShardHang { epochs: 2 },
+    }]));
+    let r = run(cfg, 3.0, 21);
+    let j = &r.json;
+    assert_eq!(fault_stat(j, "faults_injected"), 1.0);
+    assert_eq!(fault_stat(j, "failovers"), 0.0, "a tolerated hang must not fail over");
+    assert_eq!(fault_stat(j, "restarts"), 0.0);
+    assert_eq!(fault_stat(j, "downtime_epochs"), 2.0);
+    assert!(num(j, "completed") > 0.0, "hung cluster completed no jobs");
+    // The run still reports one barrier per epoch.
+    assert_eq!(num(j.get("arbiter"), "epochs"), 16.0);
+}
