@@ -3,10 +3,11 @@
 //! and the single THERMOS policy under its three runtime preferences.
 //!
 //! Run: `cargo bench --bench fig7_throughput`
-//! (THERMOS_EXP_FAST=1 for a CI-scale run.)
+//! (THERMOS_EXP_FAST=1 for a CI-scale run; THERMOS_THREADS=N to size the
+//! work pool — rows are identical for any value.)
 
 use thermos::experiments::report::{result_cells, Table, RESULT_HEADERS};
-use thermos::experiments::{exp_config, exp_seeds, fast_mode, run_averaged, standard_contenders};
+use thermos::experiments::{fast_mode, standard_contenders, sweep_standard};
 use thermos::noi::NoiTopology;
 
 fn main() {
@@ -16,17 +17,19 @@ fn main() {
     } else {
         vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0, 6.0]
     };
-    let seeds = exp_seeds();
     let contenders = standard_contenders(noi);
 
     println!("== Fig. 7: throughput vs admit rate, e2e latency vs throughput (mesh) ==");
+    // Every (scheduler × rate × seed) run executes on the work pool up
+    // front; the grid comes back kind-major, matching the old serial
+    // loop's row order exactly.
+    let grid = sweep_standard(noi, &contenders, &rates);
     let mut table = Table::new(&RESULT_HEADERS);
-    for kind in &contenders {
+    for (kind, row) in contenders.iter().zip(&grid) {
         let mut saturated = 0.0f64;
-        for &rate in &rates {
-            let r = run_averaged(noi, kind, &exp_config(rate, 1), &seeds);
+        for (&rate, r) in rates.iter().zip(row) {
             saturated = saturated.max(r.throughput_jobs_s);
-            table.row(result_cells(rate, &r));
+            table.row(result_cells(rate, r));
         }
         println!(
             "{:<22} max achieved throughput: {:.2} DNN/s",

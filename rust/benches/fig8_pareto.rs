@@ -10,8 +10,7 @@
 
 use thermos::experiments::report::Table;
 use thermos::experiments::{
-    exp_config, exp_seeds, fast_mode, load_thermos_theta, run_averaged, standard_contenders,
-    SchedKind,
+    fast_mode, load_thermos_theta, standard_contenders, sweep_standard, SchedKind,
 };
 use thermos::noi::NoiTopology;
 
@@ -19,14 +18,16 @@ fn main() {
     let noi = NoiTopology::Mesh;
     let rates: Vec<f64> =
         if fast_mode() { vec![1.5, 2.5] } else { vec![1.5, 2.0, 2.5, 3.0, 3.5, 4.0] };
-    let seeds = exp_seeds();
 
     println!("== Fig. 8: Pareto exec-time vs energy per throughput scenario (mesh) ==");
+    let contenders = standard_contenders(noi);
+    // Pool the whole grid; print in the old rate-major order.
+    let grid = sweep_standard(noi, &contenders, &rates);
     let mut table = Table::new(&["throughput_scenario", "scheduler", "exec_s", "energy_j", "edp"]);
-    for &rate in &rates {
+    for (ri, &rate) in rates.iter().enumerate() {
         println!("\n-- scenario: {rate} DNN/s --");
-        for kind in standard_contenders(noi) {
-            let r = run_averaged(noi, &kind, &exp_config(rate, 1), &seeds);
+        for ki in 0..contenders.len() {
+            let r = &grid[ki][ri];
             println!(
                 "  {:<22} exec {:>8.3} s  energy {:>9.4} J  (achieved {:>5.2} DNN/s)",
                 r.scheduler, r.mean_exec_s, r.mean_energy_j, r.throughput_jobs_s
@@ -47,15 +48,24 @@ fn main() {
     if !trained {
         println!("   (untrained policy — run `thermos train` for the real front)");
     }
-    for &(wl, label) in
-        &[(1.0, "1.00/0.00"), (0.75, "0.75/0.25"), (0.5, "0.50/0.50"), (0.25, "0.25/0.75"), (0.0, "0.00/1.00")]
-    {
-        let kind = SchedKind::Thermos {
+    let omegas: [(f32, &str); 5] = [
+        (1.0, "1.00/0.00"),
+        (0.75, "0.75/0.25"),
+        (0.5, "0.50/0.50"),
+        (0.25, "0.25/0.75"),
+        (0.0, "0.00/1.00"),
+    ];
+    let grid_kinds: Vec<SchedKind> = omegas
+        .iter()
+        .map(|&(wl, _)| SchedKind::Thermos {
             theta: theta.clone(),
             pref: [wl, 1.0 - wl],
             label: "grid",
-        };
-        let r = run_averaged(noi, &kind, &exp_config(2.0, 1), &seeds);
+        })
+        .collect();
+    let omega_grid = sweep_standard(noi, &grid_kinds, &[2.0]);
+    for (&(_, label), row) in omegas.iter().zip(&omega_grid) {
+        let r = &row[0];
         println!(
             "  ω = {label}   exec {:>8.3} s   energy {:>9.4} J",
             r.mean_exec_s, r.mean_energy_j

@@ -6,23 +6,25 @@
 //! Run: `cargo bench --bench fig9_noi_pareto`
 
 use thermos::experiments::report::Table;
-use thermos::experiments::{exp_config, exp_seeds, fast_mode, run_averaged, standard_contenders};
+use thermos::experiments::{fast_mode, standard_contenders, sweep_standard};
 use thermos::noi::NoiTopology;
 
 fn main() {
     let nois = [NoiTopology::Floret, NoiTopology::HexaMesh, NoiTopology::Kite];
     let rates: Vec<f64> = if fast_mode() { vec![1.5, 2.5] } else { vec![1.5, 2.5, 3.5] };
-    let seeds = exp_seeds();
 
     println!("== Fig. 9: Pareto comparison on Floret / HexaMesh / Kite ==");
     let mut table =
         Table::new(&["noi", "throughput_scenario", "scheduler", "exec_s", "energy_j", "edp"]);
     for &noi in &nois {
         println!("\n==== {} ====", noi.name());
-        for &rate in &rates {
+        let contenders = standard_contenders(noi);
+        // Pool the whole per-NoI grid; print in the old rate-major order.
+        let grid = sweep_standard(noi, &contenders, &rates);
+        for (ri, &rate) in rates.iter().enumerate() {
             println!("-- scenario {rate} DNN/s --");
-            for kind in standard_contenders(noi) {
-                let r = run_averaged(noi, &kind, &exp_config(rate, 1), &seeds);
+            for ki in 0..contenders.len() {
+                let r = &grid[ki][ri];
                 println!(
                     "  {:<22} exec {:>8.3} s  energy {:>9.4} J  (achieved {:>5.2} DNN/s)",
                     r.scheduler, r.mean_exec_s, r.mean_energy_j, r.throughput_jobs_s

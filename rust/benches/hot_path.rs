@@ -1,0 +1,120 @@
+//! Hot-path benchmarks: (a) simulation engine steps/sec on a steady
+//! streaming load — the per-100 ms step path allocates nothing — and
+//! (b) wall-clock of a 4-scheduler × 3-rate × 3-seed experiment sweep,
+//! serial (1 thread) vs the global work pool, asserting the pooled grid
+//! is identical to the serial one and reporting the speedup.
+//!
+//! Run: `cargo bench --bench hot_path`
+//! (THERMOS_BENCH_FAST=1 shrinks windows for CI; THERMOS_THREADS=N sizes
+//! the pool.) Emits `results/BENCH_hotpath.json`.
+
+use thermos::arch::Arch;
+use thermos::experiments::{load_relmas_actor, load_thermos_theta, sweep_averaged, SchedKind};
+use thermos::noi::NoiTopology;
+use thermos::sched::SimbaSched;
+use thermos::sim::{SimConfig, SimResult, Simulator};
+use thermos::util::bench::{time_once, Group};
+use thermos::util::json::Json;
+use thermos::util::pool::{global_threads, WorkPool};
+
+fn fast() -> bool {
+    std::env::var("THERMOS_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// Byte-identical determinism is the pool's contract, so the comparison
+/// is exact `==` on every digested metric — no tolerance.
+fn assert_grids_identical(a: &[Vec<SimResult>], b: &[Vec<SimResult>]) {
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(rb) {
+            assert_eq!(x.scheduler, y.scheduler);
+            assert_eq!(x.throughput_jobs_s, y.throughput_jobs_s);
+            assert_eq!(x.mean_exec_s, y.mean_exec_s);
+            assert_eq!(x.mean_e2e_s, y.mean_e2e_s);
+            assert_eq!(x.mean_energy_j, y.mean_energy_j);
+            assert_eq!(x.mean_edp, y.mean_edp);
+            assert_eq!(x.violation_chiplet_s, y.violation_chiplet_s);
+            assert_eq!(x.system_energy_j, y.system_energy_j);
+            assert_eq!(x.max_temp_k, y.max_temp_k);
+            assert_eq!(x.throttle_events, y.throttle_events);
+        }
+    }
+}
+
+fn main() {
+    // (a) Engine steps/sec on a loaded system.
+    let arch = Arch::paper_heterogeneous(NoiTopology::Mesh);
+    let cfg = SimConfig { admit_rate: 2.0, seed: 1, ..SimConfig::default() };
+    let mut sim = Simulator::new(&arch, SimbaSched::new(arch.clone()), cfg);
+    for _ in 0..50 {
+        sim.step(); // reach a loaded steady state before measuring
+    }
+    let mut g = Group::new("simulation hot path");
+    let step_mean_ns = g.bench("engine.step (mesh, simba, 2 DNN/s)", || sim.step()).mean_ns;
+    let steps_per_sec = 1e9 / step_mean_ns;
+    println!(
+        "≈ {steps_per_sec:.0} steps/s ({:.0} sim-seconds per wall-second)",
+        steps_per_sec * 0.1
+    );
+
+    // (b) Serial vs pooled sweep wall-clock.
+    let noi = NoiTopology::Mesh;
+    let (theta, _) = load_thermos_theta(noi);
+    let (actor, _) = load_relmas_actor(noi, arch.num_chiplets());
+    let kinds = vec![
+        SchedKind::Simba,
+        SchedKind::BigLittle,
+        SchedKind::Relmas { actor },
+        SchedKind::Thermos { theta, pref: [0.5, 0.5], label: "balanced" },
+    ];
+    let rates = [1.0, 2.0, 4.0];
+    let seeds = [11u64, 22, 33];
+    let (warmup_s, duration_s, max_images, mix_jobs) =
+        if fast() { (2.0, 12.0, 400, 40) } else { (5.0, 40.0, 1_500, 100) };
+    let cfg_of = move |rate: f64, seed: u64| SimConfig {
+        admit_rate: rate,
+        warmup_s,
+        duration_s,
+        max_images,
+        mix_jobs,
+        seed,
+        ..SimConfig::default()
+    };
+
+    let tasks = kinds.len() * rates.len() * seeds.len();
+    println!(
+        "\n== sweep: {} schedulers × {} rates × {} seeds = {tasks} runs ==",
+        kinds.len(),
+        rates.len(),
+        seeds.len()
+    );
+    let (serial, serial_t) =
+        time_once(|| sweep_averaged(noi, &kinds, &rates, &seeds, &WorkPool::new(1), cfg_of));
+    let threads = global_threads();
+    let (pooled, pooled_t) =
+        time_once(|| sweep_averaged(noi, &kinds, &rates, &seeds, &WorkPool::global(), cfg_of));
+    assert_grids_identical(&serial, &pooled);
+    let serial_s = serial_t.as_secs_f64();
+    let pooled_s = pooled_t.as_secs_f64();
+    let speedup = serial_s / pooled_s.max(1e-9);
+    println!("serial (1 thread):   {serial_s:.2} s");
+    println!("pooled ({threads} threads):  {pooled_s:.2} s  → {speedup:.2}× speedup");
+    println!("pooled grid identical to serial grid ✓");
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("hot_path".into())),
+        ("steps_per_sec", Json::from(steps_per_sec)),
+        ("step_mean_ns", Json::from(step_mean_ns)),
+        ("sweep_tasks", Json::from(tasks as f64)),
+        ("serial_s", Json::from(serial_s)),
+        ("pooled_s", Json::from(pooled_s)),
+        ("speedup", Json::from(speedup)),
+        ("threads", Json::from(threads as f64)),
+        ("fast_mode", Json::Bool(fast())),
+    ]);
+    std::fs::create_dir_all("results").expect("create results/");
+    let path = "results/BENCH_hotpath.json";
+    std::fs::write(path, json.to_string_pretty() + "\n").expect("write bench json");
+    println!("wrote {path}");
+}

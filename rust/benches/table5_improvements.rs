@@ -7,13 +7,12 @@
 //! Run: `cargo bench --bench table5_improvements`
 
 use thermos::experiments::report::{pct_improvement, Table};
-use thermos::experiments::{exp_config, exp_seeds, fast_mode, run_averaged, standard_contenders};
+use thermos::experiments::{fast_mode, standard_contenders, sweep_standard};
 use thermos::noi::NoiTopology;
 use thermos::util::stats::mean;
 
 fn main() {
     let rates: Vec<f64> = if fast_mode() { vec![1.5, 2.5] } else { vec![1.5, 2.5, 3.5] };
-    let seeds = exp_seeds();
 
     println!("== Table 5: average % improvement of THERMOS vs baselines ==");
     let mut table = Table::new(&[
@@ -24,13 +23,16 @@ fn main() {
     ]);
 
     for noi in NoiTopology::all() {
-        // Collect per-rate metrics per scheduler.
+        // Pool the per-NoI grid, then accumulate per-rate metrics per
+        // scheduler in the old rate-major visit order.
+        let contenders = standard_contenders(noi);
+        let grid = sweep_standard(noi, &contenders, &rates);
         let mut exec: std::collections::HashMap<String, Vec<f64>> = Default::default();
         let mut energy: std::collections::HashMap<String, Vec<f64>> = Default::default();
         let mut edp: std::collections::HashMap<String, Vec<f64>> = Default::default();
-        for &rate in &rates {
-            for kind in standard_contenders(noi) {
-                let r = run_averaged(noi, &kind, &exp_config(rate, 1), &seeds);
+        for ri in 0..rates.len() {
+            for ki in 0..contenders.len() {
+                let r = &grid[ki][ri];
                 if r.jobs.is_empty() {
                     continue; // scheduler saturated below this rate
                 }

@@ -14,6 +14,7 @@ use crate::sched::state::{relmas_obs_dim, StateEncoder, NUM_CLUSTERS, STATE_DIM}
 use crate::sched::thermos::{Preference, ThermosSched};
 use crate::sched::{BigLittleSched, Scheduler, SimbaSched};
 use crate::sim::{SimConfig, SimResult, Simulator};
+use crate::util::pool::WorkPool;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::workload::ModelZoo;
@@ -151,21 +152,73 @@ pub fn average(results: &[SimResult]) -> SimResult {
     out
 }
 
-/// Seed-averaged run.
+/// Seed-averaged run. Seeds execute on the global work pool; each run is
+/// seeded exactly as the old serial loop was and results come back in
+/// seed order, so the average is byte-identical at any `--threads`.
 pub fn run_averaged(
     noi: NoiTopology,
     kind: &SchedKind,
     base_cfg: &SimConfig,
     seeds: &[u64],
 ) -> SimResult {
-    let results: Vec<SimResult> = seeds
-        .iter()
-        .map(|&s| {
-            let cfg = SimConfig { seed: s, ..base_cfg.clone() };
-            run_one(noi, kind, cfg)
-        })
-        .collect();
+    let results = WorkPool::global().run(seeds.len(), |i| {
+        let cfg = SimConfig { seed: seeds[i], ..base_cfg.clone() };
+        run_one(noi, kind, cfg)
+    });
     average(&results)
+}
+
+/// Full (scheduler × rate × seed) sweep on a work pool, averaged per cell.
+///
+/// The grid is flattened kind-major (kind, then rate, then seed — the same
+/// nesting the serial bench loops used), every cell is seeded through
+/// `cfg_of(rate, seed)` exactly as before, and the pool returns runs in
+/// grid order. `out[ki][ri]` is the seed average for `kinds[ki]` at
+/// `rates[ri]` — byte-identical for 1 and N threads.
+pub fn sweep_averaged<F>(
+    noi: NoiTopology,
+    kinds: &[SchedKind],
+    rates: &[f64],
+    seeds: &[u64],
+    pool: &WorkPool,
+    cfg_of: F,
+) -> Vec<Vec<SimResult>>
+where
+    F: Fn(f64, u64) -> SimConfig + Sync,
+{
+    let mut tasks: Vec<(usize, f64, u64)> = Vec::with_capacity(kinds.len() * rates.len() * seeds.len());
+    for ki in 0..kinds.len() {
+        for &rate in rates {
+            for &seed in seeds {
+                tasks.push((ki, rate, seed));
+            }
+        }
+    }
+    let runs = pool.map(&tasks, |_, &(ki, rate, seed)| run_one(noi, &kinds[ki], cfg_of(rate, seed)));
+    let mut chunks = runs.chunks(seeds.len().max(1));
+    let mut out: Vec<Vec<SimResult>> = Vec::with_capacity(kinds.len());
+    for _ in kinds {
+        let mut row = Vec::with_capacity(rates.len());
+        for _ in rates {
+            row.push(average(chunks.next().expect("task grid covers every (kind, rate) cell")));
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// `sweep_averaged` with the standard experiment config and seed set, on
+/// the globally configured pool. This is what the fig7/fig9/table5 bench
+/// targets call.
+pub fn sweep_standard(
+    noi: NoiTopology,
+    kinds: &[SchedKind],
+    rates: &[f64],
+) -> Vec<Vec<SimResult>> {
+    let seeds = exp_seeds();
+    sweep_averaged(noi, kinds, rates, &seeds, &WorkPool::global(), |rate, seed| {
+        exp_config(rate, seed)
+    })
 }
 
 /// Fast-mode switch for CI: THERMOS_EXP_FAST=1 shrinks windows and seeds.
@@ -239,5 +292,34 @@ mod tests {
         let r = run_averaged(NoiTopology::Mesh, &SchedKind::Simba, &cfg, &[1, 2]);
         assert!(r.throughput_jobs_s > 0.0);
         assert_eq!(r.scheduler, "simba");
+    }
+
+    #[test]
+    fn sweep_matches_per_cell_run_averaged() {
+        let base = SimConfig {
+            warmup_s: 2.0,
+            duration_s: 15.0,
+            max_images: 300,
+            mix_jobs: 25,
+            ..SimConfig::default()
+        };
+        let cfg_of = |rate: f64, seed: u64| SimConfig { admit_rate: rate, seed, ..base.clone() };
+        let kinds = [SchedKind::Simba, SchedKind::BigLittle];
+        let rates = [1.0, 2.0];
+        let seeds = [3u64, 4];
+        let grid =
+            sweep_averaged(NoiTopology::Mesh, &kinds, &rates, &seeds, &WorkPool::new(2), cfg_of);
+        assert_eq!(grid.len(), kinds.len());
+        assert_eq!(grid[0].len(), rates.len());
+        for (ki, kind) in kinds.iter().enumerate() {
+            for (ri, &rate) in rates.iter().enumerate() {
+                let direct = average(
+                    &seeds.iter().map(|&s| run_one(NoiTopology::Mesh, kind, cfg_of(rate, s))).collect::<Vec<_>>(),
+                );
+                assert_eq!(grid[ki][ri].throughput_jobs_s, direct.throughput_jobs_s);
+                assert_eq!(grid[ki][ri].mean_energy_j, direct.mean_energy_j);
+                assert_eq!(grid[ki][ri].scheduler, direct.scheduler);
+            }
+        }
     }
 }

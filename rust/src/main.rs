@@ -47,6 +47,9 @@ Common options:
   --noi <mesh|kite|floret|hexamesh>   NoI topology [mesh]
   --seed <n>                          RNG seed [1]
   --artifacts <dir>                   artifacts directory [artifacts]
+  --threads <n>                       work-pool width for sweeps and training
+                                      rollouts (or THERMOS_THREADS) [all cores];
+                                      results are identical for any value
 
 train options:
   --episodes <n>            [40]      --jobs <n> per episode [60]
@@ -110,7 +113,7 @@ fn main() {
             "record", "mix-jobs", "tenants", "queue-cap", "max-wait", "snapshot-every", "rate-on",
             "rate-off", "on-s", "off-s", "shards", "epoch", "budget", "batch-images",
             "pressure-depth", "drain-max", "autoscale-min", "autoscale-max", "shard-capacity",
-            "faults", "chaos",
+            "faults", "chaos", "threads",
         ],
     ) {
         Ok(a) => a,
@@ -122,6 +125,15 @@ fn main() {
     if args.cmd.is_empty() || args.has("help") {
         println!("{HELP}");
         return;
+    }
+    // 0 = unset: fall through to THERMOS_THREADS, then the core count.
+    match args.parse_usize("threads", 0) {
+        Ok(0) => {}
+        Ok(n) => thermos::util::pool::set_global_threads(n),
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
     }
     let r = match args.cmd.as_str() {
         "info" => cmd_info(&args),

@@ -19,7 +19,6 @@ use crate::workload::ModelZoo;
 use anyhow::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
 
 #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 pub struct RelmasTrainer {
@@ -95,38 +94,36 @@ impl RelmasTrainer {
             seed,
             ..SimConfig::default()
         };
+        // Stack-local cells borrowed by the sim callbacks (see
+        // `Trainer::rollout`) — no shared-ownership plumbing.
+        let mapped: RefCell<HashMap<u64, [f32; 2]>> = RefCell::new(HashMap::new());
+        let secondary: RefCell<HashMap<u64, [f32; 2]>> = RefCell::new(HashMap::new());
         let mut sim = Simulator::new(&self.arch, sched, cfg);
         sim.limit_jobs(self.cfg.jobs_per_episode);
-        let mapped: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
-        let secondary: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
-        {
-            let mapped = mapped.clone();
-            sim.on_mapped = Some(Box::new(move |job, profile| {
-                mapped.borrow_mut().insert(
-                    job.id,
-                    primary_reward(
-                        profile.ideal_exec_s(job.images),
-                        profile.ideal_dynamic_j(job.images),
-                        job.images,
-                    ),
-                );
-            }));
-            let secondary = secondary.clone();
-            sim.on_completed = Some(Box::new(move |stats| {
-                secondary.borrow_mut().insert(
-                    stats.id,
-                    secondary_reward(stats.stall_s, stats.stall_leak_j, stats.images),
-                );
-            }));
-        }
+        sim.on_mapped = Some(Box::new(|job, profile| {
+            mapped.borrow_mut().insert(
+                job.id,
+                primary_reward(
+                    profile.ideal_exec_s(job.images),
+                    profile.ideal_dynamic_j(job.images),
+                    job.images,
+                ),
+            );
+        }));
+        sim.on_completed = Some(Box::new(|stats| {
+            secondary.borrow_mut().insert(
+                stats.id,
+                secondary_reward(stats.stall_s, stats.stall_leak_j, stats.images),
+            );
+        }));
         let (_res, mut sched) = sim.run_drain(self.cfg.episode_max_s);
         let decisions = sched.take_decisions();
         let mut last_of_job: HashMap<u64, usize> = HashMap::new();
         for (i, d) in decisions.iter().enumerate() {
             last_of_job.insert(d.job_id, i);
         }
-        let mapped = mapped.borrow();
-        let secondary = secondary.borrow();
+        let mapped = mapped.into_inner();
+        let secondary = secondary.into_inner();
         let mut rsum = 0.0f32;
         let mut rjobs = 0usize;
         let transitions: Vec<Transition> = decisions

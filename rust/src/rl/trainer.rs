@@ -15,13 +15,13 @@ use crate::sched::policy::{NativeDdt, NativeMlp};
 use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
 use crate::sched::thermos::{Preference, ThermosSched, PREF_BALANCED, PREF_ENERGY, PREF_EXEC_TIME};
 use crate::sim::{SimConfig, Simulator};
+use crate::util::pool::WorkPool;
 use crate::util::rng::Rng;
 use crate::workload::ModelZoo;
 #[cfg(feature = "pjrt")]
 use anyhow::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -151,31 +151,29 @@ impl Trainer {
             seed,
             ..SimConfig::default()
         };
+        // Primary rewards become known at mapping; secondary at completion.
+        // Stack-local cells declared before `sim`, borrowed by its
+        // callbacks — the rollout owns everything it touches, which is
+        // what makes `&self` rollouts Send-able onto the work pool.
+        let mapped: RefCell<HashMap<u64, [f32; 2]>> = RefCell::new(HashMap::new());
+        let secondary: RefCell<HashMap<u64, [f32; 2]>> = RefCell::new(HashMap::new());
         let mut sim = Simulator::new(&self.arch, sched, cfg);
         sim.limit_jobs(self.cfg.jobs_per_episode);
-
-        // Primary rewards become known at mapping; secondary at completion.
-        let mapped: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
-        let secondary: Rc<RefCell<HashMap<u64, [f32; 2]>>> = Rc::new(RefCell::new(HashMap::new()));
-        {
-            let mapped = mapped.clone();
-            sim.on_mapped = Some(Box::new(move |job, profile| {
-                mapped.borrow_mut().insert(
-                    job.id,
-                    primary_reward(
-                        profile.ideal_exec_s(job.images),
-                        profile.ideal_dynamic_j(job.images),
-                        job.images,
-                    ),
-                );
-            }));
-            let secondary = secondary.clone();
-            sim.on_completed = Some(Box::new(move |stats| {
-                secondary
-                    .borrow_mut()
-                    .insert(stats.id, secondary_reward(stats.stall_s, stats.stall_leak_j, stats.images));
-            }));
-        }
+        sim.on_mapped = Some(Box::new(|job, profile| {
+            mapped.borrow_mut().insert(
+                job.id,
+                primary_reward(
+                    profile.ideal_exec_s(job.images),
+                    profile.ideal_dynamic_j(job.images),
+                    job.images,
+                ),
+            );
+        }));
+        sim.on_completed = Some(Box::new(|stats| {
+            secondary
+                .borrow_mut()
+                .insert(stats.id, secondary_reward(stats.stall_s, stats.stall_leak_j, stats.images));
+        }));
         let (_result, mut sched) = sim.run_drain(self.cfg.episode_max_s);
         let decisions = sched.take_decisions();
 
@@ -184,8 +182,8 @@ impl Trainer {
         for (i, d) in decisions.iter().enumerate() {
             last_of_job.insert(d.job_id, i);
         }
-        let mapped = mapped.borrow();
-        let secondary = secondary.borrow();
+        let mapped = mapped.into_inner();
+        let secondary = secondary.into_inner();
         let mut reward_sum = 0.0f32;
         let mut reward_jobs = 0usize;
         let transitions: Vec<Transition> = decisions
@@ -218,28 +216,32 @@ impl Trainer {
         (transitions, mean_reward)
     }
 
-    /// One episode: the three preference environments in parallel threads
+    /// The three preference-environment rollouts of one episode, executed
+    /// concurrently on a work pool and returned in fixed (exec, balanced,
+    /// energy) order. Each rollout clones the policy and is seeded
+    /// `base_seed ^ (i + 1)` — the same per-environment scheme the serial
+    /// path used — so the pooled result is identical at any pool width.
+    pub fn episode_rollouts(
+        &self,
+        base_seed: u64,
+        admit_rate: f64,
+        pool: &WorkPool,
+    ) -> Vec<(Vec<Transition>, f32, Preference)> {
+        pool.run(PREFS.len(), |i| {
+            let omega = PREFS[i];
+            let (t, r) = self.rollout(omega, base_seed ^ (i as u64 + 1), admit_rate);
+            (t, r, omega)
+        })
+    }
+
+    /// One episode: the three preference environments on the work pool
     /// (§4.3.2 "multi-threading to run all three preferences in parallel"),
     /// then PPO epochs through the AOT update artifact.
     #[cfg(feature = "pjrt")]
     pub fn episode(&mut self, runtime: &mut Runtime, ep: usize) -> Result<()> {
         let admit_rate = self.rng.range_f64(self.cfg.rate_range.0, self.cfg.rate_range.1);
         let base_seed = self.rng.next_u64();
-
-        let rollouts: Vec<(Vec<Transition>, f32, Preference)> = std::thread::scope(|scope| {
-            let handles: Vec<_> = PREFS
-                .iter()
-                .enumerate()
-                .map(|(i, &omega)| {
-                    let tr: &Trainer = &*self;
-                    scope.spawn(move || {
-                        let (t, r) = tr.rollout(omega, base_seed ^ (i as u64 + 1), admit_rate);
-                        (t, r, omega)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("rollout thread panicked")).collect()
-        });
+        let rollouts = self.episode_rollouts(base_seed, admit_rate, &WorkPool::global());
 
         // Per-env GAE with the current critic, scalarized by each env's ω.
         let critic = self.native_critic();
@@ -420,5 +422,21 @@ mod tests {
         let (t_energy, _) = tr.rollout(PREF_ENERGY, 9, 1.5);
         assert_eq!(t_exec[0].state[20], 1.0);
         assert_eq!(t_energy[0].state[20], 0.0);
+    }
+
+    #[test]
+    fn episode_rollouts_identical_across_pool_widths() {
+        let cfg = TrainConfig {
+            jobs_per_episode: 4,
+            max_images: 200,
+            episode_max_s: 80.0,
+            ..TrainConfig::default()
+        };
+        let tr = Trainer::new(cfg);
+        let serial = tr.episode_rollouts(0xABCD, 2.0, &WorkPool::new(1));
+        let pooled = tr.episode_rollouts(0xABCD, 2.0, &WorkPool::new(3));
+        assert_eq!(serial.len(), PREFS.len());
+        // Transition has no PartialEq; the Debug form captures every field.
+        assert_eq!(format!("{serial:?}"), format!("{pooled:?}"));
     }
 }

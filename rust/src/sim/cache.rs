@@ -62,7 +62,9 @@ impl ProfileCache {
 
     /// Return the memoized profile for this (model, mapping) pair, or
     /// compute and insert it. Racing inserts of the same key are benign:
-    /// both sides compute identical profiles.
+    /// both sides compute identical profiles. The engine keeps the
+    /// returned `Arc` in its `ActiveJob` directly — a cache hit costs a
+    /// refcount bump, never a deep clone of the per-stage vectors.
     pub fn get_or_compute(
         &self,
         arch: &Arch,

@@ -17,6 +17,7 @@ use crate::sched::{Scheduler, SysSnapshot};
 use crate::thermal::DssModel;
 use crate::util::rng::Rng;
 use crate::workload::{Job, JobQueue, ModelZoo, TrafficGen, WorkloadMix};
+use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -88,10 +89,12 @@ pub fn throttle_latch(latched: bool, t: f64, t_max: f64, hysteresis_k: f64) -> (
     }
 }
 
-/// Execution phases of a mapped job.
+/// Execution phases of a mapped job. The profile is shared (`Arc`) with
+/// the [`ProfileCache`] — mapping a recurring model is a pointer bump, not
+/// a deep clone of its per-stage vectors.
 struct ActiveJob {
     job: Job,
-    profile: ExecProfile,
+    profile: Arc<ExecProfile>,
     bits_per_chiplet: Vec<u64>,
     chiplets: Vec<usize>,
     /// Per-chiplet dynamic compute power while streaming (W).
@@ -145,6 +148,15 @@ pub struct Simulator<'a, S: Scheduler> {
     cap_gated_steps: u64,
     /// Optional shared (model, mapping) → profile memo table.
     profile_cache: Option<ProfileCache>,
+    /// Persistent scheduler-snapshot scratch, refilled in place each
+    /// mapping attempt (`Option` so `map_jobs` can detach it from `self`
+    /// while the scheduler borrows it).
+    snap_scratch: Option<SysSnapshot>,
+    /// Persistent per-chiplet step-power buffer (the steady-state step
+    /// loop performs no heap allocation).
+    power_scratch: Vec<f64>,
+    /// Persistent finished-job index scratch for `progress`.
+    finished_scratch: Vec<usize>,
     /// Callback invoked when a job is mapped: (job, ideal profile).
     pub on_mapped: Option<Box<dyn FnMut(&Job, &ExecProfile) + 'a>>,
     /// Callback on completion: full stats.
@@ -203,6 +215,9 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
             cap_gated: false,
             cap_gated_steps: 0,
             profile_cache: None,
+            snap_scratch: Some(SysSnapshot::fresh(arch)),
+            power_scratch: vec![0.0; arch.num_chiplets()],
+            finished_scratch: Vec::new(),
             cfg,
             on_mapped: None,
             on_completed: None,
@@ -342,18 +357,20 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         self.backlog.push_back(job);
     }
 
-    fn snapshot(&self) -> SysSnapshot {
-        let mut free_bits = self.free_bits.clone();
-        let mut throttled = self.throttled.clone();
+    /// Refill the scheduler snapshot in place from current system state —
+    /// the per-mapping-attempt path allocates nothing.
+    fn fill_snapshot(&self, snap: &mut SysSnapshot) {
+        snap.free_bits.copy_from_slice(&self.free_bits);
+        snap.temps.copy_from_slice(&self.temps);
+        snap.throttled.copy_from_slice(&self.throttled);
         // Offline chiplets are invisible capacity: no free memory and
         // permanently "throttled" from the scheduler's point of view.
         for (c, &off) in self.offline.iter().enumerate() {
             if off {
-                free_bits[c] = 0;
-                throttled[c] = true;
+                snap.free_bits[c] = 0;
+                snap.throttled[c] = true;
             }
         }
-        SysSnapshot { free_bits, temps: self.temps.clone(), throttled }
     }
 
     /// Admit host arrivals; host stalls (backlog) when the FIFO is full.
@@ -393,12 +410,14 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         } else {
             self.cap_gated = false;
         }
+        let mut snap = self.snap_scratch.take().expect("snapshot scratch present");
         while let Some(head) = self.queue.front() {
-            let snap = self.snapshot();
+            self.fill_snapshot(&mut snap);
             let Some(mapping) = self.sched.schedule(head, &snap) else { break };
             let job = self.queue.pop().unwrap();
             self.commit(job, mapping);
         }
+        self.snap_scratch = Some(snap);
     }
 
     fn commit(&mut self, job: Job, mapping: Mapping) {
@@ -416,10 +435,8 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         assert_eq!(total_assigned, job.dcg.total_weight_bits(), "incomplete mapping committed");
 
         let profile = match &self.profile_cache {
-            Some(cache) => {
-                (*cache.get_or_compute(self.arch, &self.cm, &job.dcg, &mapping)).clone()
-            }
-            None => ExecProfile::compute(self.arch, &self.cm, &job.dcg, &mapping),
+            Some(cache) => cache.get_or_compute(self.arch, &self.cm, &job.dcg, &mapping),
+            None => Arc::new(ExecProfile::compute(self.arch, &self.cm, &job.dcg, &mapping)),
         };
         if let Some(cb) = self.on_mapped.as_mut() {
             cb(&job, &profile);
@@ -454,11 +471,16 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
     }
 
     /// Advance all active jobs by `dt`, with exact sub-step phase changes.
-    /// Returns per-chiplet dynamic power averaged over the step.
-    fn progress(&mut self, dt: f64) -> Vec<f64> {
-        let n = self.arch.num_chiplets();
-        let mut power = vec![0.0f64; n];
-        let mut finished: Vec<usize> = Vec::new();
+    /// Per-chiplet dynamic power averaged over the step is accumulated into
+    /// the persistent `power_scratch` buffer; the steady path allocates
+    /// nothing (`finished_scratch` keeps its capacity across steps).
+    fn progress(&mut self, dt: f64) {
+        for p in self.power_scratch.iter_mut() {
+            *p = 0.0;
+        }
+        let mut finished = std::mem::take(&mut self.finished_scratch);
+        finished.clear();
+        let power = &mut self.power_scratch;
 
         for (ai, a) in self.active.iter_mut().enumerate() {
             let mut left = dt;
@@ -562,14 +584,14 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
             }
             self.completed.push(stats);
         }
-        power
+        self.finished_scratch = finished;
     }
 
-    fn thermal_update(&mut self, power: &[f64], dt: f64) {
-        self.thermal.step(power);
+    fn thermal_update(&mut self, dt: f64) {
+        self.thermal.step(&self.power_scratch);
+        self.thermal.write_die_temps(&mut self.temps);
         for c in 0..self.arch.num_chiplets() {
-            let t = self.thermal.temp(c);
-            self.temps[c] = t;
+            let t = self.temps[c];
             self.max_temp_k = self.max_temp_k.max(t);
             let tmax = self.arch.spec(c).t_max_k;
             if t > tmax {
@@ -592,10 +614,10 @@ impl<'a, S: Scheduler> Simulator<'a, S> {
         self.now += dt;
         self.admit();
         self.map_jobs();
-        let power = self.progress(dt);
-        self.last_power_w = power.iter().sum::<f64>();
+        self.progress(dt);
+        self.last_power_w = self.power_scratch.iter().sum::<f64>();
         self.system_energy_j += self.last_power_w * dt;
-        self.thermal_update(&power, dt);
+        self.thermal_update(dt);
         if self.cfg.record_trace {
             let mut cl_max = [f64::MIN; 4];
             for (c, &t) in self.temps.iter().enumerate() {

@@ -11,7 +11,7 @@
 //! matrix-vector formulation" the paper credits MFIT's DSS model for.
 
 use crate::arch::Arch;
-use crate::util::linalg::Mat;
+use crate::util::linalg::{LuFactor, Mat};
 
 /// Package physical constants (DESIGN.md §6). Tuned so that sustained
 /// full-rate activity on the ReRAM-heavy regions approaches the 330 K
@@ -68,6 +68,11 @@ pub struct DssModel {
     /// the per-step update is ONE contiguous matvec over z = [x; p]
     /// (EXPERIMENTS.md §Perf: ~1.5× faster than two separate passes).
     abd: Mat,
+    /// LU of `I − A_d`, factored once at construction so every
+    /// [`DssModel::steady_state`] query (called per candidate in
+    /// thermal-effectiveness sweeps) is a pair of O(n²) substitutions
+    /// instead of a fresh O(n³) factorization.
+    ss_factor: LuFactor,
     /// Current state (K above ambient), length n_nodes.
     x: Vec<f64>,
     /// Fused input vector z = [x; p] staging buffer.
@@ -138,6 +143,8 @@ impl DssModel {
         let ad = a.scale(params.dt_s).expm();
         let ad_minus_i = ad.sub(&Mat::eye(n_nodes));
         let bd = a.solve(&ad_minus_i.matmul(&b));
+        let ss_factor = LuFactor::of(&Mat::eye(n_nodes).sub(&ad))
+            .expect("I − A_d is nonsingular for a dissipative RC system");
 
         // Fuse [A_d | B_d] for the single-pass step.
         let mut abd = Mat::zeros(n_nodes, n_nodes + n);
@@ -154,6 +161,7 @@ impl DssModel {
             ad,
             bd,
             abd,
+            ss_factor,
             x: vec![0.0; n_nodes],
             z: vec![0.0; n_nodes + n],
             scratch: vec![0.0; n_nodes],
@@ -182,9 +190,22 @@ impl DssModel {
         self.t_ambient + self.x[i]
     }
 
-    /// All die temperatures.
+    /// Write all die temperatures into `out` (length = chiplet count).
+    /// The engine's per-step path uses this to refresh its persistent
+    /// temperature buffer without allocating.
+    pub fn write_die_temps(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n_chiplets);
+        for (i, t) in out.iter_mut().enumerate() {
+            *t = self.t_ambient + self.x[i];
+        }
+    }
+
+    /// All die temperatures (allocating convenience; hot paths use
+    /// [`DssModel::write_die_temps`]).
     pub fn die_temps(&self) -> Vec<f64> {
-        (0..self.n_chiplets).map(|i| self.temp(i)).collect()
+        let mut out = vec![0.0; self.n_chiplets];
+        self.write_die_temps(&mut out);
+        out
     }
 
     pub fn lid_temp(&self) -> f64 {
@@ -193,17 +214,19 @@ impl DssModel {
 
     /// Steady-state die temperatures for a constant power vector
     /// (x_ss = −A⁻¹·B·p solved via the discretized system:
-    /// x_ss = (I − A_d)⁻¹ B_d p).
+    /// x_ss = (I − A_d)⁻¹ B_d p). Uses the factorization of `I − A_d`
+    /// precomputed at construction — each call is two O(n²) substitutions.
     pub fn steady_state(&self, powers: &[f64]) -> Vec<f64> {
+        assert_eq!(powers.len(), self.n_chiplets);
         let n = self.n_nodes;
-        let i_minus_ad = Mat::eye(n).sub(&self.ad);
-        let mut bp = Mat::zeros(n, 1);
-        for r in 0..n {
+        let mut bp = vec![0.0; n];
+        for (r, v) in bp.iter_mut().enumerate() {
             let row = self.bd.row(r);
-            bp[(r, 0)] = powers.iter().enumerate().map(|(j, &p)| row[j] * p).sum();
+            *v = powers.iter().enumerate().map(|(j, &p)| row[j] * p).sum();
         }
-        let xss = i_minus_ad.solve(&bp);
-        (0..self.n_chiplets).map(|i| self.t_ambient + xss[(i, 0)]).collect()
+        let mut xss = vec![0.0; n];
+        self.ss_factor.solve_vec(&bp, &mut xss);
+        (0..self.n_chiplets).map(|i| self.t_ambient + xss[i]).collect()
     }
 
     /// Reset all nodes to ambient.
@@ -298,6 +321,46 @@ mod tests {
             let rhs = (s1[i] - 300.0) + (s2[i] - 300.0);
             assert!((lhs - rhs).abs() < 1e-8);
         }
+    }
+
+    #[test]
+    fn steady_state_matches_fresh_factorization() {
+        // The precomputed LU path must agree with a from-scratch solve of
+        // (I − A_d) x = B_d p for every query.
+        let arch = small_arch();
+        let m = DssModel::from_arch(&arch);
+        let n = m.n_nodes;
+        let mut p = vec![0.0; arch.num_chiplets()];
+        p[2] = 0.4;
+        p[5] = 0.9;
+        let got = m.steady_state(&p);
+        let i_minus_ad = Mat::eye(n).sub(&m.ad);
+        let mut bp = Mat::zeros(n, 1);
+        for r in 0..n {
+            let row = m.bd.row(r);
+            bp[(r, 0)] = p.iter().enumerate().map(|(j, &pw)| row[j] * pw).sum();
+        }
+        let xss = i_minus_ad.solve(&bp);
+        for i in 0..arch.num_chiplets() {
+            let want = m.t_ambient + xss[(i, 0)];
+            assert!((got[i] - want).abs() < 1e-9, "{} vs {}", got[i], want);
+        }
+    }
+
+    #[test]
+    fn write_die_temps_matches_temp() {
+        let arch = small_arch();
+        let mut m = DssModel::from_arch(&arch);
+        let p = vec![0.3; arch.num_chiplets()];
+        for _ in 0..50 {
+            m.step(&p);
+        }
+        let mut buf = vec![0.0; arch.num_chiplets()];
+        m.write_die_temps(&mut buf);
+        for i in 0..arch.num_chiplets() {
+            assert_eq!(buf[i], m.temp(i));
+        }
+        assert_eq!(buf, m.die_temps());
     }
 
     #[test]

@@ -167,34 +167,21 @@ impl Mat {
     }
 
     /// Solve A X = B for X (A = self, square). Panics on singular A.
+    /// Factors once; callers that solve repeatedly against the same matrix
+    /// should hold a [`LuFactor`] instead.
     pub fn solve(&self, b: &Mat) -> Mat {
-        let (lu, perm) = self.lu().expect("solve: singular matrix");
+        let f = LuFactor::of(self).expect("solve: singular matrix");
         let n = self.rows;
         let mut x = Mat::zeros(n, b.cols);
         let mut col = vec![0.0; n];
+        let mut out = vec![0.0; n];
         for c in 0..b.cols {
-            // Apply permutation.
             for i in 0..n {
-                col[i] = b[(perm[i], c)];
+                col[i] = b[(i, c)];
             }
-            // Forward substitution (L has unit diagonal).
-            for i in 1..n {
-                let mut acc = col[i];
-                for j in 0..i {
-                    acc -= lu[(i, j)] * col[j];
-                }
-                col[i] = acc;
-            }
-            // Back substitution.
-            for i in (0..n).rev() {
-                let mut acc = col[i];
-                for j in (i + 1)..n {
-                    acc -= lu[(i, j)] * col[j];
-                }
-                col[i] = acc / lu[(i, i)];
-            }
+            f.solve_vec(&col, &mut out);
             for i in 0..n {
-                x[(i, c)] = col[i];
+                x[(i, c)] = out[i];
             }
         }
         x
@@ -232,6 +219,56 @@ impl Mat {
             e = e.matmul(&e);
         }
         e
+    }
+}
+
+/// Precomputed LU factorization (with partial-pivot permutation) for
+/// repeated solves against one matrix: factor O(n³) once, then each
+/// [`LuFactor::solve_vec`] is an allocation-free O(n²) substitution pair.
+/// The thermal model holds one for `I − A_d` so steady-state queries in
+/// candidate sweeps stop re-factoring per call.
+#[derive(Clone, Debug)]
+pub struct LuFactor {
+    lu: Mat,
+    perm: Vec<usize>,
+}
+
+impl LuFactor {
+    /// Factor `m` (square). Returns `None` if singular.
+    pub fn of(m: &Mat) -> Option<LuFactor> {
+        let (lu, perm) = m.lu()?;
+        Some(LuFactor { lu, perm })
+    }
+
+    pub fn n(&self) -> usize {
+        self.lu.rows
+    }
+
+    /// Solve `A x = b` into `x` (both length n). No allocation.
+    pub fn solve_vec(&self, b: &[f64], x: &mut [f64]) {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        assert_eq!(x.len(), n);
+        // Apply permutation.
+        for i in 0..n {
+            x[i] = b[self.perm[i]];
+        }
+        // Forward substitution (L has unit diagonal).
+        for i in 1..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc / self.lu[(i, i)];
+        }
     }
 }
 
@@ -276,6 +313,27 @@ mod tests {
         let b = a.matmul(&x_true);
         let x = a.solve(&b);
         approx(&x, &x_true, 1e-10);
+    }
+
+    #[test]
+    fn lu_factor_reuse_matches_solve() {
+        let a = Mat::from_rows(&[&[4.0, 1.0, 0.0], &[1.0, 3.0, 1.0], &[0.0, 1.0, 2.0]]);
+        let f = LuFactor::of(&a).unwrap();
+        assert_eq!(f.n(), 3);
+        let mut x = vec![0.0; 3];
+        for b in [[1.0, 0.0, 0.0], [0.5, -2.0, 3.0], [7.0, 7.0, 7.0]] {
+            f.solve_vec(&b, &mut x);
+            let bm = Mat::from_rows(&[&[b[0]], &[b[1]], &[b[2]]]);
+            let xm = a.solve(&bm);
+            for i in 0..3 {
+                assert!((x[i] - xm[(i, 0)]).abs() < 1e-12, "{} vs {}", x[i], xm[(i, 0)]);
+            }
+            // Round-trip: A x == b.
+            for i in 0..3 {
+                let ax: f64 = (0..3).map(|j| a[(i, j)] * x[j]).sum();
+                assert!((ax - b[i]).abs() < 1e-10);
+            }
+        }
     }
 
     #[test]

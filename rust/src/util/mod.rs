@@ -1,12 +1,13 @@
 //! Foundation utilities built in-repo because the build environment is
 //! offline (no `rand`, `serde`, `clap`, `criterion`, `proptest` facades):
-//! PRNG, JSON, stats, CLI parsing, dense linear algebra, a property-test
-//! kit, and a micro-benchmark harness.
+//! PRNG, JSON, stats, CLI parsing, dense linear algebra, a deterministic
+//! work pool, a property-test kit, and a micro-benchmark harness.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod linalg;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod sync;

@@ -1,0 +1,180 @@
+//! Deterministic fork-join work pool.
+//!
+//! Executes an indexed task list on N worker threads (plain
+//! `std::thread::scope`, no extra dependencies) and returns results in
+//! submission order. Workers claim task indices from an atomic counter, so
+//! scheduling is racy — but every task is a pure function of its index,
+//! and results are re-sorted by index before returning. The contract:
+//! **output is byte-identical for 1 worker and N workers**. Experiment
+//! sweeps, training rollouts, and benches all ride on this pool, which is
+//! what lets `--threads 4` reports digest-match `--threads 1`.
+//!
+//! The pool size comes from (highest priority first) `set_global_threads`
+//! (the `--threads` CLI flag), the `THERMOS_THREADS` environment variable,
+//! and finally `std::thread::available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// 0 = unset (fall back to `THERMOS_THREADS`, then the core count).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the global pool width (the `--threads` CLI flag). Clamped to ≥ 1.
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Resolve the global pool width: `set_global_threads` override, else the
+/// `THERMOS_THREADS` environment variable, else all available cores.
+pub fn global_threads() -> usize {
+    let n = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    if let Ok(v) = std::env::var("THERMOS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A fixed-width fork-join pool. Stateless between calls; each `run` is
+/// one `thread::scope` fork-join, so there are no idle threads to manage
+/// and a panicking task propagates at the join.
+pub struct WorkPool {
+    threads: usize,
+}
+
+impl WorkPool {
+    pub fn new(threads: usize) -> WorkPool {
+        WorkPool { threads: threads.max(1) }
+    }
+
+    /// Pool sized by the global thread configuration (see module docs).
+    pub fn global() -> WorkPool {
+        WorkPool::new(global_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(0), f(1), …, f(n-1)` across the pool and return the
+    /// results in index order. `f` must be a pure function of its index
+    /// (it may capture shared read-only state) — that is what makes the
+    /// output independent of the thread count.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+        let f = &f;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    done.lock().expect("work pool result mutex").extend(local);
+                });
+            }
+        });
+        let mut pairs = done.into_inner().expect("work pool result mutex");
+        debug_assert_eq!(pairs.len(), n, "every task index produces one result");
+        pairs.sort_by_key(|&(i, _)| i);
+        pairs.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Map over a slice, in order: `out[i] = f(i, &items[i])`.
+    pub fn map<I, T, F>(&self, items: &[I], f: F) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(usize, &I) -> T + Sync,
+    {
+        self.run(items.len(), |i| f(i, &items[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let pool = WorkPool::new(8);
+        // Make early tasks slow so completion order inverts submission
+        // order — results must still come back sorted.
+        let out = pool.run(32, |i| {
+            if i < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            i * i
+        });
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn one_thread_and_many_threads_agree() {
+        let f = |i: usize| {
+            // Index-seeded pseudo-work: deterministic per index.
+            let mut acc = i as u64 + 1;
+            for k in 0..100u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            acc
+        };
+        let serial = WorkPool::new(1).run(100, f);
+        let pooled = WorkPool::new(7).run(100, f);
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn all_tasks_execute_exactly_once() {
+        let count = AtomicU64::new(0);
+        let out = WorkPool::new(3).run(250, |i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 250);
+        assert_eq!(out.len(), 250);
+    }
+
+    #[test]
+    fn map_passes_items_by_reference() {
+        let items: Vec<String> = (0..10).map(|i| format!("job{i}")).collect();
+        let out = WorkPool::new(4).map(&items, |i, s| format!("{i}:{s}"));
+        assert_eq!(out[3], "3:job3");
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let pool = WorkPool::new(4);
+        assert!(pool.run(0, |i| i).is_empty());
+        assert_eq!(pool.run(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn width_clamps_to_one() {
+        assert_eq!(WorkPool::new(0).threads(), 1);
+    }
+}

@@ -1,0 +1,76 @@
+//! Thread-count determinism: the work pool's contract is that sweeps and
+//! training rollouts are byte-identical at `--threads 1` and `--threads N`.
+//! These tests render results to strings (report rows / Debug forms) and
+//! compare them exactly — the same digest-style check the benches rely on.
+
+use thermos::experiments::report::result_cells;
+use thermos::experiments::{sweep_averaged, SchedKind};
+use thermos::noi::NoiTopology;
+use thermos::rl::trainer::{TrainConfig, Trainer, PREFS};
+use thermos::sim::SimConfig;
+use thermos::util::pool::WorkPool;
+
+fn small_cfg(rate: f64, seed: u64) -> SimConfig {
+    SimConfig {
+        admit_rate: rate,
+        warmup_s: 2.0,
+        duration_s: 15.0,
+        max_images: 300,
+        mix_jobs: 25,
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+/// Render a sweep grid the way the fig benches do — formatted report
+/// rows — so "byte-identical" means identical printed artifacts.
+fn render_grid(grid: &[Vec<thermos::sim::SimResult>], rates: &[f64]) -> String {
+    let mut out = String::new();
+    for row in grid {
+        for (&rate, r) in rates.iter().zip(row) {
+            out.push_str(&result_cells(rate, r).join(","));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[test]
+fn sweep_is_byte_identical_across_thread_counts() {
+    let noi = NoiTopology::Mesh;
+    let kinds = [SchedKind::Simba, SchedKind::BigLittle];
+    let rates = [1.0, 2.0];
+    let seeds = [5u64, 6];
+
+    let serial = sweep_averaged(noi, &kinds, &rates, &seeds, &WorkPool::new(1), small_cfg);
+    let pooled = sweep_averaged(noi, &kinds, &rates, &seeds, &WorkPool::new(4), small_cfg);
+
+    let a = render_grid(&serial, &rates);
+    let b = render_grid(&pooled, &rates);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "sweep output must not depend on the pool width");
+}
+
+#[test]
+fn training_episode_rollouts_are_byte_identical_across_thread_counts() {
+    let cfg = TrainConfig {
+        jobs_per_episode: 5,
+        max_images: 250,
+        episode_max_s: 100.0,
+        ..TrainConfig::default()
+    };
+    let trainer = Trainer::new(cfg);
+
+    let serial = trainer.episode_rollouts(0x7e57_5eed, 2.0, &WorkPool::new(1));
+    let pooled = trainer.episode_rollouts(0x7e57_5eed, 2.0, &WorkPool::new(4));
+
+    assert_eq!(serial.len(), PREFS.len());
+    assert!(serial.iter().any(|(ts, _, _)| !ts.is_empty()));
+    // Transition carries no PartialEq; the Debug form covers every field
+    // (states, masks, actions, log-probs, vector rewards).
+    assert_eq!(
+        format!("{serial:?}"),
+        format!("{pooled:?}"),
+        "episode rollouts must not depend on the pool width"
+    );
+}
