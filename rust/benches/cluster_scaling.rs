@@ -7,8 +7,8 @@
 //!
 //! Run: `cargo bench --bench cluster_scaling`
 
-use thermos::cluster::{run_cluster, ClusterConfig, ShardSchedSpec};
-use thermos::experiments::report::Table;
+use thermos::cluster::{run_cluster, ClusterConfig, ShardSchedSpec, StealConfig};
+use thermos::experiments::report::{write_bench_json, Table};
 use thermos::serve::{PoissonSource, ServeConfig};
 use thermos::sim::SimConfig;
 use thermos::util::json::Json;
@@ -22,9 +22,10 @@ fn num(j: &Json, key: &str) -> f64 {
     j.get(key).as_f64().unwrap_or(0.0)
 }
 
-fn run_point(shards: usize) -> Json {
+fn run_point(shards: usize, steal: bool) -> Json {
     let cfg = ClusterConfig {
         shards,
+        steal: steal.then(|| StealConfig { seed: SEED, slack: 0.25 }),
         duration_s: DURATION_S,
         drain_max_s: 20.0,
         serve: ServeConfig {
@@ -49,14 +50,18 @@ fn run_point(shards: usize) -> Json {
 
 fn main() {
     let mut t = Table::new(&[
-        "shards", "offered", "coalesced", "completed", "images_s", "p50_s", "p99_s", "rebalances",
-        "maxT_K", "budget_W",
+        "shards", "offered", "coalesced", "completed", "images_s", "steal_images_s", "migrated",
+        "p50_s", "p99_s", "rebalances", "maxT_K", "budget_W",
     ]);
     let mut images_s = Vec::new();
+    let mut points = Vec::new();
     for shards in 1..=4usize {
-        let j = run_point(shards);
+        let j = run_point(shards, false);
+        let js = run_point(shards, true);
         let lat = j.get("latency_e2e_s");
         let rate = num(&j, "throughput_images_s");
+        let steal_rate = num(&js, "throughput_images_s");
+        let migrated = num(js.get("steal"), "migrated_requests");
         images_s.push(rate);
         t.row(vec![
             format!("{shards}"),
@@ -64,12 +69,23 @@ fn main() {
             format!("{:.0}", num(&j, "coalesced_requests")),
             format!("{:.0}", num(&j, "completed")),
             format!("{rate:.0}"),
+            format!("{steal_rate:.0}"),
+            format!("{migrated:.0}"),
             format!("{:.3}", num(lat, "p50")),
             format!("{:.3}", num(lat, "p99")),
             format!("{:.0}", num(j.get("arbiter"), "rebalances")),
             format!("{:.1}", num(&j, "max_temp_k")),
             format!("{:.1}", num(&j, "power_budget_w")),
         ]);
+        points.push(Json::obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("completed", j.get("completed").clone()),
+            ("throughput_images_s", Json::Num(rate)),
+            ("steal_throughput_images_s", Json::Num(steal_rate)),
+            ("steal_migrated_requests", Json::Num(migrated)),
+            ("latency_p99_s", lat.get("p99").clone()),
+            ("power_budget_w", j.get("power_budget_w").clone()),
+        ]));
     }
     println!("\n{}", t.render());
     let monotone = images_s.windows(2).all(|w| w[1] >= w[0] * 0.95);
@@ -85,5 +101,15 @@ fn main() {
     match t.write_csv("cluster_scaling") {
         Ok(p) => println!("wrote {p}"),
         Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    let fields = vec![
+        ("seed", Json::Num(SEED as f64)),
+        ("rate_jobs_s", Json::Num(RATE_JOBS_S)),
+        ("duration_s", Json::Num(DURATION_S)),
+        ("points", Json::Arr(points)),
+    ];
+    match write_bench_json("cluster", fields) {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("bench json write failed: {e}"),
     }
 }

@@ -7,8 +7,8 @@
 //!
 //! Run: `cargo bench --bench fault_recovery`
 
-use thermos::cluster::{run_cluster, ClusterConfig, ShardSchedSpec};
-use thermos::experiments::report::Table;
+use thermos::cluster::{run_cluster, ClusterConfig, ShardSchedSpec, StealConfig};
+use thermos::experiments::report::{write_bench_json, Table};
 use thermos::fault::{FaultEvent, FaultKind, FaultPlan};
 use thermos::serve::{PoissonSource, ServeConfig};
 use thermos::sim::SimConfig;
@@ -24,9 +24,11 @@ fn num(j: &Json, key: &str) -> f64 {
     j.get(key).as_f64().unwrap_or(0.0)
 }
 
-fn run_point(faults: Option<FaultPlan>) -> Json {
+fn run_point(faults: Option<FaultPlan>, spares: usize, steal: bool) -> Json {
     let cfg = ClusterConfig {
         shards: SHARDS,
+        spares,
+        steal: steal.then(|| StealConfig { seed: SEED, slack: 0.25 }),
         duration_s: DURATION_S,
         drain_max_s: 30.0,
         serve: ServeConfig {
@@ -57,21 +59,28 @@ fn main() {
         kind: FaultKind::ShardCrash { down_epochs: 3 },
     }]);
     let chaos = FaultPlan::chaos(7, SHARDS, DURATION_S as usize);
-    let points: Vec<(&str, Option<FaultPlan>)> = vec![
-        ("fault_free", None),
-        ("one_crash", Some(crash)),
-        ("chaos_s7", Some(chaos)),
+    // (name, plan, spares, steal): the standby and steal rows isolate how
+    // much each plane buys back of the crash/chaos cost.
+    let points: Vec<(&str, Option<FaultPlan>, usize, bool)> = vec![
+        ("fault_free", None, 0, false),
+        ("one_crash", Some(crash.clone()), 0, false),
+        ("one_crash_spare", Some(crash), 1, false),
+        ("chaos_s7", Some(chaos.clone()), 0, false),
+        ("chaos_spare_steal", Some(chaos), 1, true),
     ];
 
     let mut t = Table::new(&[
         "scenario", "completed", "images_s", "p50_s", "p99_s", "injected", "failovers", "retries",
-        "restarts", "down_ep", "dropped",
+        "restarts", "down_ep", "dropped", "promoted", "stolen",
     ]);
     let mut completed = Vec::new();
-    for (name, plan) in points {
-        let j = run_point(plan);
+    let mut rows = Vec::new();
+    for (name, plan, spares, steal) in points {
+        let j = run_point(plan, spares, steal);
         let lat = j.get("latency_e2e_s");
         let f = j.get("faults");
+        let promoted = num(j.get("spares"), "standby_promotions");
+        let stolen = num(j.get("steal"), "migrated_requests");
         completed.push((name, num(&j, "completed")));
         t.row(vec![
             name.to_string(),
@@ -85,7 +94,19 @@ fn main() {
             format!("{:.0}", num(f, "restarts")),
             format!("{:.0}", num(f, "downtime_epochs")),
             format!("{:.0}", num(f, "dropped_requests")),
+            format!("{promoted:.0}"),
+            format!("{stolen:.0}"),
         ]);
+        rows.push(Json::obj(vec![
+            ("scenario", Json::Str(name.to_string())),
+            ("spares", Json::Num(spares as f64)),
+            ("steal", Json::Bool(steal)),
+            ("completed", j.get("completed").clone()),
+            ("downtime_epochs", Json::Num(num(f, "downtime_epochs"))),
+            ("failovers", Json::Num(num(f, "failovers"))),
+            ("standby_promotions", Json::Num(promoted)),
+            ("migrated_requests", Json::Num(stolen)),
+        ]));
     }
     println!("\n{}", t.render());
     let base = completed[0].1.max(1.0);
@@ -95,5 +116,15 @@ fn main() {
     match t.write_csv("fault_recovery") {
         Ok(p) => println!("wrote {p}"),
         Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    let fields = vec![
+        ("seed", Json::Num(SEED as f64)),
+        ("shards", Json::Num(SHARDS as f64)),
+        ("duration_s", Json::Num(DURATION_S)),
+        ("scenarios", Json::Arr(rows)),
+    ];
+    match write_bench_json("fault_recovery", fields) {
+        Ok(p) => println!("wrote {p}"),
+        Err(e) => eprintln!("bench json write failed: {e}"),
     }
 }

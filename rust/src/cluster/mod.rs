@@ -1,34 +1,51 @@
 //! The cluster subsystem: sharded multi-engine serving with a global
-//! thermal/power arbiter and a fault-injecting supervisor.
+//! thermal/power arbiter, a fault-injecting supervisor, warm-standby
+//! spares, and deterministic work-stealing between shards.
 //!
 //! ```text
 //!                       ┌────────────────────────────┐
 //!   traffic source ──▶  │ coordinator (main thread)  │
 //!                       │  consistent-hash router +  │
 //!                       │  coalescing + autoscaler + │
-//!                       │  supervisor + arbiter      │
+//!                       │  supervisor + arbiter +    │
+//!                       │  steal planner             │
 //!                       └──────┬──────┬──────┬───────┘
 //!            EpochPacket       │      │      │      ▲
 //!            {reqs, cap, cmd}  ▼      ▼      ▼      │ EpochReport
 //!                       ┌──────────┐ ┌───┐ ┌───┐    │ {peak_temp,
-//!                       │ shard 0  │ │ 1 │ │ N │    │  power, ids}
-//!                       │ (thread) │ │   │ │   │ ───┘
+//!                       │ shard 0  │ │ 1 │ │ N │    │  power, ids,
+//!                       │ (pooled) │ │   │ │   │ ───┘  stolen}
 //!                       └──────────┘ └───┘ └───┘
 //! ```
 //!
 //! One serving [`Server`] (engine + scheduler) per shard — one shard per
-//! interposer — on its own worker thread. The coordinator routes each
-//! epoch's arrivals by model fingerprint (consistent hashing keeps a
-//! model's weights and cached profiles on one shard), coalesces
-//! same-model requests into batches, tags each batch with a global
-//! request id, and pushes one [`EpochPacket`] per shard through a bounded
-//! mailbox. At the epoch barrier it collects exactly one [`EpochReport`]
-//! per shard, settles the request-id ledger, reslices the power budget
-//! headroom-weighted over the *alive* shards (hot shards lose budget to
-//! cool ones, dead shards lose their whole slice), and autoscales the
-//! active ring.
+//! interposer — each held in a [`ShardSlot`](shard::ShardSlot) and
+//! stepped on the shared [`WorkPool`] (one pooled task per slot per
+//! epoch). The coordinator routes each epoch's arrivals by model
+//! fingerprint (consistent hashing keeps a model's weights and cached
+//! profiles on one shard), coalesces same-model requests into batches,
+//! tags each batch with a global request id, and hands one
+//! [`EpochPacket`] per slot to the pool. At the epoch barrier it
+//! collects exactly one [`EpochReport`] per shard, settles the
+//! request-id ledger, reslices the power budget headroom-weighted over
+//! the *alive* shards (hot shards lose budget to cool ones, dead shards
+//! lose their whole slice), and autoscales the active ring.
 //!
-//! ## Fault injection and supervision
+//! ## Work-stealing
+//!
+//! Consistent hashing concentrates a hot model's load on one shard.
+//! With a [`StealConfig`] set, the coordinator estimates each shard's
+//! backlog in seconds (ledger in-flight plus this epoch's fresh batch,
+//! priced by the canonical [`CostModel`]) and plans a seeded,
+//! order-stable [`steal_schedule`] from most- to least-loaded shards.
+//! Donors surrender whole queued requests (keeping their gids) up to
+//! the planned quota at the end of their epoch; the coordinator
+//! reassigns them at the barrier and delivers them with the next
+//! epoch's packets. Steal counters join the merged report (and its
+//! digest) only when stealing is on, so `--steal off` digests are
+//! byte-identical to builds that predate the steal plane.
+//!
+//! ## Fault injection, supervision, and warm standby
 //!
 //! With a [`FaultPlan`] configured, a supervisor inside the coordinator
 //! compiles the plan into per-shard lifecycles and applies them at epoch
@@ -38,23 +55,32 @@
 //! checkpoint after its down window); hangs freeze a shard — tolerated
 //! for [`SUPERVISOR_PATIENCE_EPOCHS`] epochs, then escalated to a
 //! crash + restart; chiplet trips, mailbox drops/delays, and report
-//! losses perturb the data and telemetry planes. The request-id ledger
-//! is transactional: a request id is settled exactly once (done or
-//! dropped), so failover retries never double-complete —
-//! at-most-once accounting. Degradation counters ([`FaultStats`]) join
-//! the merged report (and its digest) only when a plan is active, so
-//! fault-free digests are byte-identical to a build without this module.
+//! losses perturb the data and telemetry planes. With `spares > 0` the
+//! supervisor keeps that many prebuilt engines idle in physical slots
+//! `n..n+spares`; a crash is then absorbed by *promotion* — the standby
+//! adopts the dead shard's ring position, checkpoint clock, and
+//! in-flight ids at the same barrier, so the shard never leaves the
+//! ring and pays no `downtime_epochs`. The demoted slot re-warms as the
+//! next standby. The request-id ledger is transactional: a request id
+//! is settled exactly once (done or dropped), so failover retries and
+//! steal migrations never double-complete — at-most-once accounting.
+//! Degradation counters ([`FaultStats`]) join the merged report (and
+//! its digest) only when a plan is active, so fault-free digests are
+//! byte-identical to a build without this module.
 //!
 //! ## Determinism model
 //!
 //! Real threads, reproducible results: shards advance in *epoch
-//! lockstep*. Within an epoch a shard is a deterministic function of its
-//! seed and its packet sequence; the packet sequence is a deterministic
-//! function of the source seed, the fault plan, and the (deterministic)
-//! cap/autoscale history; the coordinator sorts reports by shard id
-//! before rebalancing. Thread interleaving can reorder report arrival
-//! but never their epoch content, so `thermos serve --shards 4 --seed S
-//! [--chaos C]` twice produces byte-identical merged reports. The only
+//! lockstep* on the work pool. Within an epoch a shard is a
+//! deterministic function of its seed and its packet sequence; the
+//! packet sequence is a deterministic function of the source seed, the
+//! fault plan, the steal schedule (itself a pure function of
+//! `(seed, epoch, loads)`), and the (deterministic) cap/autoscale
+//! history; the coordinator reads reports in shard-id order. Thread
+//! interleaving can reorder slot execution but never epoch content, so
+//! `thermos serve --shards 4 --seed S [--chaos C] [--steal]
+//! [--spares K]` twice produces byte-identical merged reports — and the
+//! same holds across `--threads 1` and `--threads 4`. The only
 //! interleaving-dependent values — profile-cache hit/miss splits — are
 //! deliberately kept out of the digested JSON.
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
@@ -63,11 +89,13 @@ pub mod arbiter;
 pub mod autoscale;
 pub mod router;
 pub mod shard;
+pub mod steal;
 
 pub use arbiter::{package_tdp_w, Arbiter, ArbiterConfig};
 pub use autoscale::{AutoscaleConfig, Autoscaler};
 pub use router::{ClusterRouter, HashRing, RouteStats};
 pub use shard::{EpochPacket, EpochReport, ShardParams, ShardResult, ShardSchedSpec};
+pub use steal::{steal_schedule, CostModel, StealConfig, StealMove, StealStats};
 
 pub use crate::fault::{ClusterError, FaultPlan};
 
@@ -76,14 +104,16 @@ use crate::fault::{FaultKind, FaultStats, ShardCmd, SUPERVISOR_PATIENCE_EPOCHS};
 use crate::noi::NoiTopology;
 use crate::sched::thermos::PREF_BALANCED;
 use crate::serve::ingest::TrafficSource;
-use crate::serve::server::{ServeConfig, Server};
+use crate::serve::server::{ServeConfig, ServeSched, Server};
 use crate::serve::telemetry::{digest64, TelemetryHub};
 use crate::serve::ServeRequest;
 use crate::sim::{ProfileCache, SimConfig};
 use crate::thermal::ThermalParams;
 use crate::util::json::Json;
-use std::collections::{BTreeMap, BTreeSet};
-use std::sync::mpsc;
+use crate::util::pool::WorkPool;
+use crate::util::sync::lock_recover;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -100,7 +130,8 @@ pub struct ClusterConfig {
     /// `budget_frac × TDP × shards` from the architecture.
     pub power_budget_w: Option<f64>,
     pub budget_frac: f64,
-    /// Bounded mailbox depth per shard.
+    /// Vestigial mailbox depth from the channel-based coordinator; kept
+    /// for config compatibility (the pooled barrier has no mailboxes).
     pub mailbox_cap: usize,
     /// Virtual nodes per shard on the hash ring.
     pub vnodes: usize,
@@ -108,7 +139,7 @@ pub struct ClusterConfig {
     pub coalesce: bool,
     pub max_batch_images: u64,
     pub noi: NoiTopology,
-    /// Per-shard serve/engine knobs. Shard `i` runs with
+    /// Per-shard serve/engine knobs. Physical slot `i` runs with
     /// `seed + i · 0x9e37` (distinct workload state per shard,
     /// deterministic overall); snapshots are cluster-level, so per-shard
     /// snapshotting is forced off.
@@ -120,6 +151,16 @@ pub struct ClusterConfig {
     /// Deterministic fault schedule; `None` disables the whole fault
     /// plane (and keeps merged digests identical to pre-fault builds).
     pub faults: Option<FaultPlan>,
+    /// Warm-standby spares: prebuilt idle engines in physical slots
+    /// `shards..shards+spares` that absorb crashes by promotion.
+    pub spares: usize,
+    /// Work-stealing knobs; `None` disables the steal plane (and keeps
+    /// merged digests identical to pre-steal builds).
+    pub steal: Option<StealConfig>,
+    /// Pool width for per-shard epoch stepping; `None` uses the global
+    /// thread configuration (`--threads` / `THERMOS_THREADS` / cores).
+    /// Results are byte-identical at any width.
+    pub threads: Option<usize>,
 }
 
 impl Default for ClusterConfig {
@@ -141,6 +182,9 @@ impl Default for ClusterConfig {
             autoscale: None,
             record_base: None,
             faults: None,
+            spares: 0,
+            steal: None,
+            threads: None,
         }
     }
 }
@@ -159,10 +203,12 @@ pub struct ClusterReport {
 }
 
 /// The fault supervisor: compiles a [`FaultPlan`] into per-shard
-/// lifecycles and owns the request-id ledger that makes failover
-/// at-most-once. Lives inside the coordinator — every decision happens
-/// at an epoch barrier, on one thread, in shard-id order, so the fault
-/// schedule perturbs the run deterministically.
+/// lifecycles, owns the request-id ledger that makes failover and steal
+/// migration at-most-once, and manages the logical-shard → physical-slot
+/// assignment that warm-standby promotion rewires. Lives inside the
+/// coordinator — every decision happens at an epoch barrier, on one
+/// thread, in shard-id order, so the fault schedule perturbs the run
+/// deterministically.
 struct Supervisor {
     n: usize,
     /// Per-shard lifecycle directive by epoch (absent ⇒ `Run`).
@@ -186,14 +232,34 @@ struct Supervisor {
     inflight: BTreeMap<u64, (usize, ServeRequest)>,
     /// Delivery epoch → delayed batches `(original shard, tagged reqs)`.
     delayed: BTreeMap<usize, Vec<(usize, Vec<(u64, ServeRequest)>)>>,
+    /// Gids stolen at the last barrier, awaiting delivery with the next
+    /// epoch's packets. Failover and promotion skip these — the steal
+    /// delivery path re-routes them itself — so a crash between plan and
+    /// delivery can never deliver a request twice.
+    pending_gids: BTreeSet<u64>,
+    /// Logical shard → physical slot; promotion rewires one entry.
+    assignment: Vec<usize>,
+    /// Idle prebuilt physical slots, FIFO by warm-up order.
+    spare_pool: VecDeque<usize>,
+    /// Physical slots demoted at this barrier: they get a `Crash` packet
+    /// this epoch, then recycle into `spare_pool` at the next barrier
+    /// (re-warming via `Standby` packets).
+    demoted: Vec<usize>,
     next_gid: u64,
-    /// Ledger tracking is only paid for when a plan is active.
+    /// Ledger tracking is only paid for when a plan or stealing is
+    /// active.
     track: bool,
     stats: FaultStats,
 }
 
 impl Supervisor {
-    fn new(plan: &FaultPlan, n: usize, total_epochs: usize, track: bool) -> Supervisor {
+    fn new(
+        plan: &FaultPlan,
+        n: usize,
+        total_epochs: usize,
+        track: bool,
+        spares: usize,
+    ) -> Supervisor {
         let mut sup = Supervisor {
             n,
             schedule: vec![BTreeMap::new(); n],
@@ -206,6 +272,10 @@ impl Supervisor {
             alive: vec![true; n],
             inflight: BTreeMap::new(),
             delayed: BTreeMap::new(),
+            pending_gids: BTreeSet::new(),
+            assignment: (0..n).collect(),
+            spare_pool: (n..n + spares).collect(),
+            demoted: Vec::new(),
             next_gid: 0,
             track,
             stats: FaultStats::default(),
@@ -314,7 +384,9 @@ impl Supervisor {
         let mine: Vec<(u64, ServeRequest)> = self
             .inflight
             .iter()
-            .filter(|(g, (sh, _))| *sh == s && !parked.contains(g))
+            .filter(|(g, (sh, _))| {
+                *sh == s && !parked.contains(g) && !self.pending_gids.contains(g)
+            })
             .map(|(&g, (_, r))| (g, r.clone()))
             .collect();
         for (g, r) in mine {
@@ -332,15 +404,19 @@ impl Supervisor {
         }
     }
 
-    /// Apply this epoch's directives: ring membership, failover, trips,
-    /// and delayed deliveries. Returns per-shard `(cmd, trips, extra
-    /// requests)` for the packet build.
+    /// Apply this epoch's directives: ring membership, failover or
+    /// standby promotion, trips, and delayed deliveries. Returns
+    /// per-shard `(cmd, trips, extra requests)` for the packet build.
     #[allow(clippy::type_complexity)]
     fn directives(
         &mut self,
         epoch: usize,
         router: &mut ClusterRouter,
     ) -> (Vec<ShardCmd>, Vec<Vec<(usize, bool)>>, Vec<Vec<(u64, ServeRequest)>>) {
+        // Last barrier's demotions recycle into the spare pool; their
+        // slots have been re-warming via `Standby` packets since.
+        let recycled: Vec<usize> = self.demoted.drain(..).collect();
+        self.spare_pool.extend(recycled);
         let n = self.n;
         let mut cmds = vec![ShardCmd::Run; n];
         let mut trips: Vec<Vec<(usize, bool)>> = vec![Vec::new(); n];
@@ -348,8 +424,12 @@ impl Supervisor {
         for s in 0..n {
             let mut cmd = self.schedule[s].get(&epoch).copied().unwrap_or(ShardCmd::Run);
             // A fault that would empty the ring is skipped outright (and
-            // not counted): scale-to-zero is rejected, never a panic.
-            if matches!(cmd, ShardCmd::Crash | ShardCmd::Hang)
+            // not counted): scale-to-zero is rejected, never a panic. A
+            // crash with a standby available keeps the ring full, so it
+            // is allowed through to the promotion path.
+            let ring_emptying = cmd == ShardCmd::Hang
+                || (cmd == ShardCmd::Crash && self.spare_pool.is_empty());
+            if ring_emptying
                 && self.alive[s]
                 && router.ring.contains(s)
                 && router.ring.num_shards() == 1
@@ -362,9 +442,40 @@ impl Supervisor {
                     if self.fault_starts[s].contains(&epoch) {
                         self.stats.faults_injected += 1;
                     }
-                    router.ring.remove(s);
-                    self.alive[s] = false;
-                    self.failover(s, router, &mut extras);
+                    if let Some(spare) = self.spare_pool.pop_front() {
+                        // Warm promotion: the standby adopts the shard's
+                        // ring position and in-flight ids at this same
+                        // barrier — no ring shrink, no downtime epochs.
+                        let old = self.assignment[s];
+                        self.assignment[s] = spare;
+                        self.demoted.push(old);
+                        self.stats.standby_promotions += 1;
+                        if !self.alive[s] {
+                            // An escalated hang crashed a shard already
+                            // off the ring — promotion revives it now.
+                            self.alive[s] = true;
+                            router.ring.add(s);
+                        }
+                        let parked = self.delayed_gids();
+                        let mine: Vec<(u64, ServeRequest)> = self
+                            .inflight
+                            .iter()
+                            .filter(|(g, (sh, _))| {
+                                *sh == s && !parked.contains(g) && !self.pending_gids.contains(g)
+                            })
+                            .map(|(&g, (_, r))| (g, r.clone()))
+                            .collect();
+                        self.stats.retries += mine.len() as u64;
+                        extras[s].extend(mine);
+                        // The cold Down/Restart tail is moot: the shard
+                        // never left service.
+                        self.unschedule_lifecycle(s, epoch);
+                        cmd = ShardCmd::Adopt;
+                    } else {
+                        router.ring.remove(s);
+                        self.alive[s] = false;
+                        self.failover(s, router, &mut extras);
+                    }
                 }
                 ShardCmd::Hang => {
                     if self.alive[s] {
@@ -387,6 +498,10 @@ impl Supervisor {
                         router.ring.add(s);
                     }
                 }
+                // Never scheduled for logical shards: `Standby` is the
+                // pool fallback for unassigned slots, `Adopt` is set
+                // above by promotion.
+                ShardCmd::Standby | ShardCmd::Adopt => {}
             }
             cmds[s] = cmd;
             // Trips ride the packet; shards that are dead this epoch
@@ -505,6 +620,7 @@ fn baseline_report(shard: usize) -> EpochReport {
         alive: true,
         done_ids: Vec::new(),
         dropped_ids: Vec::new(),
+        stolen: Vec::new(),
     }
 }
 
@@ -515,6 +631,7 @@ fn epoch_snapshot_json(
     caps_w: &[f64],
     active: usize,
     down_shards: Option<usize>,
+    stolen_requests: Option<usize>,
 ) -> Json {
     let mut pairs = vec![
         ("epoch", Json::Num(epoch as f64)),
@@ -543,18 +660,63 @@ fn epoch_snapshot_json(
     if let Some(d) = down_shards {
         pairs.push(("down_shards", Json::Num(d as f64)));
     }
+    if let Some(m) = stolen_requests {
+        pairs.push(("stolen_requests", Json::Num(m as f64)));
+    }
     Json::obj(pairs)
 }
 
 /// Run a sharded serving cluster to its horizon and merge the per-shard
 /// telemetry into one fleet-wide report. See the module docs for the
-/// architecture, the fault model, and the determinism model.
+/// architecture, the fault model, the steal plane, and the determinism
+/// model.
 pub fn run_cluster(
     cfg: ClusterConfig,
-    mut source: Box<dyn TrafficSource>,
+    source: Box<dyn TrafficSource>,
 ) -> Result<ClusterReport, ClusterError> {
+    match cfg.sched.clone() {
+        ShardSchedSpec::Simba => run_cluster_typed(cfg, source, |_slot, arch: &Arch, _seed| {
+            crate::sched::SimbaSched::new(arch.clone())
+        }),
+        ShardSchedSpec::BigLittle => run_cluster_typed(cfg, source, |_slot, arch: &Arch, _seed| {
+            crate::sched::BigLittleSched::new(arch.clone())
+        }),
+        ShardSchedSpec::Thermos { theta, fallback } => {
+            use crate::sched::policy::NativeDdt;
+            use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
+            use crate::sched::thermos::ThermosSched;
+            use crate::serve::server::TenantRouter;
+            let max_images = cfg.serve.sim.max_images;
+            run_cluster_typed(cfg, source, move |_slot, arch: &Arch, seed| {
+                let zoo = crate::workload::ModelZoo::new();
+                let encoder = StateEncoder::new(arch, &zoo, max_images);
+                let ddt = match &theta {
+                    Some(t) => NativeDdt::new(STATE_DIM, NUM_CLUSTERS, t.clone()),
+                    None => {
+                        let mut rng = crate::util::rng::Rng::new(seed);
+                        NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng)
+                    }
+                };
+                TenantRouter::new(ThermosSched::new(arch.clone(), encoder, ddt, fallback))
+            })
+        }
+    }
+}
+
+/// Monomorphic cluster driver: one scheduler type for the whole fleet,
+/// built per physical slot by `make(slot, arch, seed)`.
+fn run_cluster_typed<S, F>(
+    cfg: ClusterConfig,
+    mut source: Box<dyn TrafficSource>,
+    make: F,
+) -> Result<ClusterReport, ClusterError>
+where
+    S: ServeSched + Send,
+    F: Fn(usize, &Arch, u64) -> S + Sync,
+{
     assert!(cfg.shards >= 1, "cluster needs at least one shard");
     let n = cfg.shards;
+    let n_phys = n + cfg.spares;
     let ref_arch = Arch::paper_heterogeneous(cfg.noi);
     let budget_w = cfg
         .power_budget_w
@@ -567,19 +729,47 @@ pub fn run_cluster(
     let source_name = source.name().to_string();
     let scheduler_name = cfg.sched.name();
     let faults_on = cfg.faults.is_some();
+    let steal_cfg = cfg.steal.clone();
+    let steal_on = steal_cfg.is_some();
     let plan = cfg.faults.clone().unwrap_or_default();
-    let mut sup = Supervisor::new(&plan, n, total_epochs, faults_on);
+    let mut sup = Supervisor::new(&plan, n, total_epochs, faults_on || steal_on, cfg.spares);
+    let cost: Option<Arc<CostModel>> =
+        steal_on.then(|| Arc::new(CostModel::new(&ref_arch, &cache)));
+    let pool = match cfg.threads {
+        Some(t) => WorkPool::new(t),
+        None => WorkPool::global(),
+    };
 
-    // Channels: bounded per-shard mailboxes in, unbounded telemetry out.
-    let mut packet_txs: Vec<mpsc::SyncSender<EpochPacket>> = Vec::with_capacity(n);
-    let mut packet_rxs: Vec<mpsc::Receiver<EpochPacket>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = mpsc::sync_channel(cfg.mailbox_cap.max(1));
-        packet_txs.push(tx);
-        packet_rxs.push(rx);
-    }
-    let (report_tx, report_rx) = mpsc::channel::<EpochReport>();
-    let (result_tx, result_rx) = mpsc::channel::<ShardResult>();
+    // Slots borrow their arch; `archs` is declared first so it outlives
+    // (and is dropped after) the slots.
+    let archs: Vec<Arch> = (0..n_phys).map(|_| Arch::paper_heterogeneous(cfg.noi)).collect();
+    let make = &make;
+    let slots: Vec<Mutex<shard::ShardSlot<'_, S>>> = (0..n_phys)
+        .map(|i| {
+            let seed = cfg.serve.sim.seed.wrapping_add(i as u64 * 0x9e37);
+            let params = ShardParams {
+                id: i,
+                noi: cfg.noi,
+                serve: ServeConfig {
+                    snapshot_every_s: 0.0,
+                    sim: SimConfig { seed, ..cfg.serve.sim.clone() },
+                    ..cfg.serve.clone()
+                },
+                sched: cfg.sched.clone(),
+                epoch_steps,
+                drain_max_s: cfg.drain_max_s,
+                record_path: cfg.record_base.as_ref().map(|b| format!("{b}.shard{i}.jsonl")),
+            };
+            let arch = &archs[i];
+            Mutex::new(shard::ShardSlot::new(
+                params,
+                cache.clone(),
+                arch,
+                Box::new(move || make(i, arch, seed)),
+                cost.clone(),
+            ))
+        })
+        .collect();
 
     let mut snapshots: Vec<Json> = Vec::new();
     let mut stats = RouteStats { routed: vec![0; n], ..Default::default() };
@@ -596,142 +786,230 @@ pub fn run_cluster(
     );
     let mut arbiter = Arbiter::new(ArbiterConfig::new(budget_w), n);
     let mut last_reports: Vec<EpochReport> = (0..n).map(baseline_report).collect();
+    let mut caps_w = vec![budget_w / n as f64; n];
+    let mut steal_stats = StealStats::default();
+    // Stolen work reassigned at barrier `e` is delivered as extras at
+    // `e + 1` (the donor's engine has already run epoch `e`).
+    let mut pending_migrations: Vec<Vec<(u64, ServeRequest)>> = vec![Vec::new(); n];
+    let mut run_err: Option<ClusterError> = None;
 
-    let (mut results, run_err) = std::thread::scope(|scope| {
-        for (id, rx) in packet_rxs.into_iter().enumerate() {
-            let params = ShardParams {
-                id,
-                noi: cfg.noi,
-                serve: ServeConfig {
-                    snapshot_every_s: 0.0,
-                    sim: SimConfig {
-                        seed: cfg.serve.sim.seed.wrapping_add(id as u64 * 0x9e37),
-                        ..cfg.serve.sim.clone()
-                    },
-                    ..cfg.serve.clone()
-                },
-                sched: cfg.sched.clone(),
-                epoch_steps,
-                drain_max_s: cfg.drain_max_s,
-                record_path: cfg.record_base.as_ref().map(|b| format!("{b}.shard{id}.jsonl")),
-            };
-            let cache = cache.clone();
-            let report_tx = report_tx.clone();
-            let result_tx = result_tx.clone();
-            scope.spawn(move || shard::run_shard(params, cache, rx, report_tx, result_tx));
+    // Coordinator: supervise, route, plan steals, barrier on the pool,
+    // rebalance, autoscale.
+    for epoch in 0..total_epochs {
+        let (cmds, mut trip_sets, mut extras) = sup.directives(epoch, &mut router);
+        if router.ring.is_empty() {
+            run_err = Some(ClusterError::NoActiveShards);
+            break;
         }
-        drop(report_tx);
-        drop(result_tx);
-
-        // Coordinator: supervise, route, barrier, rebalance, autoscale.
-        let mut run_err: Option<ClusterError> = None;
-        let mut caps_w = vec![budget_w / n as f64; n];
-        'epochs: for epoch in 0..total_epochs {
-            let (cmds, mut trip_sets, mut extras) = sup.directives(epoch, &mut router);
-            if router.ring.is_empty() {
-                run_err = Some(ClusterError::NoActiveShards);
-                break 'epochs;
+        // Deliver last barrier's steal migrations. The recipient may
+        // have crashed since the plan was made — re-route those like
+        // failover retries (their gids were skipped by failover exactly
+        // so this path owns them).
+        for to in 0..n {
+            if pending_migrations[to].is_empty() {
+                continue;
             }
-            let t_end = (epoch as f64 + 1.0) * cfg.epoch_s;
-            let arrivals = source.arrivals_until(t_end);
-            let offered_rate = arrivals.len() as f64 / cfg.epoch_s;
-            let mut batches = router.route_epoch(arrivals, n, &mut stats);
-            let last = epoch + 1 == total_epochs;
-            for (id, tx) in packet_txs.iter().enumerate() {
-                let mut reqs = sup.assign_gids(id, std::mem::take(&mut batches[id]));
-                sup.intercept(epoch, id, &mut reqs);
-                reqs.append(&mut extras[id]);
-                let pkt = EpochPacket {
-                    reqs,
-                    cap_w: caps_w[id],
-                    last,
-                    cmd: cmds[id],
-                    trips: std::mem::take(&mut trip_sets[id]),
-                };
-                match tx.try_send(pkt) {
-                    Ok(()) => {}
-                    // The lockstep protocol keeps at most one packet in
-                    // flight, but fall back to a blocking send for safety.
-                    Err(mpsc::TrySendError::Full(pkt)) => {
-                        let _ = tx.send(pkt);
-                    }
-                    Err(mpsc::TrySendError::Disconnected(_)) => {}
+            let due = std::mem::take(&mut pending_migrations[to]);
+            for (g, r) in due {
+                sup.pending_gids.remove(&g);
+                if sup.inflight.get(&g).map(|e| e.0) != Some(to) {
+                    continue;
                 }
-            }
-            // Barrier: exactly one report per shard, dead or alive.
-            let mut reports: Vec<EpochReport> = Vec::with_capacity(n);
-            for _ in 0..n {
-                match report_rx.recv() {
-                    Ok(r) => reports.push(r),
-                    Err(_) => {
-                        run_err = Some(ClusterError::ShardFailed(format!(
-                            "epoch {epoch}: a shard worker exited before the barrier"
-                        )));
-                        break 'epochs;
-                    }
-                }
-            }
-            reports.sort_by_key(|r| r.shard);
-            // The id ledger settles unconditionally — report loss only
-            // blinds the telemetry plane, never the accounting plane.
-            for r in &reports {
-                sup.settle(&r.done_ids, &r.dropped_ids);
-            }
-            let mut alive_mask = vec![true; n];
-            for r in reports.iter_mut() {
-                let s = r.shard;
-                alive_mask[s] = r.alive;
-                if sup.lose_report(epoch, s) {
-                    let mut sub = last_reports[s].clone();
-                    sub.epoch = epoch;
-                    alive_mask[s] = sub.alive;
-                    *r = sub;
+                if sup.alive[to] && router.ring.contains(to) {
+                    extras[to].push((g, r));
                 } else {
-                    let mut known = r.clone();
-                    known.done_ids = Vec::new();
-                    known.dropped_ids = Vec::new();
-                    last_reports[s] = known;
-                }
-            }
-            let peaks: Vec<f64> = reports.iter().map(|r| r.peak_temp_k).collect();
-            caps_w = arbiter.rebalance_masked(&peaks, &alive_mask);
-            if let Some(a) = autoscaler.as_mut() {
-                let active = router.ring.num_shards();
-                let target = a.target(offered_rate, active).clamp(1, n);
-                while router.ring.num_shards() < target {
-                    match (0..n).find(|&i| !router.ring.contains(i) && sup.alive[i]) {
-                        Some(i) => router.ring.add(i),
-                        None => break,
-                    }
-                }
-                // Scale-to-zero is rejected: the last shard never drains.
-                while router.ring.num_shards() > target && router.ring.num_shards() > 1 {
-                    match router.ring.shards().last().copied() {
-                        Some(s) => router.ring.remove(s),
-                        None => break,
+                    match router.reroute(&r) {
+                        Some(t) => {
+                            sup.inflight.insert(g, (t, r.clone()));
+                            extras[t].push((g, r));
+                            sup.stats.retries += 1;
+                        }
+                        None => {
+                            sup.inflight.remove(&g);
+                            sup.stats.dropped_requests += 1;
+                        }
                     }
                 }
             }
-            snapshots.push(epoch_snapshot_json(
-                epoch,
-                t_end,
-                &reports,
-                &caps_w,
-                router.ring.num_shards(),
-                faults_on.then(|| alive_mask.iter().filter(|&&a| !a).count()),
-            ));
         }
-        drop(packet_txs);
-
-        let mut results: Vec<ShardResult> = Vec::with_capacity(n);
-        while let Ok(r) = result_rx.recv() {
-            results.push(r);
+        let t_end = (epoch as f64 + 1.0) * cfg.epoch_s;
+        let arrivals = source.arrivals_until(t_end);
+        let offered_rate = arrivals.len() as f64 / cfg.epoch_s;
+        let mut batches = router.route_epoch(arrivals, n, &mut stats);
+        let last = epoch + 1 == total_epochs;
+        // Plan this epoch's steals from estimated backlogs (never on the
+        // final epoch — delivery needs a next epoch to land in).
+        let mut quota = vec![0.0; n];
+        let mut planned: Vec<StealMove> = Vec::new();
+        if let (Some(sc), Some(cm), false) = (&steal_cfg, &cost, last) {
+            let eligible: Vec<usize> =
+                (0..n).filter(|&s| sup.alive[s] && router.ring.contains(s)).collect();
+            if eligible.len() >= 2 {
+                let mut loads = vec![0.0; eligible.len()];
+                // Ledger backlog: everything in flight on an eligible
+                // shard (extras are already tracked there).
+                for (owner, r) in sup.inflight.values() {
+                    if let Some(k) = eligible.iter().position(|&e| e == *owner) {
+                        loads[k] += cm.cost(r);
+                    }
+                }
+                // Plus this epoch's freshly routed batch (gids not yet
+                // assigned, so not yet in the ledger).
+                for (k, &s) in eligible.iter().enumerate() {
+                    loads[k] += batches[s].iter().map(|r| cm.cost(r)).sum::<f64>();
+                }
+                planned = steal_schedule(sc.seed, epoch as u64, &loads, sc.slack)
+                    .into_iter()
+                    .map(|m| StealMove {
+                        from: eligible[m.from],
+                        to: eligible[m.to],
+                        cost_s: m.cost_s,
+                    })
+                    .collect();
+                for m in &planned {
+                    quota[m.from] += m.cost_s;
+                }
+            }
         }
-        (results, run_err)
-    });
+        // Build this epoch's packets at their physical slots. Unfilled
+        // slots (idle spares) fall back to `Standby` in the pool task.
+        let mut pkts: Vec<Option<EpochPacket>> = (0..n_phys).map(|_| None).collect();
+        for s in 0..n {
+            let mut reqs = sup.assign_gids(s, std::mem::take(&mut batches[s]));
+            sup.intercept(epoch, s, &mut reqs);
+            reqs.append(&mut extras[s]);
+            pkts[sup.assignment[s]] = Some(EpochPacket {
+                reqs,
+                cap_w: caps_w[s],
+                last,
+                cmd: cmds[s],
+                trips: std::mem::take(&mut trip_sets[s]),
+                steal_cost_s: quota[s],
+            });
+        }
+        // Freshly demoted slots take the crash their shard absorbed.
+        for &p in &sup.demoted {
+            pkts[p] = Some(EpochPacket {
+                reqs: Vec::new(),
+                cap_w: 0.0,
+                last,
+                cmd: ShardCmd::Crash,
+                trips: Vec::new(),
+                steal_cost_s: 0.0,
+            });
+        }
+        // Barrier: every slot steps once on the pool; exactly one report
+        // per slot, dead, idle, or alive.
+        let cells: Vec<Mutex<Option<EpochPacket>>> = pkts.into_iter().map(Mutex::new).collect();
+        let phys_reports: Vec<EpochReport> = pool.run(n_phys, |p| {
+            let pkt = lock_recover(&cells[p]).take().unwrap_or_else(|| EpochPacket {
+                reqs: Vec::new(),
+                cap_w: 0.0,
+                last,
+                cmd: ShardCmd::Standby,
+                trips: Vec::new(),
+                steal_cost_s: 0.0,
+            });
+            lock_recover(&slots[p]).epoch(pkt)
+        });
+        let mut reports: Vec<EpochReport> = (0..n)
+            .map(|s| {
+                let mut r = phys_reports[sup.assignment[s]].clone();
+                r.shard = s;
+                r
+            })
+            .collect();
+        // The id ledger settles unconditionally — report loss only
+        // blinds the telemetry plane, never the accounting plane. The
+        // stolen backlog is harvested here for the same reason.
+        let mut stolen_by_donor: Vec<Vec<(u64, ServeRequest)>> = vec![Vec::new(); n];
+        for r in reports.iter_mut() {
+            sup.settle(&r.done_ids, &r.dropped_ids);
+            stolen_by_donor[r.shard] = std::mem::take(&mut r.stolen);
+        }
+        let mut alive_mask = vec![true; n];
+        for r in reports.iter_mut() {
+            let s = r.shard;
+            alive_mask[s] = r.alive;
+            if sup.lose_report(epoch, s) {
+                let mut sub = last_reports[s].clone();
+                sub.epoch = epoch;
+                alive_mask[s] = sub.alive;
+                *r = sub;
+            } else {
+                let mut known = r.clone();
+                known.done_ids = Vec::new();
+                known.dropped_ids = Vec::new();
+                last_reports[s] = known;
+            }
+        }
+        // Reassign the surrendered backlog along the planned routes;
+        // delivery happens with the next epoch's packets.
+        let mut migrated_now = 0usize;
+        if !planned.is_empty() {
+            steal_stats.planned_moves += planned.len() as u64;
+            let mut routes: BTreeMap<usize, Vec<(usize, f64)>> = BTreeMap::new();
+            for m in &planned {
+                routes.entry(m.from).or_default().push((m.to, m.cost_s));
+            }
+            for (donor, route) in &routes {
+                let mut di = 0;
+                let mut acc = 0.0;
+                for (g, r) in stolen_by_donor[*donor].drain(..) {
+                    while di + 1 < route.len() && acc + 1e-12 >= route[di].1 {
+                        di += 1;
+                        acc = 0.0;
+                    }
+                    let to = route[di].0;
+                    let c = cost.as_ref().map(|cm| cm.cost(&r)).unwrap_or(0.0);
+                    acc += c;
+                    migrated_now += 1;
+                    steal_stats.migrated_cost_s += c;
+                    sup.inflight.insert(g, (to, r.clone()));
+                    sup.pending_gids.insert(g);
+                    pending_migrations[to].push((g, r));
+                }
+            }
+            steal_stats.migrated_requests += migrated_now as u64;
+            if migrated_now > 0 {
+                steal_stats.steal_epochs += 1;
+            }
+        }
+        let peaks: Vec<f64> = reports.iter().map(|r| r.peak_temp_k).collect();
+        caps_w = arbiter.rebalance_masked(&peaks, &alive_mask);
+        if let Some(a) = autoscaler.as_mut() {
+            let active = router.ring.num_shards();
+            let target = a.target(offered_rate, active).clamp(1, n);
+            while router.ring.num_shards() < target {
+                match (0..n).find(|&i| !router.ring.contains(i) && sup.alive[i]) {
+                    Some(i) => router.ring.add(i),
+                    None => break,
+                }
+            }
+            // Scale-to-zero is rejected: the last shard never drains.
+            while router.ring.num_shards() > target && router.ring.num_shards() > 1 {
+                match router.ring.shards().last().copied() {
+                    Some(s) => router.ring.remove(s),
+                    None => break,
+                }
+            }
+        }
+        snapshots.push(epoch_snapshot_json(
+            epoch,
+            t_end,
+            &reports,
+            &caps_w,
+            router.ring.num_shards(),
+            faults_on.then(|| alive_mask.iter().filter(|&&a| !a).count()),
+            steal_on.then_some(migrated_now),
+        ));
+    }
     if let Some(e) = run_err {
         return Err(e);
     }
+
+    // Drain every slot on the pool; spares drain trivially (no work).
+    let mut results: Vec<ShardResult> = pool.run(n_phys, |p| lock_recover(&slots[p]).finish());
     results.sort_by_key(|r| r.id);
     // Close the ledger with ids settled during the post-horizon drain.
     for r in &results {
@@ -837,10 +1115,23 @@ pub fn run_cluster(
         ("autoscaler", autoscale_json),
         ("shards_detail", Json::Arr(shards_detail)),
     ];
-    // Only fault-aware runs carry the key: fault-free digests stay
-    // byte-identical to builds that predate the fault plane.
+    // Mode-gated keys: fault-free, steal-free, spare-free digests stay
+    // byte-identical to builds that predate each plane.
     if faults_on {
         pairs.push(("faults", sup.stats.to_json()));
+    }
+    if steal_on {
+        pairs.push(("steal", steal_stats.to_json()));
+    }
+    if cfg.spares > 0 {
+        pairs.push((
+            "spares",
+            Json::obj(vec![
+                ("configured", Json::Num(cfg.spares as f64)),
+                ("standby_promotions", Json::Num(sup.stats.standby_promotions as f64)),
+                ("idle_final", Json::Num(sup.spare_pool.len() as f64)),
+            ]),
+        ));
     }
     let json = Json::obj(pairs);
     let digest = digest64(&json.to_string_compact());
@@ -927,8 +1218,11 @@ mod tests {
         assert!(report.json.get("offered").as_f64().expect("offered") > 0.0);
         assert!(report.json.get("completed").as_f64().expect("completed") > 0.0);
         assert_eq!(report.json.get("shards").as_f64().expect("shards"), 2.0);
-        // Fault-free runs carry no fault telemetry at all.
+        // Fault-free runs carry no fault telemetry at all — and no steal
+        // or spare telemetry either when those planes are off.
         assert!(matches!(report.json.get("faults"), Json::Null));
+        assert!(matches!(report.json.get("steal"), Json::Null));
+        assert!(matches!(report.json.get("spares"), Json::Null));
         // Caps always sum to the budget.
         let budget = report.json.get("power_budget_w").as_f64().expect("budget");
         let caps = match report.json.get("arbiter").get("final_caps_w") {
@@ -941,12 +1235,20 @@ mod tests {
     }
 
     #[test]
+    fn steal_defaults_are_off() {
+        let cfg = ClusterConfig::default();
+        assert!(cfg.steal.is_none());
+        assert_eq!(cfg.spares, 0);
+        assert!(cfg.threads.is_none());
+    }
+
+    #[test]
     fn supervisor_compiles_crash_and_hang_lifecycles() {
         let plan = FaultPlan::new(vec![
             FaultEvent { epoch: 2, shard: 1, kind: FaultKind::ShardCrash { down_epochs: 2 } },
             FaultEvent { epoch: 3, shard: 0, kind: FaultKind::ShardHang { epochs: 4 } },
         ]);
-        let sup = Supervisor::new(&plan, 2, 20, true);
+        let sup = Supervisor::new(&plan, 2, 20, true, 0);
         assert_eq!(sup.schedule[1].get(&2), Some(&ShardCmd::Crash));
         assert_eq!(sup.schedule[1].get(&3), Some(&ShardCmd::Down));
         assert_eq!(sup.schedule[1].get(&4), Some(&ShardCmd::Restart));
@@ -965,7 +1267,7 @@ mod tests {
             shard: 0,
             kind: FaultKind::ShardCrash { down_epochs: 1 },
         }]);
-        let mut sup = Supervisor::new(&plan, 1, 10, true);
+        let mut sup = Supervisor::new(&plan, 1, 10, true, 0);
         let mut router = ClusterRouter::new(&[0], 8, false, 100);
         let (cmds, _, _) = sup.directives(0, &mut router);
         assert_eq!(cmds[0], ShardCmd::Run, "sole shard must not be crashed");
@@ -984,7 +1286,7 @@ mod tests {
             shard: 0,
             kind: FaultKind::ShardCrash { down_epochs: 2 },
         }]);
-        let mut sup = Supervisor::new(&plan, 2, 10, true);
+        let mut sup = Supervisor::new(&plan, 2, 10, true, 0);
         let mut router = ClusterRouter::new(&[0, 1], 16, false, 100);
         let req = ServeRequest {
             t_s: 0.1,
@@ -1015,12 +1317,52 @@ mod tests {
     }
 
     #[test]
+    fn warm_standby_promotes_instead_of_cold_restart() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            epoch: 2,
+            shard: 1,
+            kind: FaultKind::ShardCrash { down_epochs: 2 },
+        }]);
+        let mut sup = Supervisor::new(&plan, 2, 20, true, 1);
+        assert_eq!(sup.spare_pool, VecDeque::from(vec![2]));
+        let mut router = ClusterRouter::new(&[0, 1], 16, false, 100);
+        let req = ServeRequest {
+            t_s: 0.2,
+            tenant: TenantClass::Balanced,
+            model: DnnModel::MobileNetV3Large,
+            images: 8,
+        };
+        let gid = sup.assign_gids(1, vec![req])[0].0;
+        let (cmds, _, extras) = sup.directives(2, &mut router);
+        // The crash is absorbed: the standby adopts the shard's slot.
+        assert_eq!(cmds[1], ShardCmd::Adopt);
+        assert_eq!(sup.assignment[1], 2);
+        assert_eq!(sup.demoted, vec![1]);
+        assert!(sup.alive[1], "promoted shard never leaves service");
+        assert!(router.ring.contains(1));
+        assert_eq!(sup.stats.standby_promotions, 1);
+        assert_eq!(sup.stats.failovers, 0, "no cold failover happened");
+        assert_eq!(sup.stats.retries, 1);
+        assert!(
+            extras[1].iter().any(|(g, _)| *g == gid),
+            "in-flight work redelivers to the adopted slot"
+        );
+        // Next barrier: the demoted slot recycles into the spare pool
+        // and the cold Down/Restart tail was unscheduled.
+        let (cmds, _, _) = sup.directives(3, &mut router);
+        assert_eq!(sup.spare_pool, VecDeque::from(vec![1]));
+        assert_eq!(cmds[1], ShardCmd::Run);
+        assert_eq!(sup.stats.restarts, 0);
+        assert_eq!(sup.stats.downtime_epochs, 0);
+    }
+
+    #[test]
     fn mailbox_faults_drop_or_park_the_batch() {
         let plan = FaultPlan::new(vec![
             FaultEvent { epoch: 0, shard: 0, kind: FaultKind::MailboxDrop },
             FaultEvent { epoch: 1, shard: 1, kind: FaultKind::MailboxDelay { epochs: 2 } },
         ]);
-        let mut sup = Supervisor::new(&plan, 2, 10, true);
+        let mut sup = Supervisor::new(&plan, 2, 10, true, 0);
         let req = |t| ServeRequest {
             t_s: t,
             tenant: TenantClass::Energy,

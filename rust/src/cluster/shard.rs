@@ -1,52 +1,55 @@
-//! Shard worker: one simulation engine + scheduler per interposer, driven
-//! epoch-by-epoch from the coordinator in lockstep.
+//! Shard slot: one simulation engine + scheduler per interposer, stepped
+//! epoch-by-epoch from the coordinator in lockstep on the shared
+//! [`WorkPool`](crate::util::pool::WorkPool).
 //!
-//! A shard blocks on its mailbox for an [`EpochPacket`], applies the
-//! supervisor's directive ([`ShardCmd`]) and the arbiter-assigned power
-//! cap, offers the routed batch, advances exactly `epoch_steps` engine
-//! steps, and reports its epoch telemetry. After the final packet it
-//! drains in-flight work (no new arrivals, no barrier — drain is a
-//! deterministic function of shard-local state) and sends its telemetry
-//! hub + final report for the epoch-ordered merge.
+//! A slot receives an [`EpochPacket`], applies the supervisor's
+//! directive ([`ShardCmd`]) and the arbiter-assigned power cap, offers
+//! the routed batch, advances exactly `epoch_steps` engine steps,
+//! optionally surrenders queued backlog to the coordinator's steal quota,
+//! and returns its epoch telemetry. After the final packet the
+//! coordinator calls [`ShardSlot::finish`] to drain in-flight work (no
+//! new arrivals — drain is a deterministic function of shard-local
+//! state) and collect the telemetry hub + final report for the
+//! epoch-ordered merge.
 //!
 //! # Fault model
 //!
-//! The worker thread is the shard's *node agent*: it never dies — only
-//! the engine + scheduler it hosts do. On `Crash` the server is dropped
-//! (queued and running work is lost; the supervisor fails those ids over
-//! to surviving shards); on `Restart` it is rebuilt from the scheduler
+//! The slot is the shard's *node agent*: it never dies — only the engine
+//! + scheduler it hosts do. On `Crash` the server is dropped (queued and
+//! running work is lost; the supervisor fails those ids over to
+//! surviving shards); on `Restart` it is rebuilt from the scheduler
 //! factory and the lightweight checkpoint that survives the crash — the
 //! telemetry hub, the shared replay log, and cluster time (the fresh
 //! engine clock fast-forwards to `epoch · epoch_dt` so it rejoins the
-//! lockstep instead of lagging it). On `Hang` the worker buffers the
+//! lockstep instead of lagging it). On `Hang` the slot buffers the
 //! packet without making progress and, on resume, books the lost epochs
 //! as stall time so completion stamps stay consistent with cluster time.
-//! Every packet — dead, hung, or healthy — is answered with exactly one
-//! [`EpochReport`] (`alive: false` markers for dead/hung epochs), so the
-//! coordinator's barrier always collects `n` reports and never deadlocks,
-//! and the fault schedule perturbs telemetry deterministically.
+//! `Standby` keeps a prebuilt warm engine idle (rebuilding it lazily
+//! after a demotion); `Adopt` is the warm-failover counterpart of
+//! `Restart` — the standby engine takes over a dead shard's position
+//! without a cold rebuild. Every packet — dead, hung, idle, or healthy —
+//! is answered with exactly one [`EpochReport`] (`alive: false` markers
+//! for dead/hung/idle epochs), so the coordinator's barrier always
+//! collects one report per slot, and the fault schedule perturbs
+//! telemetry deterministically.
 
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use crate::arch::Arch;
 use crate::fault::ShardCmd;
 use crate::noi::NoiTopology;
-use crate::sched::policy::NativeDdt;
-use crate::sched::state::{StateEncoder, NUM_CLUSTERS, STATE_DIM};
-use crate::sched::thermos::{Preference, ThermosSched};
-use crate::sched::{BigLittleSched, SimbaSched};
+use crate::sched::thermos::Preference;
 use crate::serve::ingest::NullSource;
 use crate::serve::replay::ReplayWriter;
-use crate::serve::server::{ServeConfig, ServeReport, ServeSched, Server, TenantRouter};
+use crate::serve::server::{ServeConfig, ServeReport, ServeSched, Server};
 use crate::serve::telemetry::{digest64, TelemetryHub};
 use crate::serve::ServeRequest;
 use crate::sim::ProfileCache;
 use crate::thermal::ThermalParams;
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 use crate::util::sync::lock_recover;
-use crate::workload::ModelZoo;
+
+use super::steal::CostModel;
 
 /// Which scheduler each shard instantiates (every shard gets its own
 /// instance — policy state is shard-local, only the power budget and the
@@ -83,12 +86,15 @@ pub struct EpochPacket {
     pub cmd: ShardCmd,
     /// Chiplet trip transitions to apply this epoch: `(chiplet, offline)`.
     pub trips: Vec<(usize, bool)>,
+    /// Steal quota: surrender queued backlog worth up to this many
+    /// estimated seconds at the end of the epoch (0 ⇒ donate nothing).
+    pub steal_cost_s: f64,
 }
 
 impl EpochPacket {
     /// A plain healthy-epoch packet (used by tests and the no-fault path).
     pub fn run(reqs: Vec<(u64, ServeRequest)>, cap_w: f64, last: bool) -> EpochPacket {
-        EpochPacket { reqs, cap_w, last, cmd: ShardCmd::Run, trips: Vec::new() }
+        EpochPacket { reqs, cap_w, last, cmd: ShardCmd::Run, trips: Vec::new(), steal_cost_s: 0.0 }
     }
 }
 
@@ -113,11 +119,14 @@ pub struct EpochReport {
     pub done_ids: Vec<u64>,
     /// Request ids resolved negatively this epoch (rejected/shed).
     pub dropped_ids: Vec<u64>,
+    /// Queued requests surrendered to the steal quota this epoch; the
+    /// coordinator reassigns them at the barrier (keeping their gids).
+    pub stolen: Vec<(u64, ServeRequest)>,
 }
 
 impl EpochReport {
-    /// Marker for an epoch the shard sat out (dead or hung): no progress,
-    /// no thermal reading, cumulative counters only.
+    /// Marker for an epoch the shard sat out (dead, hung, or standby):
+    /// no progress, no thermal reading, cumulative counters only.
     fn marker(shard: usize, epoch: usize, completed: u64) -> EpochReport {
         EpochReport {
             shard,
@@ -132,6 +141,7 @@ impl EpochReport {
             alive: false,
             done_ids: Vec::new(),
             dropped_ids: Vec::new(),
+            stolen: Vec::new(),
         }
     }
 }
@@ -147,8 +157,8 @@ pub struct ShardResult {
     pub dropped_ids: Vec<u64>,
 }
 
-/// Everything a shard worker needs; all owned, so the thread closure is
-/// a plain `move`.
+/// Everything a shard slot needs; all owned, so slots can be built in a
+/// plain loop before the epoch driver starts.
 #[derive(Clone, Debug)]
 pub struct ShardParams {
     pub id: usize,
@@ -164,217 +174,236 @@ pub struct ShardParams {
     pub record_path: Option<String>,
 }
 
-/// Shard thread entry point: construct the architecture locally (the
-/// engine borrows the arch, so it must live on this thread) and hand a
-/// scheduler *factory* to the epoch loop — restarts after a crash rebuild
-/// the scheduler from the same deterministic inputs.
-pub fn run_shard(
+/// One shard's long-lived state between epoch barriers: the (optional,
+/// crash-killable) server, the hang/checkpoint bookkeeping, and the
+/// factory + handles needed to rebuild the engine deterministically.
+///
+/// The coordinator owns `Mutex<ShardSlot>`s and steps them on the shared
+/// [`WorkPool`](crate::util::pool::WorkPool) — one pooled task per slot
+/// per epoch, an exclusive lock per task, so a slot's state is only ever
+/// touched by one thread at a time with the barrier as the hand-off.
+pub(crate) struct ShardSlot<'a, S: ServeSched> {
     params: ShardParams,
     cache: ProfileCache,
-    packet_rx: Receiver<EpochPacket>,
-    report_tx: Sender<EpochReport>,
-    result_tx: Sender<ShardResult>,
-) {
-    let arch = Arch::paper_heterogeneous(params.noi);
-    let arch_ref = &arch;
-    match params.sched.clone() {
-        ShardSchedSpec::Simba => {
-            let factory = move || SimbaSched::new(arch_ref.clone());
-            drive(&params, cache, arch_ref, factory, packet_rx, report_tx, result_tx);
-        }
-        ShardSchedSpec::BigLittle => {
-            let factory = move || BigLittleSched::new(arch_ref.clone());
-            drive(&params, cache, arch_ref, factory, packet_rx, report_tx, result_tx);
-        }
-        ShardSchedSpec::Thermos { theta, fallback } => {
-            let zoo = ModelZoo::new();
-            let encoder = StateEncoder::new(arch_ref, &zoo, params.serve.sim.max_images);
-            let seed = params.serve.sim.seed;
-            let factory = move || {
-                let ddt = match &theta {
-                    Some(t) => NativeDdt::new(STATE_DIM, NUM_CLUSTERS, t.clone()),
-                    None => {
-                        let mut rng = Rng::new(seed);
-                        NativeDdt::init(STATE_DIM, NUM_CLUSTERS, &mut rng)
-                    }
-                };
-                TenantRouter::new(ThermosSched::new(arch_ref.clone(), encoder.clone(), ddt, fallback))
-            };
-            drive(&params, cache, arch_ref, factory, packet_rx, report_tx, result_tx);
-        }
-    }
+    arch: &'a Arch,
+    make: Box<dyn Fn() -> S + Send + 'a>,
+    hub: Arc<Mutex<TelemetryHub>>,
+    replay: Option<Arc<Mutex<ReplayWriter>>>,
+    /// Steal cost oracle, shared with the coordinator (set only when
+    /// stealing is on).
+    cost: Option<Arc<CostModel>>,
+    server: Option<Server<'a, S>>,
+    epoch_dt: f64,
+    epoch: usize,
+    /// Hang state: batches/trips buffered while frozen, and how many
+    /// epochs the freeze has lasted (booked as stall time on resume).
+    paused_reqs: Vec<(u64, ServeRequest)>,
+    paused_trips: Vec<(usize, bool)>,
+    paused_epochs: usize,
+    /// Engine clock at the last healthy barrier (the dead-shard report's
+    /// service duration).
+    checkpoint_s: f64,
 }
 
-fn drive<'a, S: ServeSched, F: Fn() -> S>(
-    params: &ShardParams,
-    cache: ProfileCache,
-    arch: &'a Arch,
-    make_sched: F,
-    packet_rx: Receiver<EpochPacket>,
-    report_tx: Sender<EpochReport>,
-    result_tx: Sender<ShardResult>,
-) {
-    let epoch_dt = params.epoch_steps as f64 * ThermalParams::default().dt_s;
-    let hub = Arc::new(Mutex::new(TelemetryHub::new()));
-    let replay: Option<Arc<Mutex<ReplayWriter>>> = params.record_path.as_ref().and_then(|path| {
-        match ReplayWriter::create(path) {
-            Ok(w) => Some(Arc::new(Mutex::new(w))),
-            Err(e) => {
-                eprintln!("shard {}: replay log {path} failed: {e}", params.id);
-                None
-            }
-        }
-    });
-    let new_server = || -> Server<'a, S> {
-        let mut s = Server::new_with_hub(
+// SAFETY: `Server` is not automatically `Send` only because its optional
+// event callbacks (`on_mapped`/`on_completed`/`on_snapshot`) are
+// `Box<dyn FnMut .. + 'a>` without a `Send` bound — a deliberate choice
+// so single-threaded users (the RL trainers) can capture `&RefCell`
+// state. Cluster slots never install such closures: the servers built
+// here use `Server::new_with_hub` (no snapshot callback — per-shard
+// snapshotting is forced off by the coordinator) and only ever hold
+// `Send` handles (`Arc<Mutex<TelemetryHub>>`, `Arc<Mutex<ReplayWriter>>`,
+// `Arc<CostModel>`, a `Send + 'a` scheduler factory, and plain data).
+// Each slot is additionally wrapped in a `Mutex` by the coordinator, so
+// it is only ever accessed by one pool worker at a time.
+unsafe impl<S: ServeSched + Send> Send for ShardSlot<'_, S> {}
+
+impl<'a, S: ServeSched> ShardSlot<'a, S> {
+    pub(crate) fn new(
+        params: ShardParams,
+        cache: ProfileCache,
+        arch: &'a Arch,
+        make: Box<dyn Fn() -> S + Send + 'a>,
+        cost: Option<Arc<CostModel>>,
+    ) -> ShardSlot<'a, S> {
+        let epoch_dt = params.epoch_steps as f64 * ThermalParams::default().dt_s;
+        let hub = Arc::new(Mutex::new(TelemetryHub::new()));
+        let replay: Option<Arc<Mutex<ReplayWriter>>> =
+            params.record_path.as_ref().and_then(|path| match ReplayWriter::create(path) {
+                Ok(w) => Some(Arc::new(Mutex::new(w))),
+                Err(e) => {
+                    eprintln!("shard {}: replay log {path} failed: {e}", params.id);
+                    None
+                }
+            });
+        let mut slot = ShardSlot {
+            params,
+            cache,
             arch,
-            make_sched(),
+            make,
+            hub,
+            replay,
+            cost,
+            server: None,
+            epoch_dt,
+            epoch: 0,
+            paused_reqs: Vec::new(),
+            paused_trips: Vec::new(),
+            paused_epochs: 0,
+            checkpoint_s: 0.0,
+        };
+        slot.server = Some(slot.new_server());
+        slot
+    }
+
+    fn new_server(&self) -> Server<'a, S> {
+        let mut s = Server::new_with_hub(
+            self.arch,
+            (self.make)(),
             Box::new(NullSource),
-            params.serve.clone(),
-            hub.clone(),
+            self.params.serve.clone(),
+            self.hub.clone(),
         );
-        s.set_profile_cache(cache.clone());
-        if let Some(w) = &replay {
+        s.set_profile_cache(self.cache.clone());
+        if let Some(w) = &self.replay {
             s = s.with_replay(w.clone());
         }
         s
-    };
+    }
 
-    let mut server: Option<Server<'a, S>> = Some(new_server());
-    let mut epoch = 0usize;
-    // Hang state: batches/trips buffered while frozen, and how many epochs
-    // the freeze has lasted (booked as stall time on resume).
-    let mut paused_reqs: Vec<(u64, ServeRequest)> = Vec::new();
-    let mut paused_trips: Vec<(usize, bool)> = Vec::new();
-    let mut paused_epochs = 0usize;
-    // Engine clock at the last healthy barrier (the dead-shard report's
-    // service duration).
-    let mut checkpoint_s = 0.0f64;
+    fn marker(&self) -> EpochReport {
+        EpochReport::marker(self.params.id, self.epoch, lock_recover(&self.hub).totals().4)
+    }
 
-    while let Ok(pkt) = packet_rx.recv() {
-        let last = pkt.last;
-        match pkt.cmd {
+    /// Apply one epoch packet and return exactly one report — the
+    /// barrier contract, dead or alive.
+    pub(crate) fn epoch(&mut self, pkt: EpochPacket) -> EpochReport {
+        let report = match pkt.cmd {
             ShardCmd::Crash => {
                 // Engine + scheduler die; queued and running work is gone
                 // (the supervisor fails those ids over). The hub, replay
                 // log, and checkpoint clock survive in the node agent.
-                server = None;
-                paused_reqs.clear();
-                paused_trips.clear();
-                paused_epochs = 0;
-                let done = lock_recover(&hub).totals().4;
-                if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
-                    break;
-                }
+                self.server = None;
+                self.paused_reqs.clear();
+                self.paused_trips.clear();
+                self.paused_epochs = 0;
+                self.marker()
             }
-            ShardCmd::Down => {
-                let done = lock_recover(&hub).totals().4;
-                if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
-                    break;
+            ShardCmd::Down => self.marker(),
+            ShardCmd::Standby => {
+                // Warm standby: keep a prebuilt engine idle. A slot whose
+                // engine was demoted away (or crashed) re-warms here, so
+                // it is adoptable again from the next barrier on.
+                if self.server.is_none() {
+                    self.server = Some(self.new_server());
                 }
+                self.marker()
             }
             ShardCmd::Hang => {
-                paused_reqs.extend(pkt.reqs);
-                paused_trips.extend(pkt.trips);
-                paused_epochs += 1;
-                let done = lock_recover(&hub).totals().4;
-                if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
-                    break;
-                }
+                self.paused_reqs.extend(pkt.reqs);
+                self.paused_trips.extend(pkt.trips);
+                self.paused_epochs += 1;
+                self.marker()
             }
-            ShardCmd::Run | ShardCmd::Restart => {
-                if pkt.cmd == ShardCmd::Restart || server.is_none() {
-                    let mut s = new_server();
-                    // Rejoin cluster time: resuming at the checkpoint clock
-                    // would lag the lockstep forever.
-                    s.set_clock_s(epoch as f64 * epoch_dt);
-                    server = Some(s);
-                    paused_epochs = 0;
-                }
-                let Some(s) = server.as_mut() else {
-                    // Unreachable (rebuilt above), but the barrier contract
-                    // is one report per packet no matter what.
-                    let done = lock_recover(&hub).totals().4;
-                    if report_tx.send(EpochReport::marker(params.id, epoch, done)).is_err() {
-                        break;
-                    }
-                    epoch += 1;
-                    if last {
-                        break;
-                    }
-                    continue;
-                };
-                if paused_epochs > 0 {
-                    s.stall_for(paused_epochs as f64 * epoch_dt);
-                    paused_epochs = 0;
-                }
-                s.set_power_cap_w(Some(pkt.cap_w));
-                for (c, off) in paused_trips.drain(..).chain(pkt.trips.iter().copied()) {
-                    s.set_chiplet_offline(c % arch.num_chiplets(), off);
-                }
-                let buffered: Vec<(u64, ServeRequest)> = paused_reqs.drain(..).collect();
-                for (id, req) in buffered.into_iter().chain(pkt.reqs.into_iter()) {
-                    s.offer_with_id(id, req);
-                }
-                s.advance(params.epoch_steps);
-                let (done_ids, dropped_ids) = s.take_epoch_done();
-                let report = EpochReport {
-                    shard: params.id,
-                    epoch,
-                    peak_temp_k: s.take_epoch_peak_temp_k(),
-                    power_w: s.power_w(),
-                    completed: s.completed_total(),
-                    queue_depth: s.queue_depth(),
-                    fifo_depth: s.fifo_depth(),
-                    throttled: s.any_throttled(),
-                    cap_gated: s.cap_gated(),
-                    alive: true,
-                    done_ids,
-                    dropped_ids,
-                };
-                checkpoint_s = s.now();
-                if report_tx.send(report).is_err() {
-                    break; // coordinator gone; drain and exit
-                }
-            }
-        }
-        epoch += 1;
-        if last {
-            break;
-        }
+            ShardCmd::Run | ShardCmd::Restart | ShardCmd::Adopt => self.run_epoch(pkt),
+        };
+        self.epoch += 1;
+        report
     }
 
-    // Drain: keep the final cap, no new arrivals, bounded by drain_max_s.
-    // A shard that ends its run hung first catches up its frozen epochs.
-    let (report, done_ids, dropped_ids) = match server {
-        Some(mut s) => {
-            if paused_epochs > 0 {
-                s.stall_for(paused_epochs as f64 * epoch_dt);
+    fn run_epoch(&mut self, pkt: EpochPacket) -> EpochReport {
+        if pkt.cmd == ShardCmd::Restart || self.server.is_none() {
+            let mut s = self.new_server();
+            // Rejoin cluster time: resuming at the checkpoint clock
+            // would lag the lockstep forever.
+            s.set_clock_s(self.epoch as f64 * self.epoch_dt);
+            self.server = Some(s);
+            self.paused_epochs = 0;
+        } else if pkt.cmd == ShardCmd::Adopt {
+            // Warm adoption: the engine was prebuilt on standby — only
+            // its clock needs to join cluster time. This is the whole
+            // point of `--spares`: no cold rebuild on the failover path.
+            if let Some(s) = self.server.as_mut() {
+                s.set_clock_s(self.epoch as f64 * self.epoch_dt);
             }
-            for (id, req) in paused_reqs.drain(..) {
-                s.offer_with_id(id, req);
-            }
-            let deadline = s.now() + params.drain_max_s;
-            while !s.is_drained() && s.now() < deadline - 1e-9 {
-                s.advance(params.epoch_steps.max(1));
-            }
-            let (done, dropped) = s.take_epoch_done();
-            (s.finish(), done, dropped)
+            self.paused_epochs = 0;
         }
-        None => (
-            dead_shard_report(params, &hub, checkpoint_s),
-            Vec::new(),
-            Vec::new(),
-        ),
-    };
-    let hub_snapshot = lock_recover(&hub).clone();
-    let _ = result_tx.send(ShardResult {
-        id: params.id,
-        hub: hub_snapshot,
-        report,
-        done_ids,
-        dropped_ids,
-    });
+        let epoch = self.epoch;
+        let Some(s) = self.server.as_mut() else {
+            // Unreachable (rebuilt above), but the barrier contract is
+            // one report per packet no matter what.
+            return EpochReport::marker(self.params.id, epoch, lock_recover(&self.hub).totals().4);
+        };
+        if self.paused_epochs > 0 {
+            s.stall_for(self.paused_epochs as f64 * self.epoch_dt);
+            self.paused_epochs = 0;
+        }
+        s.set_power_cap_w(Some(pkt.cap_w));
+        for (c, off) in self.paused_trips.drain(..).chain(pkt.trips.iter().copied()) {
+            s.set_chiplet_offline(c % self.arch.num_chiplets(), off);
+        }
+        let buffered: Vec<(u64, ServeRequest)> = self.paused_reqs.drain(..).collect();
+        for (id, req) in buffered.into_iter().chain(pkt.reqs.into_iter()) {
+            s.offer_with_id(id, req);
+        }
+        s.advance(self.params.epoch_steps);
+        // Donate to the steal quota *after* the advance: what migrates is
+        // exactly the backlog this epoch could not serve.
+        let stolen = match (&self.cost, pkt.steal_cost_s > 0.0) {
+            (Some(cm), true) => {
+                let cm = cm.clone();
+                s.surrender_queued(pkt.steal_cost_s, |r| cm.cost(r))
+            }
+            _ => Vec::new(),
+        };
+        let (done_ids, dropped_ids) = s.take_epoch_done();
+        let report = EpochReport {
+            shard: self.params.id,
+            epoch,
+            peak_temp_k: s.take_epoch_peak_temp_k(),
+            power_w: s.power_w(),
+            completed: s.completed_total(),
+            queue_depth: s.queue_depth(),
+            fifo_depth: s.fifo_depth(),
+            throttled: s.any_throttled(),
+            cap_gated: s.cap_gated(),
+            alive: true,
+            done_ids,
+            dropped_ids,
+            stolen,
+        };
+        self.checkpoint_s = s.now();
+        report
+    }
+
+    /// Drain: keep the final cap, no new arrivals, bounded by
+    /// `drain_max_s`. A shard that ends its run hung first catches up
+    /// its frozen epochs.
+    pub(crate) fn finish(&mut self) -> ShardResult {
+        let (report, done_ids, dropped_ids) = match self.server.take() {
+            Some(mut s) => {
+                if self.paused_epochs > 0 {
+                    s.stall_for(self.paused_epochs as f64 * self.epoch_dt);
+                }
+                for (id, req) in self.paused_reqs.drain(..) {
+                    s.offer_with_id(id, req);
+                }
+                let deadline = s.now() + self.params.drain_max_s;
+                while !s.is_drained() && s.now() < deadline - 1e-9 {
+                    s.advance(self.params.epoch_steps.max(1));
+                }
+                let (done, dropped) = s.take_epoch_done();
+                (s.finish(), done, dropped)
+            }
+            None => (
+                dead_shard_report(&self.params, &self.hub, self.checkpoint_s),
+                Vec::new(),
+                Vec::new(),
+            ),
+        };
+        let hub_snapshot = lock_recover(&self.hub).clone();
+        ShardResult { id: self.params.id, hub: hub_snapshot, report, done_ids, dropped_ids }
+    }
 }
 
 /// Final report for a shard that died and was never restarted: admission

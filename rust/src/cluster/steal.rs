@@ -1,0 +1,251 @@
+//! Deterministic work-stealing between shards.
+//!
+//! Consistent-hash routing keeps a model's weights and cached profiles
+//! resident on one shard — and concentrates a *hot* model's entire load
+//! there too. This module rebalances that skew at epoch barriers: the
+//! coordinator estimates each shard's backlog in seconds (queued
+//! requests × a cached canonical [`ExecProfile`] cost), computes a
+//! seeded, order-stable steal schedule from most- to least-loaded
+//! shards, and migrates whole requests (keeping their global ids, so
+//! at-most-once settlement is untouched).
+//!
+//! Everything here is pure data + arithmetic: the schedule is a
+//! function of `(seed, epoch, loads, slack)` alone, independent of
+//! thread interleaving, so `serve --shards N --seed S --steal` is
+//! digest-reproducible run-to-run and across `--threads` widths. The
+//! schedule is also *permutation-stable*: relabeling shard ids permutes
+//! the moves but never changes who-steals-from-whom by load (donors and
+//! recipients are ordered by backlog value, ids only break exact ties) —
+//! pinned by a property test in `util::testkit`.
+//!
+//! [`ExecProfile`]: crate::sim::ExecProfile
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+use crate::arch::Arch;
+use crate::pim::ComputeModel;
+use crate::serve::ServeRequest;
+use crate::sim::{LayerAssignment, Mapping, ProfileCache};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{DnnModel, ModelZoo};
+
+/// Work-stealing knobs; `None` in the cluster config disables the whole
+/// plane (and keeps merged digests byte-identical to non-stealing runs).
+#[derive(Clone, Debug)]
+pub struct StealConfig {
+    /// Seed for the rotation of the recipient scan (the CLI defaults it
+    /// to the run seed; `--steal-seed` overrides).
+    pub seed: u64,
+    /// Imbalance dead-band as a fraction of the mean backlog: shards
+    /// within `mean · (1 ± slack)` are neither donors nor recipients, so
+    /// near-balanced epochs migrate nothing.
+    pub slack: f64,
+}
+
+impl Default for StealConfig {
+    fn default() -> StealConfig {
+        StealConfig { seed: 0, slack: 0.25 }
+    }
+}
+
+/// One planned migration: pour up to `cost_s` seconds of backlog from
+/// shard `from` to shard `to`. Shards surrender whole requests until the
+/// quota is met, so actual migrated cost can undershoot the plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StealMove {
+    pub from: usize,
+    pub to: usize,
+    pub cost_s: f64,
+}
+
+/// Steal counters for the merged report; only emitted (and digested)
+/// when stealing is on.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StealStats {
+    /// Planned donor→recipient moves over the run.
+    pub planned_moves: u64,
+    /// Whole requests actually migrated at barriers.
+    pub migrated_requests: u64,
+    /// Estimated backlog seconds carried by the migrated requests.
+    pub migrated_cost_s: f64,
+    /// Epochs in which at least one request migrated.
+    pub steal_epochs: u64,
+}
+
+impl StealStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("planned_moves", Json::Num(self.planned_moves as f64)),
+            ("migrated_requests", Json::Num(self.migrated_requests as f64)),
+            ("migrated_cost_s", Json::Num(self.migrated_cost_s)),
+            ("steal_epochs", Json::Num(self.steal_epochs as f64)),
+        ])
+    }
+}
+
+/// Per-model backlog cost oracle: seconds-per-image from the *canonical*
+/// execution profile — every layer mapped wholly onto chiplet 0 of the
+/// reference architecture — computed once per model through the shared
+/// [`ProfileCache`]. The absolute number is a relative weight, not a
+/// latency prediction: only backlog *ratios* matter to the schedule, and
+/// the canonical mapping makes the estimate identical on every shard
+/// (and so deterministic regardless of which shard computed it first).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// `(model, estimated seconds per image)` — six entries, linear scan.
+    per_image_s: Vec<(DnnModel, f64)>,
+}
+
+impl CostModel {
+    pub fn new(arch: &Arch, cache: &ProfileCache) -> CostModel {
+        let cm = ComputeModel::default();
+        let zoo = ModelZoo::new();
+        let per_image_s = DnnModel::all()
+            .into_iter()
+            .map(|m| {
+                let dcg = zoo.dcg(m);
+                let mapping = Mapping {
+                    layers: dcg
+                        .layers
+                        .iter()
+                        .map(|l| LayerAssignment { parts: vec![(0, l.weight_bits)] })
+                        .collect(),
+                };
+                let p = cache.get_or_compute(arch, &cm, &dcg, &mapping);
+                (m, p.bottleneck_s.max(1e-12))
+            })
+            .collect();
+        CostModel { per_image_s }
+    }
+
+    /// Estimated backlog seconds for one queued request:
+    /// `images × canonical seconds-per-image`.
+    pub fn cost(&self, r: &ServeRequest) -> f64 {
+        let per = self
+            .per_image_s
+            .iter()
+            .find(|(m, _)| *m == r.model)
+            .map(|&(_, c)| c)
+            .unwrap_or(1e-6);
+        per * r.images.max(1) as f64
+    }
+}
+
+/// Compute the epoch's steal schedule by water-filling: donors (backlog
+/// above `mean · (1 + slack)`) pour their excess over the mean into
+/// recipients (below `mean · (1 − slack)`) up to the mean, donors in
+/// descending and recipients in ascending backlog order. The recipient
+/// scan starts at a seeded rotation — `Rng::new(seed ^ epoch · GOLDEN)`
+/// — so repeated ties do not always favor the same shard, yet the same
+/// `(seed, epoch, loads)` always yields the same schedule.
+pub fn steal_schedule(seed: u64, epoch: u64, loads: &[f64], slack: f64) -> Vec<StealMove> {
+    let n = loads.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    // Sum in value order, not index order: float addition is not
+    // associative, so this is what makes the schedule commute with
+    // shard-id relabeling *bit-exactly* (for distinct loads).
+    let mut sorted = loads.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    if mean <= 0.0 {
+        return Vec::new();
+    }
+    let slack = slack.max(0.0);
+    let hi = mean * (1.0 + slack);
+    let lo = mean * (1.0 - slack);
+    let mut donors: Vec<usize> = (0..n).filter(|&i| loads[i] > hi).collect();
+    let mut recips: Vec<usize> = (0..n).filter(|&i| loads[i] < lo).collect();
+    if donors.is_empty() || recips.is_empty() {
+        return Vec::new();
+    }
+    // Order by backlog value — ids only break exact ties — so the
+    // schedule commutes with shard-id relabeling.
+    donors.sort_by(|&a, &b| loads[b].total_cmp(&loads[a]).then(a.cmp(&b)));
+    recips.sort_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)));
+    let mut rng = Rng::new(seed ^ epoch.wrapping_mul(0x9e3779b97f4a7c15));
+    let mut cursor = rng.below(recips.len());
+    let mut room: Vec<f64> = recips.iter().map(|&i| mean - loads[i]).collect();
+    let mut moves = Vec::new();
+    for &d in &donors {
+        let mut excess = loads[d] - mean;
+        let mut visited = 0;
+        while excess > 1e-9 && visited < recips.len() {
+            let k = cursor % recips.len();
+            if room[k] <= 1e-9 {
+                cursor += 1;
+                visited += 1;
+                continue;
+            }
+            let take = excess.min(room[k]);
+            moves.push(StealMove { from: d, to: recips[k], cost_s: take });
+            excess -= take;
+            room[k] -= take;
+            if room[k] <= 1e-9 {
+                cursor += 1;
+            }
+            visited += 1;
+        }
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed_epoch_loads() {
+        let loads = [9.0, 1.0, 2.0, 8.0, 0.5];
+        let a = steal_schedule(7, 3, &loads, 0.25);
+        let b = steal_schedule(7, 3, &loads, 0.25);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "skewed loads must plan moves");
+    }
+
+    #[test]
+    fn balanced_loads_plan_nothing() {
+        assert!(steal_schedule(1, 0, &[4.0, 4.0, 4.0, 4.0], 0.25).is_empty());
+        // Within the slack dead-band: still nothing.
+        assert!(steal_schedule(1, 0, &[4.0, 4.4, 3.7, 4.1], 0.25).is_empty());
+        // Degenerate shapes.
+        assert!(steal_schedule(1, 0, &[5.0], 0.25).is_empty());
+        assert!(steal_schedule(1, 0, &[0.0, 0.0], 0.25).is_empty());
+    }
+
+    #[test]
+    fn moves_flow_downhill_and_conserve_excess() {
+        let loads = [12.0, 1.0, 3.0, 2.0];
+        let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+        let moves = steal_schedule(42, 5, &loads, 0.25);
+        assert!(!moves.is_empty());
+        let mut poured = 0.0;
+        for m in &moves {
+            assert!(loads[m.from] > mean, "donor {} not above mean", m.from);
+            assert!(loads[m.to] < mean, "recipient {} not below mean", m.to);
+            assert!(m.cost_s > 0.0);
+            poured += m.cost_s;
+        }
+        // A donor never pours more than its excess over the mean.
+        assert!(poured <= loads[0] - mean + 1e-9, "poured {poured}");
+        // And no recipient is filled past the mean.
+        let mut filled = vec![0.0; loads.len()];
+        for m in &moves {
+            filled[m.to] += m.cost_s;
+            assert!(loads[m.to] + filled[m.to] <= mean + 1e-9);
+        }
+    }
+
+    #[test]
+    fn rotation_depends_only_on_seed_epoch_and_count() {
+        // Same count of recipients, wildly different values: the scan
+        // offset matches, so only values decide the pairing.
+        let a = steal_schedule(9, 2, &[10.0, 1.0, 2.0], 0.1);
+        let b = steal_schedule(9, 2, &[20.0, 3.0, 5.0], 0.1);
+        assert_eq!(
+            a.iter().map(|m| (m.from, m.to)).collect::<Vec<_>>(),
+            b.iter().map(|m| (m.from, m.to)).collect::<Vec<_>>(),
+        );
+    }
+}

@@ -2,7 +2,27 @@
 //! print) and CSV export under `results/`.
 
 use crate::sim::SimResult;
+use crate::util::json::Json;
 use std::fmt::Write as _;
+
+/// Schema tag stamped into every `results/BENCH_*.json`; bump when a
+/// bench changes the meaning (not just the set) of its fields.
+pub const BENCH_SCHEMA_VERSION: &str = "thermos-bench/v1";
+
+/// Write a bench result as `results/BENCH_<name>.json`, prefixed with
+/// the schema version and bench name so downstream tooling can reject
+/// files it does not understand.
+pub fn write_bench_json(name: &str, fields: Vec<(&str, Json)>) -> std::io::Result<String> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/BENCH_{name}.json");
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("schema", Json::Str(BENCH_SCHEMA_VERSION.to_string())),
+        ("bench", Json::Str(name.to_string())),
+    ];
+    pairs.extend(fields);
+    std::fs::write(&path, Json::obj(pairs).to_string_pretty())?;
+    Ok(path)
+}
 
 /// A simple aligned table builder.
 pub struct Table {
@@ -103,6 +123,18 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("a "));
         assert!(lines[2].starts_with("xx"));
+    }
+
+    #[test]
+    fn bench_json_is_schema_versioned() {
+        let path = write_bench_json("_schema_selftest", vec![("x", Json::Num(1.0))])
+            .expect("write bench json");
+        let text = std::fs::read_to_string(&path).expect("read bench json back");
+        let j = Json::parse(&text).expect("bench json parses");
+        assert_eq!(j.get("schema").as_str(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(j.get("bench").as_str(), Some("_schema_selftest"));
+        assert_eq!(j.get("x").as_f64(), Some(1.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -242,6 +242,10 @@ pub struct FaultStats {
     pub reports_lost: u64,
     /// Chiplet thermal-trip injections.
     pub chiplet_trips: u64,
+    /// Crashes absorbed by a warm standby: a prebuilt spare engine
+    /// adopted the dead shard's ring position at the barrier, so the
+    /// shard never left the ring and `downtime_epochs` did not grow.
+    pub standby_promotions: u64,
 }
 
 impl FaultStats {
@@ -255,6 +259,7 @@ impl FaultStats {
             ("dropped_requests", Json::Num(self.dropped_requests as f64)),
             ("reports_lost", Json::Num(self.reports_lost as f64)),
             ("chiplet_trips", Json::Num(self.chiplet_trips as f64)),
+            ("standby_promotions", Json::Num(self.standby_promotions as f64)),
         ])
     }
 }
@@ -276,6 +281,14 @@ pub enum ShardCmd {
     Restart,
     /// Buffer this epoch's batch without making progress (hung).
     Hang,
+    /// Idle as a warm standby: keep (or lazily rebuild) a prebuilt
+    /// engine, ready to adopt a crashed shard at a later barrier. Only
+    /// ever sent to physical spare slots, never to logical shards.
+    Standby,
+    /// Adopt a dead shard: the prebuilt standby engine takes over the
+    /// shard's ring position — fast-forward the clock to cluster time,
+    /// then process this epoch normally (no cold rebuild).
+    Adopt,
 }
 
 /// Error type for the cluster serving path — replaces the panics that a

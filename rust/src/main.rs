@@ -5,7 +5,9 @@
 use anyhow::{bail, Context, Result};
 use std::sync::{Arc, Mutex};
 use thermos::arch::Arch;
-use thermos::cluster::{run_cluster, AutoscaleConfig, ClusterConfig, FaultPlan, ShardSchedSpec};
+use thermos::cluster::{
+    run_cluster, AutoscaleConfig, ClusterConfig, FaultPlan, ShardSchedSpec, StealConfig,
+};
 use thermos::noi::NoiTopology;
 #[cfg(feature = "pjrt")]
 use thermos::rl::relmas_trainer::RelmasTrainer;
@@ -101,6 +103,18 @@ serve cluster options (sharded serving; implies the cluster path):
                             shards and fails their work over
   --chaos <seed>            generate a deterministic fault schedule from a
                             chaos seed (mutually exclusive with --faults)
+  --spares <k>              keep k warm-standby engines idle; on a crash a
+                            standby adopts the dead shard's ring position,
+                            checkpoint and in-flight ids at the next
+                            barrier instead of a cold rebuild [0]
+  --steal[=off]             deterministic work-stealing at epoch barriers:
+                            migrate whole queued requests from backlogged
+                            shards to idle ones (backlog = queued requests
+                            x canonical per-model cost estimate)
+  --steal-slack <f>         imbalance dead-band as a fraction of the mean
+                            backlog [0.25]
+  --steal-seed <n>          seed for the steal schedule's recipient
+                            rotation [the run seed]
 ";
 
 fn main() {
@@ -113,7 +127,7 @@ fn main() {
             "record", "mix-jobs", "tenants", "queue-cap", "max-wait", "snapshot-every", "rate-on",
             "rate-off", "on-s", "off-s", "shards", "epoch", "budget", "batch-images",
             "pressure-depth", "drain-max", "autoscale-min", "autoscale-max", "shard-capacity",
-            "faults", "chaos", "threads",
+            "faults", "chaos", "threads", "spares", "steal-slack", "steal-seed",
         ],
     ) {
         Ok(a) => a,
@@ -554,10 +568,25 @@ fn cmd_serve_cluster(args: &cli::Args) -> Result<()> {
         }
         (None, None) => None,
     };
+    let spares = args.parse_usize("spares", 0).map_err(anyhow::Error::msg)?;
+    // `--steal` is a boolean flag; `--steal=off|false|0` disables it so CI
+    // matrices can toggle one token instead of editing the argv shape.
+    let steal_on =
+        args.has("steal") && !matches!(args.get("steal"), Some("off") | Some("false") | Some("0"));
+    let steal = if steal_on {
+        Some(StealConfig {
+            seed: args.parse_u64("steal-seed", seed).map_err(anyhow::Error::msg)?,
+            slack: args.parse_f64("steal-slack", 0.25).map_err(anyhow::Error::msg)?,
+        })
+    } else {
+        None
+    };
     let cfg = ClusterConfig {
         shards,
         epoch_s,
         duration_s,
+        spares,
+        steal,
         drain_max_s: args.parse_f64("drain-max", 30.0).map_err(anyhow::Error::msg)?,
         power_budget_w: (budget > 0.0).then_some(budget),
         coalesce: !args.has("no-coalesce"),

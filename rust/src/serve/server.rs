@@ -344,6 +344,35 @@ impl<'a, S: ServeSched> Server<'a, S> {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Work-stealing donor side: pop admitted-but-undispatched requests
+    /// off the *backs* of the tenant queues — newest first, energy class
+    /// first, so the least latency-sensitive backlog migrates — until
+    /// their estimated cost reaches `quota_cost_s`. Whole requests only;
+    /// each keeps its global id and is re-offered on the recipient shard
+    /// by the coordinator (the hub counts the re-offer like a failover
+    /// retry; completion ids still settle at most once at the barrier).
+    pub fn surrender_queued<C>(&mut self, quota_cost_s: f64, cost: C) -> Vec<(u64, ServeRequest)>
+    where
+        C: Fn(&ServeRequest) -> f64,
+    {
+        let mut out = Vec::new();
+        if quota_cost_s <= 0.0 {
+            return out;
+        }
+        let mut acc = 0.0;
+        for tc in [TenantClass::Energy, TenantClass::Balanced, TenantClass::Exec] {
+            while acc + 1e-12 < quota_cost_s {
+                let Some(p) = self.queues[tc.index()].pop_back() else { break };
+                acc += cost(&p.req);
+                out.push((p.id, p.req));
+            }
+            if acc + 1e-12 >= quota_cost_s {
+                break;
+            }
+        }
+        out
+    }
+
     fn post_step(&mut self) {
         lock_recover(&self.hub).sample_depths(self.service_depth(), self.sim.queue_len());
         for (c, &t) in self.sim.temps().iter().enumerate() {

@@ -9,8 +9,22 @@
 //!     check(cond, "message")
 //! });
 //! ```
+//!
+//! Also hosts the cluster scenario harness shared by the steal/fault
+//! integration tests: [`ClusterScenario`] builds a deterministic cluster
+//! config + traffic source from a handful of knobs (shards, spares,
+//! steal, chaos seed, traffic mix), and [`SkewedSource`] offers a
+//! worst-case single-hot-model stream that consistent-hash routing
+//! concentrates onto one shard — the scenario work-stealing exists to
+//! fix.
 
+use crate::cluster::{
+    run_cluster, ClusterConfig, ClusterReport, FaultPlan, ShardSchedSpec, StealConfig,
+};
+use crate::serve::{PoissonSource, ServeConfig, ServeRequest, TenantClass, TrafficSource};
+use crate::sim::SimConfig;
 use crate::util::rng::Rng;
+use crate::workload::DnnModel;
 
 /// Outcome of one property case.
 pub type PropResult = Result<(), String>;
@@ -65,9 +79,236 @@ pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
     (0..len).map(|_| rng.range_f64(lo, hi)).collect()
 }
 
+/// Adversarial single-model traffic: every request targets one hot model,
+/// so consistent-hash routing sends the entire stream to one shard.
+/// Arrivals are on a fixed grid (`1/rate`), tenants round-robin, images
+/// fixed per request — no randomness at all, so skew experiments isolate
+/// the scheduling policy, not the sampling noise.
+pub struct SkewedSource {
+    model: DnnModel,
+    images: u64,
+    period_s: f64,
+    horizon_s: f64,
+    next_t: f64,
+    idx: usize,
+}
+
+impl SkewedSource {
+    pub fn new(model: DnnModel, rate_jobs_s: f64, horizon_s: f64, images: u64) -> SkewedSource {
+        assert!(rate_jobs_s > 0.0, "skewed source rate must be positive");
+        let period_s = 1.0 / rate_jobs_s;
+        SkewedSource { model, images, period_s, horizon_s, next_t: period_s, idx: 0 }
+    }
+}
+
+impl TrafficSource for SkewedSource {
+    fn name(&self) -> &'static str {
+        "skewed"
+    }
+
+    fn peek(&self) -> Option<f64> {
+        (self.next_t <= self.horizon_s).then_some(self.next_t)
+    }
+
+    fn arrivals_until(&mut self, now: f64) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        while self.next_t <= now && self.next_t <= self.horizon_s {
+            let tenant = TenantClass::ALL[self.idx % TenantClass::COUNT];
+            let req =
+                ServeRequest { t_s: self.next_t, tenant, model: self.model, images: self.images };
+            out.push(req);
+            self.idx += 1;
+            self.next_t += self.period_s;
+        }
+        out
+    }
+}
+
+/// Declarative cluster scenario shared by the steal and fault
+/// integration tests: a handful of knobs expand into a full
+/// [`ClusterConfig`] + traffic source with the same deterministic
+/// defaults everywhere, so "the same scenario with stealing on" is a
+/// one-builder-call diff, not a copy-pasted config block.
+#[derive(Clone, Debug)]
+pub struct ClusterScenario {
+    pub shards: usize,
+    pub seed: u64,
+    pub spares: usize,
+    pub steal: bool,
+    pub steal_slack: f64,
+    pub duration_s: f64,
+    pub epoch_s: f64,
+    pub drain_max_s: f64,
+    pub rate_jobs_s: f64,
+    pub tenant_mix: [f64; 3],
+    pub max_images: u64,
+    pub queue_cap: usize,
+    pub max_wait_s: f64,
+    /// Route *all* traffic at one model via [`SkewedSource`]; `None`
+    /// uses the default Poisson mix.
+    pub hot_model: Option<DnnModel>,
+    pub faults: Option<FaultPlan>,
+    /// Generate a chaos [`FaultPlan`] from this seed (ignored when
+    /// `faults` is set explicitly).
+    pub chaos_seed: Option<u64>,
+    pub threads: Option<usize>,
+    pub record_base: Option<String>,
+}
+
+impl ClusterScenario {
+    pub fn new(shards: usize, seed: u64) -> ClusterScenario {
+        ClusterScenario {
+            shards,
+            seed,
+            spares: 0,
+            steal: false,
+            steal_slack: 0.25,
+            duration_s: 30.0,
+            epoch_s: 1.0,
+            drain_max_s: 20.0,
+            rate_jobs_s: 4.0,
+            tenant_mix: [1.0, 1.0, 1.0],
+            max_images: 500,
+            queue_cap: 32,
+            max_wait_s: 30.0,
+            hot_model: None,
+            faults: None,
+            chaos_seed: None,
+            threads: None,
+            record_base: None,
+        }
+    }
+
+    pub fn with_spares(mut self, k: usize) -> Self {
+        self.spares = k;
+        self
+    }
+
+    pub fn with_steal(mut self, on: bool) -> Self {
+        self.steal = on;
+        self
+    }
+
+    pub fn with_steal_slack(mut self, slack: f64) -> Self {
+        self.steal_slack = slack;
+        self
+    }
+
+    pub fn with_duration(mut self, duration_s: f64) -> Self {
+        self.duration_s = duration_s;
+        self
+    }
+
+    pub fn with_drain_max(mut self, drain_max_s: f64) -> Self {
+        self.drain_max_s = drain_max_s;
+        self
+    }
+
+    pub fn with_rate(mut self, rate_jobs_s: f64) -> Self {
+        self.rate_jobs_s = rate_jobs_s;
+        self
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    pub fn with_max_wait(mut self, max_wait_s: f64) -> Self {
+        self.max_wait_s = max_wait_s;
+        self
+    }
+
+    pub fn with_hot_model(mut self, model: DnnModel) -> Self {
+        self.hot_model = Some(model);
+        self
+    }
+
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    pub fn with_chaos(mut self, chaos_seed: u64) -> Self {
+        self.chaos_seed = Some(chaos_seed);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    pub fn with_record_base(mut self, base: &str) -> Self {
+        self.record_base = Some(base.to_string());
+        self
+    }
+
+    /// Epochs the coordinator will run (mirrors the cluster's rounding).
+    pub fn total_epochs(&self) -> usize {
+        ((self.duration_s / self.epoch_s).ceil() as usize).max(1)
+    }
+
+    /// Expand into a full [`ClusterConfig`] with the shared defaults
+    /// (Simba shards — deterministic and fast — with per-shard
+    /// snapshotting off and pressure shedding at `queue_cap + 16`).
+    pub fn config(&self) -> ClusterConfig {
+        let faults = self.faults.clone().or_else(|| {
+            self.chaos_seed.map(|c| FaultPlan::chaos(c, self.shards, self.total_epochs()))
+        });
+        ClusterConfig {
+            shards: self.shards,
+            epoch_s: self.epoch_s,
+            duration_s: self.duration_s,
+            drain_max_s: self.drain_max_s,
+            serve: ServeConfig {
+                duration_s: self.duration_s,
+                tenant_queue_cap: self.queue_cap,
+                max_wait_s: self.max_wait_s,
+                snapshot_every_s: 0.0,
+                pressure_depth: self.queue_cap + 16,
+                sim: SimConfig {
+                    warmup_s: 0.0,
+                    max_images: self.max_images,
+                    seed: self.seed,
+                    ..SimConfig::default()
+                },
+            },
+            sched: ShardSchedSpec::Simba,
+            record_base: self.record_base.clone(),
+            faults,
+            spares: self.spares,
+            steal: self.steal.then(|| StealConfig { seed: self.seed, slack: self.steal_slack }),
+            threads: self.threads,
+            ..ClusterConfig::default()
+        }
+    }
+
+    /// The scenario's traffic source: [`SkewedSource`] when a hot model
+    /// is set, the default Poisson mix otherwise.
+    pub fn source(&self) -> Box<dyn TrafficSource> {
+        match self.hot_model {
+            Some(m) => Box::new(SkewedSource::new(m, self.rate_jobs_s, self.duration_s, 24)),
+            None => Box::new(PoissonSource::new(
+                self.rate_jobs_s,
+                60,
+                self.max_images,
+                self.tenant_mix,
+                self.seed,
+            )),
+        }
+    }
+
+    /// Run the scenario to completion.
+    pub fn run(&self) -> ClusterReport {
+        run_cluster(self.config(), self.source()).expect("cluster scenario run")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{steal_schedule, StealMove};
 
     #[test]
     fn forall_passes_valid_property() {
@@ -90,5 +331,76 @@ mod tests {
     fn check_close_tolerates_scale() {
         assert!(check_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
         assert!(check_close(1.0, 2.0, 1e-6, "off").is_err());
+    }
+
+    #[test]
+    fn scenario_expands_to_the_shared_defaults() {
+        let base = ClusterScenario::new(4, 42);
+        let cfg = base.config();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.serve.sim.seed, 42);
+        assert!(cfg.steal.is_none() && cfg.faults.is_none());
+        assert_eq!(cfg.spares, 0);
+        assert_eq!(cfg.serve.pressure_depth, cfg.serve.tenant_queue_cap + 16);
+        // One-call diffs flip exactly one plane on.
+        let cfg = base.clone().with_steal(true).config();
+        let sc = cfg.steal.expect("steal config");
+        assert_eq!(sc.seed, 42);
+        assert!((sc.slack - 0.25).abs() < 1e-12);
+        let cfg = base.clone().with_chaos(7).config();
+        assert!(cfg.faults.is_some(), "chaos seed expands to a fault plan");
+        let cfg = base.clone().with_spares(2).with_threads(3).config();
+        assert_eq!(cfg.spares, 2);
+        assert_eq!(cfg.threads, Some(3));
+    }
+
+    #[test]
+    fn skewed_source_is_a_fixed_grid_of_one_model() {
+        let mut src = SkewedSource::new(DnnModel::ResNet50, 2.0, 3.0, 24);
+        let first = src.arrivals_until(1.0);
+        assert_eq!(first.len(), 2, "rate 2/s for 1 s");
+        assert!(first.iter().all(|r| r.model == DnnModel::ResNet50));
+        assert_eq!(first[0].t_s, 0.5);
+        // The horizon caps the stream even for a later `now`.
+        let rest = src.arrivals_until(100.0);
+        assert_eq!(rest.len(), 4, "grid stops at the 3 s horizon");
+        assert!(src.peek().is_none());
+        // Tenants round-robin deterministically.
+        assert_ne!(first[0].tenant, first[1].tenant);
+    }
+
+    #[test]
+    fn steal_schedule_is_permutation_stable_under_relabeling() {
+        forall(60, |rng| {
+            let n = rng.range_usize(2, 8);
+            let loads = vec_f64(rng, n, 0.0, 100.0);
+            // Exact duplicates make the value ordering id-dependent;
+            // skip those (measure-zero) draws.
+            for i in 0..n {
+                for j in i + 1..n {
+                    if loads[i] == loads[j] {
+                        return Ok(());
+                    }
+                }
+            }
+            let seed = rng.next_u64();
+            let epoch = rng.range_usize(0, 50) as u64;
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let mut relabeled = vec![0.0; n];
+            for i in 0..n {
+                relabeled[perm[i]] = loads[i];
+            }
+            let a = steal_schedule(seed, epoch, &loads, 0.25);
+            let b = steal_schedule(seed, epoch, &relabeled, 0.25);
+            let mapped: Vec<StealMove> = a
+                .iter()
+                .map(|m| StealMove { from: perm[m.from], to: perm[m.to], cost_s: m.cost_s })
+                .collect();
+            check(
+                mapped == b,
+                format!("relabeling changed the schedule: {mapped:?} vs {b:?} (perm {perm:?})"),
+            )
+        });
     }
 }

@@ -10,6 +10,7 @@ use thermos::fault::{FaultEvent, FaultKind, FaultPlan};
 use thermos::serve::{PoissonSource, ServeConfig};
 use thermos::sim::SimConfig;
 use thermos::util::json::Json;
+use thermos::util::testkit::ClusterScenario;
 
 const MAX_IMAGES: u64 = 400;
 
@@ -122,6 +123,74 @@ fn shard_crash_fails_over_with_at_most_once_completion() {
             done_lines += 1;
             let id = ev.get("id").as_f64().expect("done id") as u64;
             assert!(seen.insert(id), "request id {id} completed twice (shard {s})");
+        }
+    }
+    assert_eq!(
+        done_lines,
+        num(j, "completed") as u64,
+        "replay `done` events disagree with the merged completion count"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn warm_standby_cuts_downtime_and_keeps_at_most_once() {
+    let shards = 2;
+    let crash = FaultPlan::new(vec![FaultEvent {
+        epoch: 5,
+        shard: 1,
+        kind: FaultKind::ShardCrash { down_epochs: 3 },
+    }]);
+    // Cold baseline: no spares, the supervisor restarts the shard after
+    // its down window.
+    let cold_sc = ClusterScenario::new(shards, 9).with_duration(20.0).with_faults(crash.clone());
+    let cold = cold_sc.run();
+    let cold_down = fault_stat(&cold.json, "downtime_epochs");
+    assert!(cold_down >= 3.0, "cold restart should be down >= 3 epochs, got {cold_down}");
+    assert_eq!(fault_stat(&cold.json, "restarts"), 1.0);
+
+    // Warm standby: same plan, one prebuilt spare. The standby adopts the
+    // dead shard's ring position at the crash barrier, so the fleet never
+    // loses an epoch of capacity.
+    let base = std::env::temp_dir().join("thermos_fault_standby_test");
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).expect("temp dir");
+    let record_base = base.join("replay").to_string_lossy().into_owned();
+    let warm = ClusterScenario::new(shards, 9)
+        .with_duration(20.0)
+        .with_faults(crash)
+        .with_spares(1)
+        .with_record_base(&record_base)
+        .run();
+    let j = &warm.json;
+    let warm_down = fault_stat(j, "downtime_epochs");
+    assert!(
+        warm_down < cold_down,
+        "standby adoption must cut downtime: warm {warm_down} vs cold {cold_down} epochs"
+    );
+    assert_eq!(num(j.get("spares"), "standby_promotions"), 1.0, "spare was not promoted");
+    assert_eq!(fault_stat(j, "failovers"), 0.0, "promotion must not count as a cold failover");
+    assert_eq!(fault_stat(j, "restarts"), 0.0, "promotion must not count as a restart");
+    assert_eq!(fault_stat(j, "faults_injected"), 1.0);
+    assert!(num(j, "completed") > 0.0);
+
+    // At-most-once survives adoption: completion ids are globally unique
+    // across every physical slot's replay log (shards + the spare), and
+    // the done count matches the merged total.
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut done_lines = 0u64;
+    for s in 0..shards + 1 {
+        let path = format!("{record_base}.shard{s}.jsonl");
+        // An idle spare may never open its log; missing is fine.
+        let text = std::fs::read_to_string(&path).unwrap_or_default();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let ev = Json::parse(line).expect("replay line parses");
+            if ev.get("ev").as_str() != Some("done") {
+                continue;
+            }
+            done_lines += 1;
+            let id = ev.get("id").as_f64().expect("done id") as u64;
+            assert!(seen.insert(id), "request id {id} completed twice (slot {s})");
         }
     }
     assert_eq!(

@@ -1,0 +1,141 @@
+//! Integration: deterministic work-stealing between shards — digest
+//! reproducibility with stealing on, thread-width invariance, strict
+//! drain improvement on a skewed single-model mix, and byte-compat of
+//! steal-off runs against the checked-in golden digest.
+
+use thermos::cluster::{run_cluster, ClusterConfig, ShardSchedSpec};
+use thermos::serve::{PoissonSource, ServeConfig};
+use thermos::sim::SimConfig;
+use thermos::util::json::Json;
+use thermos::util::testkit::ClusterScenario;
+use thermos::workload::DnnModel;
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).as_f64().unwrap_or(0.0)
+}
+
+#[test]
+fn same_seed_steal_runs_reproduce_digest() {
+    for shards in [2usize, 4, 8] {
+        let sc = ClusterScenario::new(shards, 42).with_steal(true).with_duration(12.0);
+        let a = sc.run();
+        let b = sc.run();
+        assert_eq!(
+            a.json.to_string_compact(),
+            b.json.to_string_compact(),
+            "same-seed steal runs diverged at {shards} shards"
+        );
+        assert_eq!(a.digest, b.digest, "digest diverged at {shards} shards");
+        // The steal plane is on, so its counters must be in the report
+        // (and therefore under the digest).
+        let steal = a.json.get("steal");
+        assert!(!matches!(steal, Json::Null), "steal run missing `steal` key");
+        assert!(num(steal, "migrated_requests") >= 0.0);
+        assert!(num(&a.json, "completed") > 0.0, "steal run completed no jobs");
+    }
+}
+
+#[test]
+fn steal_digest_is_invariant_across_thread_widths() {
+    let narrow = ClusterScenario::new(4, 7).with_steal(true).with_duration(15.0).with_threads(1);
+    let wide = ClusterScenario::new(4, 7).with_steal(true).with_duration(15.0).with_threads(4);
+    let a = narrow.run();
+    let b = wide.run();
+    assert_eq!(a.digest, b.digest, "--threads 1 vs 4 changed the steal digest");
+    assert_eq!(a.json.to_string_compact(), b.json.to_string_compact());
+}
+
+#[test]
+fn stealing_drains_a_skewed_mix_strictly_sooner() {
+    // Every request is the same model, so consistent-hash routing piles
+    // the whole stream onto one shard; the other three idle. Shedding is
+    // off (max_wait 0) and the drain bound generous, so the merged
+    // `duration_s` directly measures how late the fleet finished.
+    let base = ClusterScenario::new(4, 11)
+        .with_hot_model(DnnModel::ResNet50)
+        .with_rate(12.0)
+        .with_duration(20.0)
+        .with_queue_cap(256)
+        .with_max_wait(0.0)
+        .with_drain_max(120.0);
+    let off = base.clone().run();
+    let on = base.with_steal(true).run();
+
+    let late_off = num(&off.json, "duration_s") - 20.0;
+    let late_on = num(&on.json, "duration_s") - 20.0;
+    assert!(late_off > 0.0, "skewed mix did not overrun the horizon (late {late_off:.2}s)");
+    assert!(
+        late_on < late_off,
+        "stealing must finish strictly sooner: on {late_on:.2}s vs off {late_off:.2}s late"
+    );
+    // And it actually migrated work to get there.
+    assert!(num(on.json.get("steal"), "migrated_requests") > 0.0, "no requests migrated");
+    assert!(num(on.json.get("steal"), "steal_epochs") > 0.0);
+}
+
+#[test]
+fn scenario_expansion_matches_a_hand_built_config() {
+    // `ClusterScenario::new(4, 42)` documents itself as the canonical
+    // cluster config; pin that equivalence so the golden digest below
+    // speaks for hand-built configs too.
+    let cfg = ClusterConfig {
+        shards: 4,
+        duration_s: 30.0,
+        drain_max_s: 20.0,
+        serve: ServeConfig {
+            duration_s: 30.0,
+            tenant_queue_cap: 32,
+            max_wait_s: 30.0,
+            snapshot_every_s: 0.0,
+            pressure_depth: 48,
+            sim: SimConfig { warmup_s: 0.0, max_images: 500, seed: 42, ..SimConfig::default() },
+        },
+        sched: ShardSchedSpec::Simba,
+        ..ClusterConfig::default()
+    };
+    let source = Box::new(PoissonSource::new(4.0, 60, 500, [1.0, 1.0, 1.0], 42));
+    let hand = run_cluster(cfg, source).expect("hand-built cluster run");
+    let scenario = ClusterScenario::new(4, 42).run();
+    assert_eq!(hand.digest, scenario.digest, "scenario expansion drifted from the raw config");
+    assert_eq!(hand.json.to_string_compact(), scenario.json.to_string_compact());
+}
+
+#[test]
+fn steal_off_matches_the_golden_digest() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/cluster_steal_off.digest");
+    let digest = ClusterScenario::new(4, 42).run().digest;
+    let pinned = std::fs::read_to_string(path).expect("read golden digest file");
+    let pinned = pinned.trim();
+    if pinned.is_empty() || pinned == "UNPINNED" {
+        // First run on this toolchain: pin the digest (see golden/README.md).
+        std::fs::write(path, format!("{digest}\n")).expect("pin golden digest");
+        return;
+    }
+    assert_eq!(
+        digest,
+        pinned,
+        "steal-off cluster digest moved — steal/standby must be digest-gated when off"
+    );
+}
+
+#[test]
+fn steal_and_spares_report_keys_are_gated() {
+    // Off by default: no steal/spares/faults keys (digest stability).
+    let plain = ClusterScenario::new(2, 9).with_duration(10.0).run();
+    for key in ["steal", "spares", "faults"] {
+        assert!(
+            matches!(plain.json.get(key), Json::Null),
+            "plain run leaked a `{key}` key into the merged report"
+        );
+    }
+    // Spares on: the `spares` block appears, idle spares stay idle when
+    // nothing crashes, and the digest differs from the plain run only
+    // because the block exists.
+    let spared = ClusterScenario::new(2, 9).with_duration(10.0).with_spares(1).run();
+    let sp = spared.json.get("spares");
+    assert!(!matches!(sp, Json::Null), "spares run missing `spares` key");
+    assert_eq!(num(sp, "configured"), 1.0);
+    assert_eq!(num(sp, "standby_promotions"), 0.0, "fault-free run promoted a standby");
+    assert_eq!(num(sp, "idle_final"), 1.0);
+    assert_eq!(num(&spared.json, "completed"), num(&plain.json, "completed"));
+}
